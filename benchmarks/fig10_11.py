@@ -1,0 +1,169 @@
+"""Fig. 10 + Fig. 11: normalized complexity (compute + memory) and DRAM
+access across DS methods, at matched quality and across sequence lengths.
+
+All methods run on the SAME real attention distributions (bench LM) and
+are normalized to the dense INT12 baseline.  Quality matching follows the
+paper's protocol: each method's selection keeps ≥ `mass_target` of the
+true softmax mass (≈ the paper's "+0.1 PPL" budget); thresholds/k are the
+loosest settings that reach it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import extract_qkv, topk_mass_recall, train_bench_lm
+from repro.core import stats as stats_lib
+from repro.core.baselines import (
+    sanger_attention, sofa_attention, tokenpicker_attention,
+)
+from repro.core.besf import BitStopperConfig, besf_attention
+
+
+def _true_probs(q, k):
+    d = q.shape[-1]
+    return np.asarray(jax.nn.softmax(
+        jnp.asarray(q @ k.T / d ** 0.5), axis=-1))
+
+
+def _tune(fn, quality_check, candidates):
+    """Loosest candidate meeting the quality target."""
+    for c in candidates:                 # ordered aggressive -> conservative
+        res = fn(c)
+        if quality_check(res):
+            return c, res
+    return candidates[-1], fn(candidates[-1])
+
+
+def run_methods(q, k, v, err_target: float = 0.02):
+    """One [S,d] problem → complexity per method at matched quality.
+
+    Quality = relative L2 error of the attention OUTPUT vs exact dense
+    attention (the end-effect the paper's "+0.1 PPL" budget measures;
+    captured-mass alone over-penalizes dropping a flat negligible tail).
+    """
+    Sq, d = q.shape
+    Sk, dv = v.shape
+    probs = _true_probs(q, k)
+    dense_out = probs @ np.asarray(v, np.float64)
+
+    def rel_err(o):
+        o = np.asarray(o, np.float64)
+        return float(np.linalg.norm(o - dense_out)
+                     / (np.linalg.norm(dense_out) + 1e-12))
+
+    qj, kj, vj = jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+
+    out = {}
+    dense = stats_lib.dense_complexity(Sq, Sk, d, dv)
+    out["dense"] = {"complexity": dense, "kept": 1.0, "quality": 1.0,
+                    "rel_err": 0.0, "stats": None}
+
+    # BitStopper (alpha from aggressive to conservative)
+    def bs(alpha):
+        return besf_attention(qj, kj, vj, cfg=BitStopperConfig(alpha=alpha))
+    alpha, res = _tune(
+        bs, lambda r: rel_err(r.out) <= err_target,
+        [0.2, 0.4, 0.6, 0.8, 1.0])
+    out["bitstopper"] = {
+        "complexity": stats_lib.besf_complexity(
+            np.asarray(res.stats.planes_fetched),
+            np.asarray(res.stats.survivors), d, dv, mode="per_pair"),
+        "kept": float(np.asarray(res.stats.survivors).mean()),
+        "quality": topk_mass_recall(probs, np.asarray(res.stats.survivors)),
+        "rel_err": rel_err(res.out),
+        "param": alpha,
+        "stats": {"planes_fetched": np.asarray(res.stats.planes_fetched),
+                  "survivors": np.asarray(res.stats.survivors)},
+    }
+
+    # Sanger-style (static post-softmax threshold, 4-bit predictor)
+    def sg(thr):
+        return sanger_attention(qj, kj, vj, threshold=thr)
+    thr, (o, info) = _tune(
+        sg, lambda r: rel_err(r[0]) <= err_target,
+        [3e-3, 1e-3, 3e-4, 1e-4, 3e-5])
+    out["sanger"] = {
+        "complexity": stats_lib.predictor_complexity(
+            Sq, Sk, d, dv, np.asarray(info["kept"]), pred_bits=4,
+            mode="per_pair"),
+        "kept": float(np.asarray(info["kept"]).mean()),
+        "quality": topk_mass_recall(probs, np.asarray(info["kept"])),
+        "rel_err": rel_err(o),
+        "param": thr,
+        "stats": {"kept": np.asarray(info["kept"])},
+    }
+
+    # SOFA-style (log-domain predictor + top-k)
+    def sf(kr):
+        return sofa_attention(qj, kj, vj, k_ratio=kr)
+    kr, (o, info) = _tune(
+        sf, lambda r: rel_err(r[0]) <= err_target,
+        [0.0625, 0.125, 0.25, 0.5, 0.75])
+    out["sofa"] = {
+        "complexity": stats_lib.predictor_complexity(
+            Sq, Sk, d, dv, np.asarray(info["kept"]), pred_bits=4,
+            mode="per_pair"),
+        "kept": float(np.asarray(info["kept"]).mean()),
+        "quality": topk_mass_recall(probs, np.asarray(info["kept"])),
+        "rel_err": rel_err(o),
+        "param": kr,
+        "stats": {"kept": np.asarray(info["kept"])},
+    }
+
+    # TokenPicker-style (4-bit progressive chunks, post-exp rule)
+    def tp(pt):
+        return tokenpicker_attention(qj, kj, vj, prob_threshold=pt)
+    pt, (o, info) = _tune(
+        tp, lambda r: rel_err(r[0]) <= err_target,
+        [3e-3, 1e-3, 3e-4, 1e-4, 3e-5])
+    out["tokenpicker"] = {
+        "complexity": stats_lib.chunk_progressive_complexity(
+            np.asarray(info["chunks_fetched"]), np.asarray(info["kept"]),
+            d, dv, mode="per_pair"),
+        "kept": float(np.asarray(info["kept"]).mean()),
+        "quality": topk_mass_recall(probs, np.asarray(info["kept"])),
+        "rel_err": rel_err(o),
+        "param": pt,
+        "stats": {"kept": np.asarray(info["kept"]),
+                  "chunks_fetched": np.asarray(info["chunks_fetched"])},
+    }
+    return out
+
+
+def _sources(params, cfg, S):
+    """Two distribution sources: the trained LM (mild) and the
+    LLM-calibrated synthetic (the paper's spiky OPT/Llama regime)."""
+    from benchmarks.common import llm_like_qkv
+    # Decode-shaped cells (the paper's generative-inference setting):
+    # the LAST 8 positions act as 8 consecutive decode queries against the
+    # full K/V context.
+    q, k, v = extract_qkv(params, cfg, batch=1, seq=S, layer=2)
+    yield "lm", (np.asarray(q[0][-8:]), np.asarray(k[0]), np.asarray(v[0]))
+    q, k, v = llm_like_qkv(S, S, Sq=8)
+    yield "llm_like", (np.asarray(q), np.asarray(k), np.asarray(v))
+
+
+def run(seq_lens=(256, 512, 1024), err_target: float = 0.02):
+    params, cfg = train_bench_lm()
+    rows = []
+    for S in seq_lens:
+        for source, (q, k, v) in _sources(params, cfg, S):
+            methods = run_methods(q, k, v, err_target)
+            dense = methods["dense"]["complexity"]
+            for name, m in methods.items():
+                c = m["complexity"]
+                norm = c.normalized_to(dense)
+                rows.append({
+                    "seq_len": S, "source": source, "method": name,
+                    "norm_compute": norm["compute"],
+                    "norm_mem": norm["mem"],
+                    "dram_bytes": c.total_bytes,
+                    "kept_frac": m["kept"],
+                    "quality": m["quality"],
+                    "rel_err": m["rel_err"],
+                    "param": m.get("param", ""),
+                })
+    return rows

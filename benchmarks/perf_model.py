@@ -1,0 +1,180 @@
+"""Analytical accelerator cost/energy model (the paper's cycle simulator,
+reduced to closed form).
+
+The paper's hardware constants (Table I + Section V-A):
+  * 28 nm, 1 GHz; QK-PU = 32 bit-serial PE lanes, each consuming 64 bits of
+    a Key vector per cycle (12-bit Q × 1-bit K plane ANDer tree).
+  * V-PU = 64-way INT12 MAC array (64 MACs/cycle) + LUT softmax.
+  * HBM2: 8 ch × 32 GB/s = 256 GB/s.
+  * Energy/op at 28 nm (standard CACTI/Horowitz-style constants): DRAM
+    ~20 pJ/byte, SRAM ~1 pJ/byte, INT12 MAC ~0.9 pJ, INT12×1b ANDer-tree
+    term ~0.08 pJ, predictor INT4 MAC ~0.12 pJ.
+
+Given measured sparsity traces (planes fetched per pair, survivor masks —
+from core/besf.py stats or the serving engine) the model produces cycle
+counts and energy for BitStopper and each baseline on identical footing;
+this reproduces the *relative* numbers of Fig. 12/13b (speedup and energy
+ratios), which is what the paper's claims are stated in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HWConfig:
+    freq_hz: float = 1e9
+    pe_lanes: int = 32
+    lane_bits_per_cycle: int = 64       # K bits consumed per lane per cycle
+    vpu_macs: int = 64
+    hbm_gbps: float = 256.0
+    # energy constants (pJ)
+    e_dram_byte: float = 20.0
+    e_sram_byte: float = 1.0
+    e_mac12: float = 0.9
+    e_bitmac: float = 0.08              # INT12 x 1-bit
+    e_mac4: float = 0.12                # 4-bit predictor MAC
+    e_mac4x12: float = 0.35             # 12-bit x 4-bit chunk MAC
+
+
+@dataclasses.dataclass
+class CostReport:
+    cycles_compute: float
+    cycles_memory: float
+    dram_bytes: float
+    energy_pj: float
+    util: float = 0.0                   # compute-unit utilization
+
+    @property
+    def cycles(self) -> float:
+        """Total cycles under perfect overlap (max) — BAP's ideal."""
+        return max(self.cycles_compute, self.cycles_memory)
+
+    @property
+    def cycles_serial(self) -> float:
+        """No overlap (sum) — the no-BAP lower bound on utilization."""
+        return self.cycles_compute + self.cycles_memory
+
+
+def _mem_cycles(bytes_, hw: HWConfig) -> float:
+    return bytes_ / hw.hbm_gbps * (hw.freq_hz / 1e9)
+
+
+def dense_cost(Sq, Sk, d, dv, hw: HWConfig = HWConfig(), bits=12,
+               mode: str = "per_pair") -> CostReport:
+    """Dense INT12 attention on the BitStopper substrate (paper 'Baseline')."""
+    qk_macs = Sq * Sk * d
+    sv_macs = Sq * Sk * dv
+    # QK on the bit-serial lanes (12 planes, no skipping), SV on the V-PU.
+    qk_cycles = Sq * Sk * d * bits / (hw.pe_lanes * hw.lane_bits_per_cycle)
+    sv_cycles = sv_macs / hw.vpu_macs
+    k_bytes = Sk * d * bits / 8
+    v_bytes = Sk * dv * bits / 8
+    passes = Sq if mode == "per_pair" else 1.0   # decode streams K per step
+    dram = (k_bytes + v_bytes) * passes
+    energy = (dram * hw.e_dram_byte + qk_macs * bits * hw.e_bitmac
+              + sv_macs * hw.e_mac12 + (k_bytes + v_bytes) * hw.e_sram_byte)
+    return CostReport(qk_cycles + sv_cycles, _mem_cycles(dram, hw), dram, energy)
+
+
+def bitstopper_cost(planes_fetched: np.ndarray, survivors: np.ndarray,
+                    d: int, dv: int, hw: HWConfig = HWConfig(),
+                    bits: int = 12, bap: bool = True,
+                    mode: str = "per_pair") -> CostReport:
+    """From measured per-pair plane counts + survivor mask.
+
+    mode="per_pair" is the paper's generative-decode setting: every decode
+    step (query) streams its own K planes from DRAM.  mode="shared" models
+    a prefill pass with perfect on-chip K reuse across queries."""
+    pf = np.asarray(planes_fetched, np.float64)
+    sv = np.asarray(survivors, bool)
+    plane_rows = pf.sum()                      # (pair, plane) events
+    qk_cycles = plane_rows * d / (hw.pe_lanes * hw.lane_bits_per_cycle)
+    sv_macs = sv.sum() * dv
+    sv_cycles = sv_macs / hw.vpu_macs
+    if mode == "shared":
+        max_r = pf.max(axis=tuple(range(pf.ndim - 1))) if pf.ndim > 1 else pf
+        k_bytes = max_r.sum() * d / 8
+        v_rows = (sv.any(axis=tuple(range(sv.ndim - 1))) if sv.ndim > 1
+                  else sv)
+        v_bytes = v_rows.sum() * dv * bits / 8
+    else:
+        k_bytes = plane_rows * d / 8
+        v_bytes = sv.sum() * dv * bits / 8
+    dram = k_bytes + v_bytes
+    energy = (dram * hw.e_dram_byte + plane_rows * d * hw.e_bitmac
+              + sv_macs * hw.e_mac12 + dram * hw.e_sram_byte)
+    rep = CostReport(qk_cycles + sv_cycles, _mem_cycles(dram, hw), dram, energy)
+    if not bap:
+        # Without BAP the exposed DRAM latency serializes: utilization is
+        # compute/(compute+memory) (paper Fig. 13b: 48% -> 83%).
+        rep = CostReport(rep.cycles_serial, 0.0, dram, energy)
+    return rep
+
+
+def predictor_cost(kept: np.ndarray, Sq, Sk, d, dv, pred_bits,
+                   hw: HWConfig = HWConfig(), bits=12,
+                   log_domain: bool = False,
+                   mode: str = "per_pair") -> CostReport:
+    """Two-stage DS accelerators (Sanger 4-bit predictor / SOFA log-domain).
+
+    The predictor must fetch and process the FULL K at pred_bits; the
+    executor re-fetches survivors at 12-bit — the decoupling the paper
+    attacks.
+    """
+    kept_arr = np.asarray(kept, bool)
+    pred_macs = Sq * Sk * d
+    e_pred = hw.e_mac4 * (0.5 if log_domain else 1.0)   # shifts are cheaper
+    pred_cycles = pred_macs / (hw.pe_lanes * hw.lane_bits_per_cycle / pred_bits)
+    exec_pairs = kept_arr.sum()
+    exec_cycles = (exec_pairs * d * bits /
+                   (hw.pe_lanes * hw.lane_bits_per_cycle))
+    sv_macs = exec_pairs * dv
+    sv_cycles = sv_macs / hw.vpu_macs
+    if mode == "shared":
+        k_pred_bytes = Sk * d * pred_bits / 8
+        kept_cols = kept_arr.any(axis=tuple(range(kept_arr.ndim - 1)))
+        k_exec_bytes = kept_cols.sum() * d * bits / 8
+        v_bytes = kept_cols.sum() * dv * bits / 8
+    else:
+        # decode: EVERY step's predictor re-reads the full K at pred_bits
+        k_pred_bytes = Sq * Sk * d * pred_bits / 8
+        k_exec_bytes = kept_arr.sum() * d * bits / 8
+        v_bytes = kept_arr.sum() * dv * bits / 8
+    dram = k_pred_bytes + k_exec_bytes + v_bytes
+    energy = (dram * hw.e_dram_byte + pred_macs * e_pred
+              + exec_pairs * d * bits * hw.e_bitmac + sv_macs * hw.e_mac12
+              + dram * hw.e_sram_byte)
+    return CostReport(pred_cycles + exec_cycles + sv_cycles,
+                      _mem_cycles(dram, hw), dram, energy)
+
+
+def tokenpicker_cost(chunks_fetched: np.ndarray, survivors: np.ndarray,
+                     d, dv, hw: HWConfig = HWConfig(), bits=12,
+                     chunk_bits=4, mode: str = "per_pair") -> CostReport:
+    """Progressive 4-bit chunks with partial reuse + post-exp decision."""
+    cf = np.asarray(chunks_fetched, np.float64)
+    sv = np.asarray(survivors, bool)
+    chunk_rows = cf.sum()
+    macs = chunk_rows * d
+    qk_cycles = macs * chunk_bits * bits / 12 / (hw.pe_lanes *
+                                                 hw.lane_bits_per_cycle)
+    sv_macs = sv.sum() * dv
+    sv_cycles = sv_macs / hw.vpu_macs
+    if mode == "shared":
+        max_c = cf.max(axis=tuple(range(cf.ndim - 1)))
+        k_bytes = max_c.sum() * d * chunk_bits / 8
+        v_bytes = sv.any(axis=tuple(range(sv.ndim - 1))).sum() * dv * bits / 8
+    else:
+        k_bytes = cf.sum() * d * chunk_bits / 8
+        v_bytes = sv.sum() * dv * bits / 8
+    dram = k_bytes + v_bytes
+    # post-exp decision: one exp per surviving chunk-row (LUT) — pricier
+    # decision logic than BitStopper's max-compare (paper section VI).
+    energy = (dram * hw.e_dram_byte + macs * hw.e_mac4x12
+              + sv_macs * hw.e_mac12 + dram * hw.e_sram_byte
+              + chunk_rows * 2.0)
+    return CostReport(qk_cycles + sv_cycles, _mem_cycles(dram, hw), dram, energy)

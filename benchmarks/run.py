@@ -1,0 +1,99 @@
+"""Benchmark driver: one module per paper table/figure → CSVs in results/.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig12
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import os
+import statistics
+import time
+
+from benchmarks.common import RESULTS_DIR
+
+
+def _write_csv(rows, path):
+    if not rows:
+        return
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    print(f"[bench] wrote {path} ({len(rows)} rows)")
+
+
+def _paper_claims():
+    """Relative numbers from the Fig. 12 analogue vs the paper's claims."""
+    path = os.path.join(RESULTS_DIR, "fig12.csv")
+    with open(path) as f:
+        rows = list(csv.DictReader(f))
+    by = {}
+    for r in rows:
+        by.setdefault(r["accelerator"], []).append(r)
+    claims = {}
+    for acc in ("sanger", "sofa", "bitstopper"):
+        sp = statistics.mean(float(r["speedup_vs_dense"]) for r in by[acc])
+        ee = statistics.mean(float(r["energy_eff_vs_dense"]) for r in by[acc])
+        claims[acc] = {"speedup_vs_dense": round(sp, 2),
+                       "energy_eff_vs_dense": round(ee, 2)}
+    bs, sg, sf = claims["bitstopper"], claims["sanger"], claims["sofa"]
+    claims["bitstopper_vs_sanger_speedup"] = round(
+        bs["speedup_vs_dense"] / sg["speedup_vs_dense"], 2)
+    claims["bitstopper_vs_sofa_speedup"] = round(
+        bs["speedup_vs_dense"] / sf["speedup_vs_dense"], 2)
+    claims["bitstopper_vs_sanger_energy"] = round(
+        bs["energy_eff_vs_dense"] / sg["energy_eff_vs_dense"], 2)
+    claims["bitstopper_vs_sofa_energy"] = round(
+        bs["energy_eff_vs_dense"] / sf["energy_eff_vs_dense"], 2)
+    claims["paper_targets"] = {
+        "speedup_vs_dense": 3.2, "vs_sanger_speedup": 2.03,
+        "vs_sofa_speedup": 1.89, "vs_sanger_energy": 2.4,
+        "vs_sofa_energy": 2.1,
+    }
+    out = os.path.join(RESULTS_DIR, "paper_claims.json")
+    with open(out, "w") as f:
+        json.dump(claims, f, indent=1)
+    print("[bench] paper-claim summary:")
+    print(json.dumps(claims, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="fig3b | fig10_11 | fig12 | fig13a | fig13b")
+    args = ap.parse_args()
+
+    from benchmarks import fig3b, fig10_11, fig12_13
+    jobs = {
+        "fig3b": fig3b.run,
+        "fig10_11": fig10_11.run,
+        "fig12": fig12_13.run_fig12,
+        "fig13a": fig12_13.run_fig13a,
+        "fig13b": fig12_13.run_fig13b,
+    }
+    if args.only:
+        jobs = {args.only: jobs[args.only]}
+
+    summary = []
+    for name, fn in jobs.items():
+        t0 = time.time()
+        print(f"[bench] running {name} ...")
+        rows = fn()
+        _write_csv(rows, os.path.join(RESULTS_DIR, f"{name}.csv"))
+        summary.append((name, len(rows), time.time() - t0))
+
+    print("\n[bench] summary:")
+    for name, n, dt in summary:
+        print(f"  {name:<10} {n:>4} rows  {dt:6.1f}s")
+
+    if args.only in (None, "fig12"):
+        _paper_claims()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Reproduce the paper's Fig. 13(a) trade-off on live tensors: sweep the
+pruning parameter α and print quality vs complexity-reduction (the curve
+whose plateau below α≈0.6 motivates the paper's default).
+
+    PYTHONPATH=src python examples/alpha_sweep.py
+"""
+
+import numpy as np
+
+from benchmarks.fig12_13 import run_fig13a
+
+
+def main():
+    rows = run_fig13a()
+    print(f"{'alpha':>6} {'mass kept':>10} {'out err':>9} "
+          f"{'compute cut':>12} {'memory cut':>11} {'kept':>6}")
+    for r in rows:
+        print(f"{r['alpha']:>6.1f} {r['quality_mass']*100:>9.2f}% "
+              f"{r['rel_output_err']*100:>8.2f}% "
+              f"{r['complexity_reduction']*100:>11.1f}% "
+              f"{r['mem_reduction']*100:>10.1f}% "
+              f"{r['kept_frac']*100:>5.1f}%")
+    # the paper's observation: below ~0.6 quality falls faster than
+    # complexity improves
+    errs = [r["rel_output_err"] for r in rows]
+    cuts = [r["complexity_reduction"] for r in rows]
+    print("\npaper Fig. 13(a) shape check: aggressive alphas should add "
+          "error faster than they add savings")
+    print(f"  err(0.2)/err(0.8)   = {errs[0] / max(errs[-1], 1e-9):.1f}x")
+    print(f"  cut(0.2)-cut(0.8)   = {(cuts[0] - cuts[-1]) * 100:.1f} pts")
+
+
+if __name__ == "__main__":
+    main()

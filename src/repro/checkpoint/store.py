@@ -1,0 +1,132 @@
+"""Checkpointing: flattened-pytree npz shards, atomic promote, async save.
+
+Layout:  <dir>/step_<N>/shard_<i>.npz + MANIFEST.json
+* **atomic** — written to ``step_<N>.tmp`` then ``os.replace``d, so a crash
+  mid-save never corrupts the latest checkpoint; resume scans for the
+  newest directory with a valid manifest.
+* **async**  — ``save_async`` snapshots to host memory synchronously
+  (cheap) and writes in a background thread, overlapping I/O with the next
+  training steps (step-level fault-tolerance requirement).
+* **sharded** — leaves are split round-robin across ``n_shards`` files so
+  multi-host writers could each own a subset; on one host it bounds file
+  size.  Structure (treedef) is stored in the manifest via leaf paths, so
+  loading is resilient to unrelated code motion.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in kp) for kp, _ in flat]
+    leaves = [l for _, l in flat]
+    return paths, leaves
+
+
+def save_checkpoint(tree, directory: str, step: int, n_shards: int = 4):
+    paths, leaves = _leaf_paths(tree)
+    tmp = os.path.join(directory, f"step_{step:08d}.tmp")
+    final = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(tmp, exist_ok=True)
+    shards: list[dict] = [dict() for _ in range(n_shards)]
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        shards[i % n_shards][p] = np.asarray(leaf)
+    for si, shard in enumerate(shards):
+        # npz keys cannot contain '/': escape.
+        np.savez(os.path.join(tmp, f"shard_{si}.npz"),
+                 **{k.replace("/", "__"): v for k, v in shard.items()})
+    manifest = {"step": step, "n_shards": n_shards, "paths": paths}
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        import shutil
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def load_checkpoint(tree_like, directory: str, step: int | None = None):
+    """Restore into the structure of ``tree_like``.  step=None → latest."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    data: dict[str, np.ndarray] = {}
+    for si in range(manifest["n_shards"]):
+        with np.load(os.path.join(d, f"shard_{si}.npz")) as z:
+            for k in z.files:
+                data[k.replace("__", "/")] = z[k]
+    paths, leaves = _leaf_paths(tree_like)
+    new_leaves = []
+    for p, ref in zip(paths, leaves):
+        arr = data[p]
+        new_leaves.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "MANIFEST.json")):
+                s = int(name.split("_")[1])
+                best = s if best is None or s > best else best
+    return best
+
+
+class CheckpointManager:
+    """Async save + retention.  ``wait()`` before process exit."""
+
+    def __init__(self, directory: str, keep: int = 3, n_shards: int = 4):
+        self.directory = directory
+        self.keep = keep
+        self.n_shards = n_shards
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save_async(self, tree, step: int):
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)  # snapshot now
+        self.wait()
+
+        def worker():
+            save_checkpoint(host_tree, self.directory, step, self.n_shards)
+            self._gc()
+
+        self._thread = threading.Thread(target=worker, daemon=True)
+        self._thread.start()
+
+    def save_sync(self, tree, step: int):
+        save_checkpoint(jax.tree_util.tree_map(np.asarray, tree),
+                        self.directory, step, self.n_shards)
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, tree_like, step: int | None = None):
+        return load_checkpoint(tree_like, self.directory, step)
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[: -self.keep]:
+            import shutil
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

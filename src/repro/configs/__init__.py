@@ -1,0 +1,4 @@
+"""Assigned architectures (+ the paper's own eval model) as selectable configs."""
+
+from repro.configs.registry import get_config, list_archs, reduced_config  # noqa: F401
+from repro.configs.shapes import SHAPES, ShapeSuite  # noqa: F401

@@ -1,0 +1,42 @@
+"""The assigned input-shape suites (identical across all 10 LM archs).
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a KV
+cache of ``seq_len``), NOT ``train_step``.  ``long_500k`` requires
+sub-quadratic attention: it runs only for archs with
+``ModelConfig.sub_quadratic`` (mamba2, recurrentgemma) and is recorded as a
+documented skip for the pure full-attention archs (DESIGN.md section 4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSuite:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # "train" | "prefill" | "decode"
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES: dict[str, ShapeSuite] = {
+    "train_4k": ShapeSuite("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSuite("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSuite("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSuite("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg) -> list[ShapeSuite]:
+    """Shape suites that are well-defined for this arch (long_500k gating)."""
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and not cfg.sub_quadratic:
+            continue
+        out.append(s)
+    return out

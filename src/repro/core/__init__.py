@@ -1,0 +1,28 @@
+"""BitStopper core algorithms (the paper's contribution, in JAX)."""
+
+from repro.core.besf import BESFOutput, BESFStats, BitStopperConfig, besf_attention
+from repro.core.block_adaptation import (
+    BlockBESFOutput,
+    BlockStats,
+    block_bitstopper_attention,
+)
+from repro.core.baselines import (
+    dense_attention,
+    sanger_attention,
+    sofa_attention,
+    tokenpicker_attention,
+)
+
+__all__ = [
+    "BESFOutput",
+    "BESFStats",
+    "BitStopperConfig",
+    "besf_attention",
+    "BlockBESFOutput",
+    "BlockStats",
+    "block_bitstopper_attention",
+    "dense_attention",
+    "sanger_attention",
+    "sofa_attention",
+    "tokenpicker_attention",
+]

@@ -1,0 +1,190 @@
+"""Prior-art dynamic-sparsity baselines the paper compares against.
+
+These re-implement the *mechanisms* (not the full systems) of:
+
+* **Dense** — INT12 attention without sparsity (the paper's "Baseline").
+* **Sanger-style** [MICRO'21] — a separate 4-bit predictor computes an
+  approximate QK^T; pairs whose approximate post-softmax probability exceeds
+  a *static* threshold survive; the executor recomputes survivors at 12-bit.
+* **SOFA-style** [MICRO'24] — a low-bit (log-domain flavored) predictor
+  followed by per-query *top-k* selection; executor recomputes at 12-bit.
+* **TokenPicker-style** [DAC'24] — predictor-free progressive 4-bit chunks
+  with partial-sum reuse and a post-exp probability stopping rule.
+
+Every function returns (output, info-dict) where info carries the masks /
+fetch counters that ``repro.core.stats`` converts into traffic numbers.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as qlib
+from repro.core.lats import NEG_INF
+
+
+def _maybe_causal_mask(Sq, Sk, causal, mask):
+    if causal:
+        cmask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        mask = cmask if mask is None else (mask & cmask)
+    return mask
+
+
+def _masked_softmax(logits, mask):
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    if mask is not None:
+        p = jnp.where(mask, p, 0.0)
+    return p
+
+
+@partial(jax.jit, static_argnames=("bits", "causal"))
+def dense_attention(q, k, v, bits: int = 12, causal: bool = False, mask=None):
+    """INT12-quantized dense attention (paper accuracy baseline)."""
+    d = q.shape[-1]
+    mask = _maybe_causal_mask(q.shape[-2], k.shape[-2], causal, mask)
+    q_int, qp = qlib.quantize(q, bits)
+    k_int, kp = qlib.quantize(k, bits)
+    v_int, vp = qlib.quantize(v, bits)
+    scores = jnp.einsum("...qd,...kd->...qk", q_int.astype(jnp.float32),
+                        k_int.astype(jnp.float32))
+    logits = scores * (qp.scale * kp.scale / d ** 0.5)
+    p = _masked_softmax(logits, mask)
+    out = p @ qlib.dequantize(v_int, vp)
+    return out, {"probs": p, "logits": logits, "mask": mask}
+
+
+@partial(jax.jit, static_argnames=("pred_bits", "exec_bits", "causal"))
+def sanger_attention(
+    q, k, v,
+    threshold: float = 2e-3,
+    pred_bits: int = 4,
+    exec_bits: int = 12,
+    causal: bool = False,
+    mask=None,
+):
+    """Sanger-style: 4-bit predictor + static post-softmax threshold."""
+    d = q.shape[-1]
+    mask = _maybe_causal_mask(q.shape[-2], k.shape[-2], causal, mask)
+    # Prediction stage (low precision, full K fetch).
+    q4, qp4 = qlib.quantize(q, pred_bits)
+    k4, kp4 = qlib.quantize(k, pred_bits)
+    approx = jnp.einsum("...qd,...kd->...qk", q4.astype(jnp.float32),
+                        k4.astype(jnp.float32))
+    approx_logits = approx * (qp4.scale * kp4.scale / d ** 0.5)
+    approx_p = _masked_softmax(approx_logits, mask)
+    kept = approx_p > threshold
+    if mask is not None:
+        kept = kept & mask
+    # Formal stage (high precision on survivors).
+    out, info = dense_attention(q, k, v, exec_bits, causal=False, mask=kept)
+    info = dict(info, kept=kept, valid=mask)
+    return out, info
+
+
+@partial(jax.jit, static_argnames=("k_ratio", "pred_bits", "exec_bits", "causal"))
+def sofa_attention(
+    q, k, v,
+    k_ratio: float = 0.25,
+    pred_bits: int = 4,
+    exec_bits: int = 12,
+    causal: bool = False,
+    mask=None,
+):
+    """SOFA-style: log-domain low-bit predictor + per-query top-k."""
+    d = q.shape[-1]
+    Sq, Sk = q.shape[-2], k.shape[-2]
+    mask = _maybe_causal_mask(Sq, Sk, causal, mask)
+    # Log-domain predictor: power-of-two magnitudes (cheap shifts in HW).
+    def log_quant(x, bits):
+        sign = jnp.sign(x)
+        mag = jnp.abs(x)
+        amax = jnp.maximum(jnp.max(mag), 1e-12)
+        e = jnp.clip(jnp.round(jnp.log2(mag / amax + 1e-20)), -(2 ** bits - 1), 0)
+        return sign * amax * 2.0 ** e
+    approx = jnp.einsum("...qd,...kd->...qk", log_quant(q, pred_bits),
+                        log_quant(k, pred_bits)) / d ** 0.5
+    if mask is not None:
+        approx = jnp.where(mask, approx, NEG_INF)
+    topk = max(int(k_ratio * Sk), 1)
+    thresh = jnp.sort(approx, axis=-1)[..., Sk - topk]
+    kept = approx >= thresh[..., None]
+    if mask is not None:
+        kept = kept & mask
+    out, info = dense_attention(q, k, v, exec_bits, causal=False, mask=kept)
+    info = dict(info, kept=kept, valid=mask)
+    return out, info
+
+
+@partial(jax.jit, static_argnames=("chunk_bits", "bits", "causal"))
+def tokenpicker_attention(
+    q, k, v,
+    prob_threshold: float = 1e-3,
+    chunk_bits: int = 4,
+    bits: int = 12,
+    causal: bool = False,
+    mask=None,
+):
+    """TokenPicker-style: progressive 4-bit chunks, post-exp probability rule.
+
+    A 12-bit key is consumed as three 4-bit chunks (MSB chunk first).  After
+    chunk c the score interval is [partial + m_min_c, partial + m_max_c]; a
+    token is dropped when the *upper bound* of its softmax probability
+    (relative to the running max lower bound) falls below ``prob_threshold``.
+    Chunk partial sums are reused (no re-fetch), like BESF but 4x coarser.
+    """
+    d = q.shape[-1]
+    Sq, Sk = q.shape[-2], k.shape[-2]
+    mask = _maybe_causal_mask(Sq, Sk, causal, mask)
+    n_chunks = bits // chunk_bits
+
+    q_int, qp = qlib.quantize(q, bits)
+    k_int, kp = qlib.quantize(k, bits)
+    scale_total = qp.scale * kp.scale / d ** 0.5
+
+    planes = qlib.to_bitplanes(k_int, bits)          # [bits, ..., Sk, d]
+    w = (2 ** jnp.arange(bits - 1, -1, -1)).astype(jnp.int32)
+    w = w * jnp.where(jnp.arange(bits) == 0, -1, 1)
+
+    # Chunk contribution c: planes 4c..4c+3 combined.
+    def chunk_score(c):
+        acc = jnp.zeros(q_int.shape[:-1] + (Sk,), jnp.int32)
+        for r_off in range(chunk_bits):
+            r = c * chunk_bits + r_off
+            acc = acc + w[r] * jnp.einsum(
+                "...qd,...kd->...qk", q_int, planes[r].astype(jnp.int32)
+            )
+        return acc
+
+    pos = jnp.sum(jnp.maximum(q_int, 0), axis=-1).astype(jnp.float32)
+    neg = jnp.sum(jnp.minimum(q_int, 0), axis=-1).astype(jnp.float32)
+
+    valid = jnp.ones(q_int.shape[:-2] + (Sq, Sk), bool) if mask is None else \
+        jnp.broadcast_to(mask, q_int.shape[:-2] + (Sq, Sk))
+
+    partial = jnp.zeros(q_int.shape[:-2] + (Sq, Sk), jnp.int32)
+    alive = valid
+    fetched = jnp.zeros_like(partial)
+    for c in range(n_chunks):
+        fetched = fetched + alive.astype(jnp.int32)
+        partial = partial + jnp.where(alive, chunk_score(c), 0)
+        rem = float(2 ** (bits - (c + 1) * chunk_bits) - 1)
+        lower = partial.astype(jnp.float32) + rem * neg[..., None]
+        upper = partial.astype(jnp.float32) + rem * pos[..., None]
+        m_low = jnp.max(jnp.where(alive, lower, NEG_INF), axis=-1)
+        # Post-exp probability upper bound vs running max.
+        prob_ub = jnp.exp((upper - m_low[..., None]) * scale_total)
+        alive = alive & (prob_ub > prob_threshold)
+
+    logits = jnp.where(alive, partial.astype(jnp.float32) * scale_total, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(alive, p, 0.0)
+    v_int, vp = qlib.quantize(v, bits)
+    out = p @ qlib.dequantize(v_int, vp)
+    return out, {
+        "probs": p, "kept": alive, "chunks_fetched": fetched, "valid": valid,
+    }

@@ -1,0 +1,174 @@
+"""Bit-serial Enabled Stage Fusion (BESF) — the paper's core algorithm.
+
+Faithful, per-token reference implementation (paper Fig. 5 + Section III).
+Keys are INT12-quantized and consumed one bit plane at a time (MSB first).
+After each round the LATS rule prunes candidates whose score interval can no
+longer reach the adaptive threshold; pruned candidates stop fetching planes
+(early termination).  Survivors of all rounds carry their *exact* INT12
+scores — the prediction work IS the execution work (stage fusion) — and the
+final output is softmax over survivors times V.
+
+Integer partial scores are accumulated in int32 (exact: |A| <= 2048*2048*d),
+so the interval property  lower <= exact <= upper  holds bit-for-bit; this is
+what the hypothesis property tests check.
+
+Complexity accounting (planes fetched per (i, j) pair, survivor counts) is
+returned in a :class:`BESFStats` so benchmarks can derive traffic/compute
+numbers without re-running the algorithm.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import margins as margins_lib
+from repro.core import quantization as qlib
+from repro.core.lats import NEG_INF, lats_keep, lats_threshold
+
+
+@dataclasses.dataclass(frozen=True)
+class BitStopperConfig:
+    """Algorithm hyper-parameters (paper defaults)."""
+
+    bits: int = 12
+    alpha: float = 0.6
+    radius: float = 5.0
+    quantize_v: bool = True     # paper: S x V at 12-bit
+    min_rounds: int = 1         # never prune before this many planes are seen
+
+    def replace(self, **kw) -> "BitStopperConfig":
+        return dataclasses.replace(self, **kw)
+
+
+class BESFStats(NamedTuple):
+    planes_fetched: jax.Array   # [Sq, Sk] int32 — bit planes consumed per pair
+    survivors: jax.Array        # [Sq, Sk] bool  — alive after the last round
+    valid: jax.Array            # [Sq, Sk] bool  — attention-mask validity
+
+
+class BESFOutput(NamedTuple):
+    out: jax.Array              # [Sq, dv]
+    probs: jax.Array            # [Sq, Sk] — softmax over survivors (0 for pruned)
+    scores: jax.Array           # [Sq, Sk] — final logits (NEG_INF for pruned)
+    stats: BESFStats
+
+
+def _besf_single(
+    q: jax.Array,               # [Sq, d] float
+    k: jax.Array,               # [Sk, d] float
+    v: jax.Array,               # [Sk, dv] float
+    mask: jax.Array | None,     # [Sq, Sk] bool or None
+    cfg: BitStopperConfig,
+) -> BESFOutput:
+    Sq, d = q.shape
+    Sk = k.shape[0]
+    bits = cfg.bits
+    sm_scale = 1.0 / (d ** 0.5)
+
+    q_int, q_params = qlib.quantize(q, bits)
+    k_int, k_params = qlib.quantize(k, bits)
+    planes = qlib.to_bitplanes(k_int, bits)                     # [bits, Sk, d]
+    w = (2 ** jnp.arange(bits - 1, -1, -1)).astype(jnp.int32)
+    w = w * jnp.where(jnp.arange(bits) == 0, -1, 1)             # [bits]
+
+    # Bit Margin Generator: [bits, Sq] margin pairs (int domain).
+    m_min, m_max = margins_lib.bit_margins(q_int, bits)
+
+    # alpha*radius expressed in the integer score domain.
+    scale_total = q_params.scale * k_params.scale * sm_scale
+    radius_int = cfg.radius / scale_total
+
+    valid = jnp.ones((Sq, Sk), bool) if mask is None else mask.astype(bool)
+
+    # Per-plane integer contributions: delta[r] = w_r * (q_int @ plane_r^T).
+    # (Computed densely here for clarity; "fetch" accounting below records
+    # what the accelerator would actually have loaded/computed.)
+    def plane_score(r):
+        return w[r] * (q_int @ planes[r].T.astype(jnp.int32))   # [Sq, Sk] int32
+
+    def round_body(carry, r):
+        partial, alive, fetched = carry
+        # Every candidate alive entering round r fetches/computes plane r.
+        fetched = fetched + alive.astype(jnp.int32)
+        delta = plane_score(r)
+        partial = partial + jnp.where(alive, delta, 0)
+
+        lower = partial.astype(jnp.float32) + m_min[r][:, None]
+        upper = partial.astype(jnp.float32) + m_max[r][:, None]
+        eta = lats_threshold(lower, alive, cfg.alpha, radius_int)
+        keep = lats_keep(upper, eta, alive)
+        keep = jnp.where(r < cfg.min_rounds - 1, alive, keep)
+        return (partial, keep, fetched), None
+
+    partial0 = jnp.zeros((Sq, Sk), jnp.int32)
+    fetched0 = jnp.zeros((Sq, Sk), jnp.int32)
+    (partial, alive, fetched), _ = jax.lax.scan(
+        round_body, (partial0, valid, fetched0), jnp.arange(bits)
+    )
+
+    # Formal stage epilogue: exact scores for survivors, softmax, S x V.
+    logits = jnp.where(alive, partial.astype(jnp.float32) * scale_total, NEG_INF)
+    logits = jnp.where(valid, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(alive & valid, probs, 0.0)
+
+    if cfg.quantize_v:
+        v_int, v_params = qlib.quantize(v, bits)
+        v_eff = qlib.dequantize(v_int, v_params)
+    else:
+        v_eff = v
+    out = probs @ v_eff
+
+    return BESFOutput(
+        out=out,
+        probs=probs,
+        scores=logits,
+        stats=BESFStats(planes_fetched=fetched, survivors=alive, valid=valid),
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg", "causal"))
+def besf_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    cfg: BitStopperConfig = BitStopperConfig(),
+    mask: jax.Array | None = None,
+    causal: bool = False,
+) -> BESFOutput:
+    """BitStopper attention, faithful per-token reference.
+
+    Supports arbitrary leading batch/head dims: q [..., Sq, d], k/v [..., Sk, *].
+    """
+    Sq, Sk = q.shape[-2], k.shape[-2]
+    if causal:
+        cmask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        mask = cmask if mask is None else (mask & cmask)
+
+    if q.ndim == 2:
+        return _besf_single(q, k, v, mask, cfg)
+
+    flat_q = q.reshape((-1,) + q.shape[-2:])
+    flat_k = k.reshape((-1,) + k.shape[-2:])
+    flat_v = v.reshape((-1,) + v.shape[-2:])
+    if mask is not None and mask.ndim > 2:
+        flat_m = jnp.broadcast_to(mask, q.shape[:-2] + (Sq, Sk))
+        flat_m = flat_m.reshape((-1, Sq, Sk))
+        res = jax.vmap(lambda a, b, c, m: _besf_single(a, b, c, m, cfg))(
+            flat_q, flat_k, flat_v, flat_m
+        )
+    else:
+        res = jax.vmap(lambda a, b, c: _besf_single(a, b, c, mask, cfg))(
+            flat_q, flat_k, flat_v
+        )
+    shape = q.shape[:-2]
+
+    def unflat(x):
+        return x.reshape(shape + x.shape[1:])
+
+    return jax.tree_util.tree_map(unflat, res)

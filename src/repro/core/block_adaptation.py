@@ -1,0 +1,192 @@
+"""TPU block-granular adaptation of BESF — the Pallas kernel's semantic model.
+
+The ASIC terminates *per token*; a TPU terminates *per (q-tile, kv-block)*:
+a kv block stops fetching bit planes once **no** (query, key) pair in the
+tile x block can still beat its query's LATS threshold.  Token-level quality
+is preserved by masking individually-pruned tokens out of the softmax; only
+the *traffic* decision is block-granular.
+
+Because the kernel streams kv blocks (flash-attention style) it cannot see
+the global max lower bound of round r.  It uses the *running prefix max*
+(updated every round from every block it has touched), which is always <=
+the global max, hence thresholds are conservative: the streaming variant
+keeps a superset of the per-token reference's survivors.  That containment
+is a property test.
+
+This module is pure jnp — it is the oracle (`ref`) the Pallas kernel in
+``repro/kernels/bitstopper_qk.py`` is validated against, and the model the
+benchmarks use for block-level traffic accounting.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import margins as margins_lib
+from repro.core import quantization as qlib
+from repro.core.besf import BitStopperConfig
+from repro.core.lats import NEG_INF
+
+
+class BlockStats(NamedTuple):
+    rounds_per_block: jax.Array   # [n_qt, n_kb] int32 — bit planes fetched
+    block_alive: jax.Array        # [n_qt, n_kb] bool  — V fetched for block
+    survivors: jax.Array          # [Sq, Sk] bool      — token-level keep mask
+
+
+class BlockBESFOutput(NamedTuple):
+    out: jax.Array                # [Sq, dv]
+    scores: jax.Array             # [Sq, Sk] final logits (NEG_INF if pruned)
+    stats: BlockStats
+
+
+def _block_single(q, k, v, mask, cfg: BitStopperConfig, block_q: int, block_k: int):
+    Sq, d = q.shape
+    Sk, dv = v.shape
+    bits = cfg.bits
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    n_qt, n_kb = Sq // block_q, Sk // block_k
+    sm_scale = 1.0 / (d ** 0.5)
+
+    q_int, q_params = qlib.quantize(q, bits)
+    k_int, k_params = qlib.quantize(k, bits)
+    planes = qlib.to_bitplanes(k_int, bits)                      # [bits, Sk, d]
+    w = (2 ** jnp.arange(bits - 1, -1, -1)).astype(jnp.int32)
+    w = w * jnp.where(jnp.arange(bits) == 0, -1, 1)
+    m_min, m_max = margins_lib.bit_margins(q_int, bits)          # [bits, Sq]
+
+    scale_total = q_params.scale * k_params.scale * sm_scale
+    radius_int = cfg.radius / scale_total
+
+    valid = jnp.ones((Sq, Sk), bool) if mask is None else mask.astype(bool)
+
+    if cfg.quantize_v:
+        v_int, v_params = qlib.quantize(v, bits)
+        v_eff = qlib.dequantize(v_int, v_params)
+    else:
+        v_eff = v
+
+    planes_b = planes.reshape(bits, n_kb, block_k, d)
+    valid_b = valid.reshape(n_qt, block_q, n_kb, block_k)
+    q_tiles = q_int.reshape(n_qt, block_q, d)
+    mmin_tiles = m_min.reshape(bits, n_qt, block_q).swapaxes(0, 1)  # [n_qt, bits, Bq]
+    mmax_tiles = m_max.reshape(bits, n_qt, block_q).swapaxes(0, 1)
+
+    def q_tile_body(qi, mmin_t, mmax_t, vmask_tile):
+        # qi [Bq, d]; mmin_t/mmax_t [bits, Bq]; vmask_tile [Bq, n_kb, Bk]
+
+        def kv_block_body(carry, kb):
+            m_low, m_run, l_run, acc = carry
+            vmask = vmask_tile[:, kb, :]                         # [Bq, Bk]
+
+            def round_body(rc, r):
+                partial, tok_alive, blk_alive, rounds, m_low_in = rc
+                do = blk_alive & (r < bits)
+                rounds = rounds + do.astype(jnp.int32)
+                delta = w[r] * (qi @ planes_b[r, kb].T.astype(jnp.int32))
+                partial = jnp.where(do, partial + delta, partial)
+                lower = partial.astype(jnp.float32) + mmin_t[r][:, None]
+                upper = partial.astype(jnp.float32) + mmax_t[r][:, None]
+                # Prefix-max lower bound (per query row), using valid tokens.
+                low_here = jnp.max(
+                    jnp.where(vmask & tok_alive, lower, NEG_INF), axis=-1
+                )
+                m_low_new = jnp.where(do, jnp.maximum(m_low_in, low_here), m_low_in)
+                eta = m_low_new - cfg.alpha * radius_int
+                keep = tok_alive & (upper >= eta[:, None]) & vmask
+                keep = jnp.where(r < cfg.min_rounds - 1, tok_alive & vmask, keep)
+                keep = jnp.where(do, keep, tok_alive)
+                blk_alive_new = jnp.where(do, jnp.any(keep), blk_alive)
+                return (partial, keep, blk_alive_new, rounds, m_low_new), None
+
+            partial0 = jnp.zeros((block_q, block_k), jnp.int32)
+            tok0 = vmask
+            blk0 = jnp.any(vmask)
+            (partial, tok_alive, blk_done_alive, rounds, m_low_new), _ = jax.lax.scan(
+                round_body,
+                (partial0, tok0, blk0, jnp.zeros((), jnp.int32), m_low),
+                jnp.arange(bits),
+            )
+            # Survivors of a fully-processed block hold exact logits.
+            full = rounds == bits
+            survived = tok_alive & full
+            logits = jnp.where(
+                survived, partial.astype(jnp.float32) * scale_total, NEG_INF
+            )
+            # Online softmax update (flash-style).
+            blk_max = jnp.max(logits, axis=-1)
+            m_new = jnp.maximum(m_run, blk_max)
+            # Guard fully-pruned prefixes: keep NEG_INF until a real value.
+            p = jnp.exp(logits - m_new[:, None])
+            p = jnp.where(survived, p, 0.0)
+            corr = jnp.where(m_run == NEG_INF, 0.0, jnp.exp(m_run - m_new))
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v_eff, kb * block_k, block_k, 0)
+            acc_new = acc * corr[:, None] + p @ v_blk
+            carry = (m_low_new, m_new, l_new, acc_new)
+            return carry, (rounds, jnp.any(survived), survived, logits)
+
+        init = (
+            jnp.full((block_q,), NEG_INF, jnp.float32),
+            jnp.full((block_q,), NEG_INF, jnp.float32),
+            jnp.zeros((block_q,), jnp.float32),
+            jnp.zeros((block_q, dv), jnp.float32),
+        )
+        (m_low, m_run, l_run, acc), (rounds, blk_alive, survived, logits) = (
+            jax.lax.scan(kv_block_body, init, jnp.arange(n_kb))
+        )
+        out = acc / jnp.maximum(l_run, 1e-30)[:, None]
+        # [n_kb, Bq, Bk] -> [Bq, Sk]
+        survived = jnp.moveaxis(survived, 0, 1).reshape(block_q, Sk)
+        logits = jnp.moveaxis(logits, 0, 1).reshape(block_q, Sk)
+        return out, rounds, blk_alive, survived, logits
+
+    outs, rounds, blk_alive, survived, logits = jax.vmap(q_tile_body)(
+        q_tiles, mmin_tiles, mmax_tiles, valid_b
+    )
+    return BlockBESFOutput(
+        out=outs.reshape(Sq, dv),
+        scores=logits.reshape(Sq, Sk),
+        stats=BlockStats(
+            rounds_per_block=rounds,
+            block_alive=blk_alive,
+            survivors=survived.reshape(Sq, Sk),
+        ),
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg", "block_q", "block_k", "causal"))
+def block_bitstopper_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    cfg: BitStopperConfig = BitStopperConfig(),
+    block_q: int = 64,
+    block_k: int = 64,
+    causal: bool = False,
+    mask: jax.Array | None = None,
+) -> BlockBESFOutput:
+    """Block-granular streaming BitStopper (TPU kernel oracle).
+
+    q [..., Sq, d], k [..., Sk, d], v [..., Sk, dv].
+    """
+    Sq, Sk = q.shape[-2], k.shape[-2]
+    if causal:
+        cmask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        mask = cmask if mask is None else (mask & cmask)
+
+    if q.ndim == 2:
+        return _block_single(q, k, v, mask, cfg, block_q, block_k)
+
+    flat_q = q.reshape((-1,) + q.shape[-2:])
+    flat_k = k.reshape((-1,) + k.shape[-2:])
+    flat_v = v.reshape((-1,) + v.shape[-2:])
+    res = jax.vmap(lambda a, b, c: _block_single(a, b, c, mask, cfg, block_q, block_k))(
+        flat_q, flat_k, flat_v
+    )
+    shape = q.shape[:-2]
+    return jax.tree_util.tree_map(lambda x: x.reshape(shape + x.shape[1:]), res)

@@ -1,0 +1,58 @@
+"""Lightweight Adaptive Token Selection (LATS) — paper Section III-B, Eq. (3).
+
+Per query i and bit-round r the pruning threshold is derived from the *lower*
+bounds of the still-alive candidates:
+
+    eta_i = max_j ( A^r_ij + M_i^{r,min} ) - alpha * radius
+
+and a candidate j survives iff its *upper* bound can still beat it:
+
+    keep_ij = ( A^r_ij + M_i^{r,max} ) > eta_i
+
+``radius`` is expressed in softmax-logit units (default 5: e^-5 ≈ 0.7% mass),
+so when the comparison is carried out in the integer score domain the radius
+must be divided by the total dequantization scale (q_scale * k_scale *
+softmax_scale).  The arg-max candidate always survives: its upper bound is at
+least its lower bound, which exceeds eta_i by alpha*radius > 0.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class LATSConfig:
+    alpha: float = 0.6          # pruning aggressiveness (paper sweeps 0.2..0.8)
+    radius: float = 5.0         # logit-domain radius (paper default)
+    bits: int = 12              # quantization width
+
+
+def lats_threshold(
+    lower: jax.Array,        # [..., Sk] lower bounds (any consistent domain)
+    valid: jax.Array,        # [..., Sk] bool — candidates still in play
+    alpha: float,
+    radius_in_domain,        # scalar: alpha-scaled radius in `lower`'s domain
+) -> jax.Array:
+    """eta per query row: max over valid lower bounds minus alpha*radius."""
+    masked = jnp.where(valid, lower, NEG_INF)
+    return jnp.max(masked, axis=-1) - alpha * radius_in_domain
+
+
+def lats_keep(
+    upper: jax.Array,        # [..., Sk] upper bounds
+    eta: jax.Array,          # [...]
+    valid: jax.Array,        # [..., Sk]
+) -> jax.Array:
+    """Survival mask for this round (subset of `valid`).
+
+    Note: ``>=`` (not the paper's strict ``>``) so the alpha=0 boundary is
+    well-defined: at the final round the argmax's collapsed interval equals
+    eta exactly and must survive.  For alpha > 0 the two are equivalent.
+    """
+    return valid & (upper >= eta[..., None])

@@ -1,0 +1,49 @@
+"""Bit Margin Generator (paper Fig. 9(c), Section III-B).
+
+For a query vector ``Q_i`` (full INT12 precision) dotted with a key whose bit
+planes 0..r have been processed, the contribution of the remaining planes
+r+1..bits-1 is bounded:
+
+    remaining weight  W_r = sum_{t=r+1}^{bits-1} 2^{bits-1-t} = 2^{bits-1-r} - 1
+
+Each unknown key bit multiplies Q_id by a non-negative plane weight, so
+
+    M_i^{r,max} = W_r * sum_d max(Q_id, 0)      (unknown bits -> 1 where Q>0)
+    M_i^{r,min} = W_r * sum_d min(Q_id, 0)      (unknown bits -> 1 where Q<0)
+
+and  A^r_ij + M_i^{r,min}  <=  A_ij  <=  A^r_ij + M_i^{r,max}   exactly.
+
+The twelve (min, max) pairs per query depend only on Q_i — the hardware
+stores them in a LUT; we return them as ``[bits, ...]`` arrays.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import DEFAULT_BITS
+
+
+def remaining_weight(bits: int = DEFAULT_BITS) -> jax.Array:
+    """W_r for r = 0..bits-1 (after processing plane r). Shape [bits], int32."""
+    r = jnp.arange(bits)
+    return (2 ** (bits - 1 - r) - 1).astype(jnp.int32)
+
+
+def bit_margins(q_int: jax.Array, bits: int = DEFAULT_BITS):
+    """Margin pairs for every round.
+
+    Args:
+      q_int: integer query values, shape [..., d] (int32).
+
+    Returns:
+      (m_min, m_max): each of shape [bits, ...] (float32): the margin after
+      having processed planes 0..r inclusive.
+    """
+    pos = jnp.sum(jnp.maximum(q_int, 0), axis=-1).astype(jnp.float32)  # [...]
+    neg = jnp.sum(jnp.minimum(q_int, 0), axis=-1).astype(jnp.float32)  # [...]
+    w = remaining_weight(bits).astype(jnp.float32)  # [bits]
+    shape = (bits,) + (1,) * pos.ndim
+    w = w.reshape(shape)
+    return w * neg[None, ...], w * pos[None, ...]

@@ -1,0 +1,126 @@
+"""INT12 post-training quantization and bit-plane decomposition.
+
+The paper quantizes Q, K, V to 12-bit integers (per-tensor, symmetric, 2's
+complement) and decomposes each Key vector into twelve 1-bit planes, most
+significant (sign) plane first.  For an N-bit 2's-complement integer
+``c_{N-1} c_{N-2} ... c_0`` the value is
+
+    x = -c_{N-1} 2^{N-1} + sum_{i=0}^{N-2} c_i 2^i            (paper Eq. 4)
+
+so *plane r* (r = 0 is the MSB) has weight  w_0 = -2^{N-1}  and
+w_r = 2^{N-1-r}  for r >= 1.  Every bit except the sign bit contributes a
+non-negative amount, which is what makes the bit-level uncertainty margin
+(margins.py) a valid interval bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BITS = 12
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    """Symmetric per-tensor quantization parameters."""
+
+    scale: jax.Array  # scalar, float32:  x_float ~= x_int * scale
+    bits: int = DEFAULT_BITS
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1))
+
+
+def plane_weights(bits: int = DEFAULT_BITS, dtype=jnp.float32) -> jax.Array:
+    """Weight of each bit plane, MSB (sign) first: [-2^(b-1), 2^(b-2), ..., 1]."""
+    w = 2.0 ** jnp.arange(bits - 1, -1, -1)
+    return (w * jnp.where(jnp.arange(bits) == 0, -1.0, 1.0)).astype(dtype)
+
+
+def quantize(x: jax.Array, bits: int = DEFAULT_BITS) -> tuple[jax.Array, QuantParams]:
+    """Symmetric per-tensor PTQ.  Returns (int32 values, params)."""
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -(qmax + 1), qmax).astype(jnp.int32)
+    return q, QuantParams(scale=scale.astype(jnp.float32), bits=bits)
+
+
+def dequantize(q: jax.Array, params: QuantParams) -> jax.Array:
+    return q.astype(jnp.float32) * params.scale
+
+
+def to_bitplanes(q: jax.Array, bits: int = DEFAULT_BITS) -> jax.Array:
+    """Decompose int32 2's-complement values into bit planes.
+
+    Returns uint8 array of shape ``(bits,) + q.shape`` with plane 0 = MSB
+    (sign).  ``q`` must lie in [-2^(bits-1), 2^(bits-1)-1].
+    """
+    # Reinterpret as unsigned 'bits'-wide field: x mod 2^bits.
+    u = jnp.where(q < 0, q + (1 << bits), q).astype(jnp.uint32)
+    shifts = jnp.arange(bits - 1, -1, -1, dtype=jnp.uint32)  # MSB first
+    planes = (u[None, ...] >> shifts.reshape((bits,) + (1,) * q.ndim)) & 1
+    return planes.astype(jnp.uint8)
+
+
+def from_bitplanes(planes: jax.Array) -> jax.Array:
+    """Inverse of :func:`to_bitplanes` → int32 values."""
+    bits = planes.shape[0]
+    w = plane_weights(bits, dtype=jnp.int32 if bits < 31 else jnp.int64)
+    # int32 weights: plane 0 weight is -2^(bits-1).
+    w = (2 ** jnp.arange(bits - 1, -1, -1)).astype(jnp.int32)
+    w = w * jnp.where(jnp.arange(bits) == 0, -1, 1)
+    return jnp.tensordot(w, planes.astype(jnp.int32), axes=1)
+
+
+def partial_value(planes: jax.Array, r: int) -> jax.Array:
+    """Value reconstructed from planes 0..r inclusive (remaining bits = 0)."""
+    bits = planes.shape[0]
+    w = (2 ** jnp.arange(bits - 1, -1, -1)).astype(jnp.int32)
+    w = w * jnp.where(jnp.arange(bits) == 0, -1, 1)
+    mask = (jnp.arange(bits) <= r).astype(jnp.int32)
+    return jnp.tensordot(w * mask, planes.astype(jnp.int32), axes=1)
+
+
+# ---------------------------------------------------------------------------
+# Sequence-axis bit packing (TPU kernel storage layout).
+#
+# Plane r of K (shape [S, d]) is stored packed 8-tokens-per-byte along the
+# sequence axis: uint8[S//8, d].  Token s's bit lives in byte s//8 at bit
+# position (s % 8) (LSB-first within the byte).  The d axis stays minor so a
+# d=128 lane dimension tiles perfectly in VMEM.
+# ---------------------------------------------------------------------------
+
+
+def pack_planes_seq(planes: jax.Array) -> jax.Array:
+    """Pack ``uint8[bits, S, d]`` planes → ``uint8[bits, S//8, d]`` (S % 8 == 0)."""
+    bits, S, d = planes.shape
+    assert S % 8 == 0, f"sequence length {S} not a multiple of 8"
+    p = planes.reshape(bits, S // 8, 8, d).astype(jnp.uint32)
+    weights = (1 << jnp.arange(8, dtype=jnp.uint32)).reshape(1, 1, 8, 1)
+    return jnp.sum(p * weights, axis=2).astype(jnp.uint8)
+
+
+def unpack_planes_seq(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_planes_seq` → ``uint8[bits, S, d]``."""
+    bits, S8, d = packed.shape
+    shifts = jnp.arange(8, dtype=jnp.uint32).reshape(1, 1, 8, 1)
+    u = (packed.astype(jnp.uint32)[:, :, None, :] >> shifts) & 1
+    return u.reshape(bits, S8 * 8, d).astype(jnp.uint8)
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def quantize_and_pack(k: jax.Array, bits: int = DEFAULT_BITS):
+    """Convenience: float K [S, d] → (packed planes uint8[bits, S//8, d], scale)."""
+    q, params = quantize(k, bits)
+    planes = to_bitplanes(q, bits)
+    return pack_planes_seq(planes), params.scale

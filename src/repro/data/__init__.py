@@ -1,0 +1,3 @@
+"""Data pipeline: synthetic LM stream with host prefetch + shard slicing."""
+
+from repro.data.pipeline import DataConfig, SyntheticLMDataset  # noqa: F401

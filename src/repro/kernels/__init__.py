@@ -1,0 +1,3 @@
+"""Pallas TPU kernels (validated interpret=True on CPU) + jnp oracles."""
+
+from repro.kernels.ops import attention  # noqa: F401

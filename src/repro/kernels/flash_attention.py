@@ -1,0 +1,127 @@
+"""Fused flash-attention Pallas TPU kernel (dense baseline / training path).
+
+Standard online-softmax tiling: grid = (q_blocks, kv_blocks); the kv axis is
+the innermost (sequential) grid dimension so the running (m, l, acc) state
+lives in VMEM scratch across kv steps.  Causal masking skips whole blocks
+above the diagonal via ``pl.when``.  f32 accumulation, bf16-or-f32 inputs.
+
+VMEM working set per step: q[Bq,d] + k[Bk,d] + v[Bk,dv] + acc[Bq,dv] +
+scores[Bq,Bk] — with the default Bq=Bk=128, d=128 that is ~0.4 MB, far under
+the ~16 MB v5e VMEM budget; MXU dims are 128-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,            # inputs
+    out_ref,                        # output
+    m_ref, l_ref, acc_ref,          # scratch
+    *,
+    sm_scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    q_offset: int,
+):
+    qi = pl.program_id(0)
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q + q_offset
+    k_start = ki * block_k
+    # Causal: block live iff its first column can be visible to its last row.
+    live = (k_start <= q_start + block_q - 1) if causal else (ki >= 0)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * sm_scale                                     # [Bq, Bk]
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        v = v_ref[...].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        out_ref[...] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "sm_scale", "interpret"),
+)
+def flash_attention_single(
+    q: jax.Array,        # [Sq, d]
+    k: jax.Array,        # [Sk, d]
+    v: jax.Array,        # [Sk, dv]
+    causal: bool = False,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    Sq, d = q.shape
+    Sk, dv = v.shape
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    if sm_scale is None:
+        sm_scale = 1.0 / d ** 0.5
+    grid = (Sq // block_q, Sk // block_k)
+    kernel = functools.partial(
+        _flash_kernel,
+        sm_scale=sm_scale,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        q_offset=Sk - Sq if causal else 0,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda qi, ki: (qi, 0)),
+            pl.BlockSpec((block_k, d), lambda qi, ki: (ki, 0)),
+            pl.BlockSpec((block_k, dv), lambda qi, ki: (ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, dv), lambda qi, ki: (qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((Sq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,75 @@
+"""Public jit'd attention dispatch — the single entry point models use.
+
+``attention(..., impl=...)`` selects between:
+
+* ``"xla"``               — jnp reference (used by the distributed dry-run /
+                            training graph: Pallas TPU kernels cannot lower
+                            on the CPU backend of this container).
+* ``"flash"``             — fused dense Pallas kernel (interpret on CPU).
+* ``"bitstopper"``        — fused BESF+LATS Pallas kernel (interpret on CPU).
+* ``"bitstopper_xla"``    — block-granular semantic model in pure jnp; same
+                            outputs as the kernel, runs/lowrs everywhere.
+                            This is what serving uses for sparsity stats on
+                            CPU and what the dry-run lowers for TPU graphs.
+
+On a real TPU deployment ``interpret=False`` flips the Pallas kernels to
+compiled mode; nothing else changes.
+"""
+
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.besf import BitStopperConfig
+from repro.kernels import ref as ref_lib
+from repro.kernels.bitstopper_qk import bitstopper_attention_kernel
+from repro.kernels.flash_attention import flash_attention_single
+
+AttnImpl = Literal["xla", "flash", "bitstopper", "bitstopper_xla"]
+
+
+def attention(
+    q: jax.Array,                     # [..., Sq, d]
+    k: jax.Array,                     # [..., Sk, d]
+    v: jax.Array,                     # [..., Sk, dv]
+    impl: AttnImpl = "xla",
+    causal: bool = False,
+    cfg: BitStopperConfig | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Attention output only (stats-carrying variants live in core/)."""
+    if impl == "xla":
+        return ref_lib.flash_attention(q, k, v, causal=causal)
+    if impl == "flash":
+        def single(q2, k2, v2):
+            return flash_attention_single(
+                q2, k2, v2, causal=causal,
+                block_q=min(block_q, q2.shape[0]),
+                block_k=min(block_k, k2.shape[0]),
+                interpret=interpret,
+            )
+        if q.ndim == 2:
+            return single(q, k, v)
+        flat = lambda x: x.reshape((-1,) + x.shape[-2:])
+        out = jax.vmap(single)(flat(q), flat(k), flat(v))
+        return out.reshape(q.shape[:-2] + out.shape[1:])
+    cfg = cfg or BitStopperConfig()
+    if impl == "bitstopper":
+        res = bitstopper_attention_kernel(
+            q, k, v, cfg=cfg, block_q=block_q, block_k=block_k,
+            causal=causal, interpret=interpret,
+        )
+        return res.out
+    if impl == "bitstopper_xla":
+        res = ref_lib.bitstopper_attention(
+            q, k, v, cfg=cfg,
+            block_q=min(block_q, q.shape[-2]), block_k=min(block_k, k.shape[-2]),
+            causal=causal,
+        )
+        return res.out
+    raise ValueError(f"unknown attention impl: {impl}")

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert allclose against the
+function of the same name here.  These are *definitional* implementations —
+no tiling, no early exit — so their correctness is self-evident.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.block_adaptation import block_bitstopper_attention
+from repro.core.besf import BitStopperConfig, besf_attention
+
+NEG_INF = -1e30
+
+
+@partial(jax.jit, static_argnames=("causal",))
+def flash_attention(q, k, v, causal: bool = False, sm_scale: float | None = None):
+    """Dense softmax attention: the oracle for kernels/flash_attention.py."""
+    d = q.shape[-1]
+    if sm_scale is None:
+        sm_scale = 1.0 / d ** 0.5
+    logits = jnp.einsum("...qd,...kd->...qk", q, k).astype(jnp.float32) * sm_scale
+    if causal:
+        Sq, Sk = q.shape[-2], k.shape[-2]
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+def bitstopper_attention(q, k, v, cfg: BitStopperConfig = BitStopperConfig(),
+                         block_q: int = 128, block_k: int = 128,
+                         causal: bool = False):
+    """Block-granular streaming BitStopper — the oracle for
+    kernels/bitstopper_qk.py (identical semantics incl. prefix-max LATS)."""
+    return block_bitstopper_attention(
+        q, k, v, cfg=cfg, block_q=block_q, block_k=block_k, causal=causal
+    )
+
+
+def bitstopper_reference(q, k, v, cfg: BitStopperConfig = BitStopperConfig(),
+                         causal: bool = False):
+    """Paper-faithful per-token BESF (global-max LATS) — the algorithmic
+    ground truth the block variant's survivors must be a superset of."""
+    return besf_attention(q, k, v, cfg=cfg, causal=causal)
+
+
+@partial(jax.jit, static_argnames=("causal",))
+def decode_attention(q, k, v, causal: bool = False):
+    """Single-query decode attention oracle (Sq == 1 specialization)."""
+    return flash_attention(q, k, v, causal=False)

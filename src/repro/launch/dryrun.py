@@ -1,0 +1,339 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver builds the production mesh (512 placeholder host
+devices), constructs ShapeDtypeStruct stand-ins for every input (weights,
+optimizer state, KV caches, token batches — nothing is allocated), jits the
+step with the sharding rules, and runs ``.lower().compile()``.  Success
+proves the distribution config is coherent: every sharding divides, every
+collective is supported, and the per-device memory fits.
+
+Outputs per cell (JSON): memory_analysis numbers, cost_analysis FLOPs/bytes
+(NB: per-DEVICE under SPMD), and per-opcode collective bytes parsed from
+the compiled HLO — the inputs to launch/roofline.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-12b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.configs.shapes import applicable_shapes
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.sharding.api import use_rules
+from repro.sharding.rules import cache_pspecs, make_rules
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins (weak-type-correct, shardable,
+# no device allocation)
+# ---------------------------------------------------------------------------
+
+
+def _specify(tree, pspec_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda leaf, spec: jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, spec)),
+        tree, pspec_tree)
+
+
+N_PATCHES = 576      # stubbed anyres vision frontend: precomputed embeddings
+
+
+def _batch_specs(cfg: ModelConfig, shape, rules):
+    """Token batch (plus patch embeddings for VLM archs) as specs."""
+    B = shape.global_batch
+    if cfg.frontend == "vision":
+        S_text = shape.seq_len - N_PATCHES
+        return {
+            "tokens": jax.ShapeDtypeStruct(
+                (B, S_text), jnp.int32,
+                sharding=rules.sharding(("batch", None), (B, S_text))),
+            "patches": jax.ShapeDtypeStruct(
+                (B, N_PATCHES, cfg.d_model), jnp.bfloat16,
+                sharding=rules.sharding(("batch", None, None),
+                                        (B, N_PATCHES, cfg.d_model))),
+        }
+    return jax.ShapeDtypeStruct(
+        (B, shape.seq_len), jnp.int32,
+        sharding=rules.sharding(("batch", None), (B, shape.seq_len)))
+
+
+def train_cell(cfg: ModelConfig, shape, mesh, rules, microbatches=1,
+               remat="full", moment_dtype="float32"):
+    # Baseline train dry-runs: bf16 activations + full per-layer remat
+    # (hillclimbs relax these per cell — see EXPERIMENTS.md §Perf).
+    from repro.train.optimizer import AdamWConfig
+    cfg = cfg.replace(remat=remat, dtype="bfloat16")
+    tcfg = TrainConfig(microbatches=microbatches,
+                       optimizer=AdamWConfig(moment_dtype=moment_dtype))
+    state_like = jax.eval_shape(
+        lambda k: init_train_state(k, cfg, tcfg), jax.random.PRNGKey(0))
+    state_specs = _specify(state_like, rules.tree_pspecs(state_like), mesh)
+    batch = _batch_specs(cfg, shape, rules)
+    step = make_train_step(cfg, tcfg)
+    return step, (state_specs, batch)
+
+
+def prefill_cell(cfg: ModelConfig, shape, mesh, rules):
+    cfg = cfg.replace(dtype="bfloat16")
+    params_like = jax.eval_shape(
+        lambda k: T.init_model(k, cfg), jax.random.PRNGKey(0))
+    param_specs = _specify(params_like, rules.tree_pspecs(params_like), mesh)
+    batch = _batch_specs(cfg, shape, rules)
+
+    def prefill_step(params, batch):
+        """Prefill returns ONLY the last-position logits (a full [B,S,V]
+        materialization would be absurd for 129k vocabs)."""
+        from repro.models import layers as Lyr
+        from repro.sharding.api import constrain
+        tokens = batch["tokens"] if isinstance(batch, dict) else batch
+        x = Lyr.embed(params["embed"], tokens).astype(cfg.activation_dtype)
+        if isinstance(batch, dict):
+            x = jnp.concatenate(
+                [batch["patches"].astype(x.dtype), x], axis=1)
+        x = constrain(x, "batch", "seq", "embed")
+        h, _, _ = T._run_segments(params, x, jnp.arange(x.shape[1]), cfg)
+        hl = Lyr.norm(params["final_norm"], h[:, -1])
+        if cfg.tie_embeddings:
+            return Lyr.unembed(params["embed"], hl)
+        return Lyr.linear(params["unembed"], hl)
+
+    return prefill_step, (param_specs, batch)
+
+
+def decode_cell(cfg: ModelConfig, shape, mesh, rules):
+    """One new token against a KV cache of seq_len (length = seq_len - 1)."""
+    cfg = cfg.replace(dtype="bfloat16")
+    params_like = jax.eval_shape(
+        lambda k: T.init_model(k, cfg), jax.random.PRNGKey(0))
+    param_specs = _specify(params_like, rules.tree_pspecs(params_like), mesh)
+    cache_dtype = (jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    caches_like = jax.eval_shape(
+        lambda: T.init_caches(cfg, shape.global_batch, shape.seq_len,
+                              cache_dtype))
+    cache_specs = _specify(caches_like, cache_pspecs(rules, caches_like), mesh)
+    token = jax.ShapeDtypeStruct(
+        (shape.global_batch, 1), jnp.int32,
+        sharding=rules.sharding(("batch", None), (shape.global_batch, 1)))
+    pos = shape.seq_len - 1
+
+    def serve_step(params, token, caches):
+        logits, new_caches, _ = T.forward(
+            params, token, cfg, caches=caches,
+            positions=jnp.full((1,), pos, jnp.int32))
+        return logits[:, -1], new_caches
+
+    return serve_step, (param_specs, token, cache_specs)
+
+
+def input_specs(arch, shape_name: str, mesh, rules, **kw):
+    """Public entry: (step_fn, specs tuple) for one cell.
+    ``arch`` may be a name or an already-overridden ModelConfig."""
+    cfg = arch if isinstance(arch, ModelConfig) else get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_cell(cfg, shape, mesh, rules, **kw)
+    if shape.kind == "prefill":
+        return prefill_cell(cfg, shape, mesh, rules)
+    return decode_cell(cfg, shape, mesh, rules)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]+|pred)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+
+def _first_shape_bytes(text: str) -> int:
+    """Bytes of the first shape literal in an HLO line (tuple → sum all)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text.split(" ", 1)[0] + " " +
+                                text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+        break
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum output bytes per collective opcode from per-device HLO.
+
+    Ring-transfer approximations applied by the roofline (not here):
+    all-reduce moves ~2× its bytes; others ~1×.
+    """
+    out: dict[str, float] = {op: 0.0 for op in _COLL_OPS}
+    counts: dict[str, int] = {op: 0 for op in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        for op in _COLL_OPS:
+            # match " all-reduce(" or " all-gather(" as the opcode position
+            if f" {op}(" in line or f"{op}-start(" in line:
+                m = _DEF_RE.match(line)
+                if not m:
+                    continue
+                rhs = m.group(2)
+                out[op] += _first_shape_bytes(rhs)
+                counts[op] += 1
+                break
+    res = {f"{op}_bytes": v for op, v in out.items()}
+    res.update({f"{op}_count": float(counts[op]) for op in _COLL_OPS})
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+
+# Per-arch default microbatch counts for train_4k (65536 tokens/device on
+# the single-pod mesh): sized so remat checkpoints (~d_model×2B/token/layer)
+# fit the 16 GB v5e budget.  Overridable with --microbatches.
+TRAIN_MICROBATCHES = {
+    "stablelm-12b": 4, "qwen2.5-14b": 4, "granite-20b": 8,
+    "llava-next-34b": 8, "deepseek-v3-671b": 8, "musicgen-medium": 2,
+    "qwen2-moe-a2.7b": 2, "recurrentgemma-2b": 2,
+}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             microbatches: int | None = None,
+             extra_rules_kw: dict | None = None,
+             cfg_overrides: dict | None = None,
+             remat: str = "full",
+             moment_dtype: str = "float32"):
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh, n_routed=cfg.n_routed,
+                       **(extra_rules_kw or {}))
+    if microbatches is None:
+        microbatches = TRAIN_MICROBATCHES.get(arch, 1)
+    kw = {}
+    if SHAPES[shape_name].kind == "train":
+        kw = {"microbatches": microbatches, "remat": remat,
+              "moment_dtype": moment_dtype}
+    t0 = time.time()
+    with use_rules(rules):
+        step, specs = input_specs(cfg, shape_name, mesh, rules, **kw)
+        lowered = jax.jit(step).lower(*specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo_text = compiled.as_text()
+        coll = parse_collective_bytes(hlo_text)
+        # Trip-count-aware accounting (XLA's cost_analysis counts while
+        # bodies once — wrong by ~layers× under scan; see hlo_cost.py).
+        from repro.launch.hlo_cost import analyze_hlo, collective_bytes_dict
+        tc = analyze_hlo(hlo_text)
+        coll_tc = {f"tc_{k}": v
+                   for k, v in collective_bytes_dict(tc).items()}
+
+    n_dev = mesh.size
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        # per-device numbers (SPMD module)
+        "arg_bytes": mem.argument_size_in_bytes,
+        "out_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "peak_bytes": (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                       + mem.temp_size_in_bytes - mem.alias_size_in_bytes),
+        "hlo_flops": cost.get("flops", 0.0),
+        "hlo_bytes": cost.get("bytes accessed", 0.0),
+        # trip-count-aware (authoritative for the roofline)
+        "tc_flops": tc.flops,
+        "tc_bytes": tc.bytes,
+        **coll_tc,
+        **coll,
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            if arch == "paper-opt1.3b":
+                continue
+            cfg = get_config(arch)
+            for s in applicable_shapes(cfg):
+                cells.append((arch, s.name))
+    else:
+        cells.append((args.arch, args.shape))
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+            try:
+                r = run_cell(arch, shape, mp, args.microbatches)
+                print(f"[dryrun] OK   {tag}: peak {r['peak_bytes']/2**30:.2f} "
+                      f"GiB/dev, {r['hlo_flops']:.3e} FLOP/dev, "
+                      f"compile {r['compile_s']:.0f}s")
+            except Exception as e:
+                r = {"arch": arch, "shape": shape,
+                     "mesh": "2x16x16" if mp else "16x16", "ok": False,
+                     "error": f"{type(e).__name__}: {e}",
+                     "traceback": traceback.format_exc()[-2000:]}
+                print(f"[dryrun] FAIL {tag}: {type(e).__name__}: {e}")
+            results.append(r)
+            if args.out:
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"[dryrun] {n_ok}/{len(results)} cells compiled")
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

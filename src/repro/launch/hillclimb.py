@@ -1,0 +1,188 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbs: three cells, hypothesis → change → re-lower → record.
+
+Cells (selection rationale in EXPERIMENTS.md §Perf):
+  A. stablelm-12b × train_4k     — worst roofline fraction among trains
+  B. deepseek-v3-671b × decode_32k — most collective-bound
+  C. musicgen-medium × decode_32k  — most representative of the paper's
+                                     technique (MHA decode, KV-read-bound)
+
+Each iteration re-runs the REAL dry-run (lower+compile+tc-analysis) and
+appends a row to results/hillclimb.json.  Analytic (non-compiled) deltas —
+e.g. BitStopper plane-skipping applied to measured K/V traffic — are
+explicitly labeled "analytic".
+"""
+
+import json
+
+from repro.launch.dryrun import run_cell
+from repro.launch.roofline import roofline_terms
+
+OUT = "results/hillclimb.json"
+
+
+def record(rows, cell, label, hypothesis, result, note=""):
+    row = {"cell": cell, "iter": label, "hypothesis": hypothesis, **result}
+    if note:
+        row["note"] = note
+    rows.append(row)
+    r = roofline_terms(result) if result.get("ok") else {}
+    print(f"[hc] {cell} :: {label}: "
+          + (f"comp {r.get('t_compute_s', 0):.2e} mem {r.get('t_memory_s', 0):.2e} "
+               f"coll {r.get('t_collective_s', 0):.2e} "
+               f"roofl {100 * r.get('roofline_fraction', 0):.1f}%"
+             if result.get("ok") else f"FAILED {result.get('error')}"))
+    os.makedirs("results", exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+
+
+def safe(fn, **kw):
+    try:
+        return fn(**kw)
+    except Exception as e:  # record failures as data, keep climbing
+        import traceback
+        return {"ok": False, "error": str(e),
+                "traceback": traceback.format_exc()[-1500:]}
+
+
+def cell_a(rows):
+    cell = "stablelm-12b x train_4k"
+    base = safe(run_cell, arch="stablelm-12b", shape_name="train_4k",
+                multi_pod=False)
+    record(rows, cell, "baseline", "paper-faithful substrate: f32 params, "
+           "full remat, chunk 512", base)
+
+    it1 = safe(run_cell, arch="stablelm-12b", shape_name="train_4k",
+               multi_pod=False,
+               cfg_overrides={"param_dtype": "bfloat16"},
+               moment_dtype="bfloat16")
+    record(rows, cell, "it1-bf16-params-moments",
+           "weights+optimizer are ~40% of HBM traffic at f32; bf16 halves "
+           "them -> predict memory term -20-25%", it1)
+
+    it2 = safe(run_cell, arch="stablelm-12b", shape_name="train_4k",
+               multi_pod=False,
+               cfg_overrides={"param_dtype": "bfloat16"},
+               moment_dtype="bfloat16", remat="dots")
+    record(rows, cell, "it2-remat-dots",
+           "full remat recomputes the whole layer (+~33% FLOPs); saving dot "
+           "outputs trades bytes for FLOPs -> predict compute -25%, "
+           "memory +10-15%", it2)
+
+    it3 = safe(run_cell, arch="stablelm-12b", shape_name="train_4k",
+               multi_pod=False,
+               cfg_overrides={"param_dtype": "bfloat16", "attn_chunk": 1024},
+               moment_dtype="bfloat16")
+    record(rows, cell, "it3-chunk-1024",
+           "attention tile traffic ~ nq*Sk*d per layer; doubling the chunk "
+           "halves the number of K/V passes -> predict memory term -10%",
+           it3)
+
+    it4 = safe(run_cell, arch="stablelm-12b", shape_name="train_4k",
+               multi_pod=False,
+               cfg_overrides={"param_dtype": "bfloat16", "attn_chunk": 1024},
+               moment_dtype="bfloat16", microbatches=8)
+    record(rows, cell, "it4-microbatch-8",
+           "8 microbatches halve live activations (15->8 GiB predicted) at "
+           "the cost of 2x weight re-gathers -> memory term up slightly, "
+           "peak memory down", it4)
+
+
+def cell_b(rows):
+    cell = "deepseek-v3-671b x decode_32k"
+    base = safe(run_cell, arch="deepseek-v3-671b", shape_name="decode_32k",
+                multi_pod=False)
+    record(rows, cell, "baseline",
+           "train-layout experts (EP over model, H FSDP over data): decode "
+           "re-gathers 1.3 GiB of expert weights per layer", base)
+
+    it1 = safe(run_cell, arch="deepseek-v3-671b", shape_name="decode_32k",
+               multi_pod=False,
+               cfg_overrides={"moe_resident": True},
+               extra_rules_kw={"moe_resident": True})
+    record(rows, cell, "it1-resident-experts",
+           "256 experts / 256 chips = 1 resident expert per device; gather "
+           "the 128-token decode batch (tiny) instead of the weights -> "
+           "predict collective term -95% (3.3s -> ~0.15s)", it1)
+
+    it2 = safe(run_cell, arch="deepseek-v3-671b", shape_name="decode_32k",
+               multi_pod=False,
+               cfg_overrides={"moe_resident": True, "param_dtype": "bfloat16"},
+               extra_rules_kw={"moe_resident": True})
+    record(rows, cell, "it2-bf16-weights",
+           "remaining memory term is dominated by reading resident weights "
+           "once per step; bf16 halves it", it2)
+
+
+def cell_c(rows):
+    cell = "musicgen-medium x decode_32k"
+    base = safe(run_cell, arch="musicgen-medium", shape_name="decode_32k",
+                multi_pod=False)
+    record(rows, cell, "baseline",
+           "dense decode: every step reads the whole 32k x 24-head KV "
+           "cache (paper's 'Baseline' accelerator).  NB: measured bytes "
+           "include a ~3.5x CPU-backend inflation (bf16-dot legalization "
+           "carries the cache in f32 AND bf16 through the layer scan + "
+           "layout copies) that does not exist on TPU", base)
+
+    it1 = safe(run_cell, arch="musicgen-medium", shape_name="decode_32k",
+               multi_pod=False)
+    record(rows, cell, "it1-inplace-cache-update",
+           "GSPMD decomposes a sharded-axis cache DUS into a masked SELECT "
+           "over the whole local cache; the shard_map in-place local "
+           "update (models/attention._update_cache) writes one slot",
+           it1, note="change is live in _update_cache; on this CPU HLO the "
+                     "saving is masked by the f32/bf16 double-carry")
+
+    if base.get("ok"):
+        import numpy as np
+        from benchmarks.common import llm_like_qkv
+        from repro.core.block_adaptation import block_bitstopper_attention
+        from repro.core.besf import BitStopperConfig
+
+        # TPU-native floor: per device per step, KV reads + weight reads.
+        L, B, T, H, D = 48, 8, 2048, 24, 64     # T = 32768 / model 16
+        kv_bytes = L * B * T * H * D * 2 * 2    # K+V, bf16
+        w_bytes = 1.36e9 * 4 / 256              # f32 params, fully sharded
+        tpu_floor = dict(base)
+        tpu_floor["tc_bytes"] = kv_bytes + w_bytes + 2e9  # +logits/misc
+        record(rows, cell, "it2-tpu-native-floor(analytic)",
+               "strip CPU-only legalization traffic: TPU keeps ONE bf16 "
+               "cache copy and dots read it in place -> bytes = KV "
+               f"({kv_bytes/1e9:.1f} GB) + weights + logits", tpu_floor,
+               note="analytic: removes CPU bf16-dot legalization artifacts")
+
+        q, k, v = llm_like_qkv(3, 1024, d=64, Sq=8)
+        res = block_bitstopper_attention(
+            q, k, v, cfg=BitStopperConfig(alpha=0.6), block_q=8, block_k=64)
+        plane_frac = float(np.asarray(res.stats.rounds_per_block).mean()) / 12
+        alive_frac = float(np.asarray(res.stats.block_alive).mean())
+        bs = dict(base)
+        # fused sparse kernel: logits/softmax tiles live in VMEM (the 2 GB
+        # of XLA-path intermediates disappears along with the skipped KV)
+        bs["tc_bytes"] = (w_bytes + 0.1e9
+                          + kv_bytes / 2 * (plane_frac * 12 / 16)  # K planes
+                          + kv_bytes / 2 * alive_frac)             # live V
+        record(rows, cell, "it3-bitstopper-kv(analytic)",
+               f"the paper's technique on the floor: measured block "
+               f"sparsity on LLM-like scores gives plane_frac="
+               f"{plane_frac:.2f} (K planes actually fetched) and "
+               f"alive_frac={alive_frac:.2f} (V blocks fetched); K x "
+               f"plane_frac x 12/16, V x alive_frac", bs,
+               note="analytic: data-dependent DMA skip modeled on measured "
+                    "sparsity; realized by kernels/bitstopper_qk.py on TPU")
+
+
+def main():
+    rows = []
+    cell_a(rows)
+    cell_b(rows)
+    cell_c(rows)
+    print(f"[hc] wrote {OUT} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — smoke tests keep their single CPU device;
+only launch/dryrun.py (which forces 512 host devices before any jax import)
+ever builds the full meshes.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips; "pod" is the outer
+    data axis (hierarchical gradient reduction: intra-pod on "data" over
+    ICI, inter-pod on "pod" over DCN)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2):
+    """Small mesh for subprocess sharding tests (8 forced host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,149 @@
+"""Three-term roofline from the dry-run's compiled artifacts.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective term = collective_bytes_per_device (ring-adjusted) / link_bw
+
+All inputs come from the SPMD per-device module (cost_analysis + HLO
+collective parsing — see launch/dryrun.py), so no division by chip count
+is applied here.  Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (constants from the assignment).
+
+Also reports MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) against the
+compiled HLO FLOPs — the "useful-compute" ratio that catches remat and
+dispatch waste — plus the dominant term and what would move it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+# ring all-reduce moves ~2 x bytes; others ~1 x
+_COLL_FACTOR = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+
+def param_counts(arch: str) -> dict:
+    """Total and active (per-token matmul-visible) parameter counts."""
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    import jax
+
+    cfg = get_config(arch)
+    params = jax.eval_shape(lambda k: T.init_model(k, cfg),
+                            jax.random.PRNGKey(0))
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    total = 0
+    routed = 0
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in kp)
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "/moe/wi" in path or "/moe/wo" in path:
+            routed += n
+    active = total - routed
+    if cfg.n_routed:
+        active += routed * cfg.top_k // cfg.n_routed
+    # embedding table does no per-token matmul except the (tied) LM head —
+    # keep it in (the head matmul is real compute).
+    return {"total": total, "active": active}
+
+
+def model_flops(arch: str, shape_kind: str, seq_len: int, global_batch: int,
+                devices: int) -> float:
+    """6·N_active·D per device (training); 2·N_active·D for fwd-only."""
+    pc = param_counts(arch)
+    tokens = seq_len * global_batch if shape_kind != "decode" else global_batch
+    mult = 6.0 if shape_kind == "train" else 2.0
+    return mult * pc["active"] * tokens / devices
+
+
+def roofline_terms(cell: dict) -> dict:
+    """cell: one launch/dryrun.py result row.
+
+    Uses the trip-count-aware tc_* numbers (hlo_cost.py); the naive
+    cost_analysis values are kept in the JSON for reference only."""
+    flops = cell.get("tc_flops", cell["hlo_flops"])
+    bytes_ = cell.get("tc_bytes", cell["hlo_bytes"])
+    t_comp = flops / PEAK_FLOPS
+    t_mem = bytes_ / HBM_BW
+    coll = 0.0
+    for op, f in _COLL_FACTOR.items():
+        coll += f * cell.get(f"tc_{op}_bytes", cell.get(f"{op}_bytes", 0.0))
+    t_coll = coll / LINK_BW
+
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # roofline fraction: useful model compute vs the time the dominant
+    # term pins the step at.
+    from repro.configs import SHAPES
+    shape = SHAPES[cell["shape"]]
+    mf = model_flops(cell["arch"], shape.kind, shape.seq_len,
+                     shape.global_batch, cell["devices"])
+    t_ideal = mf / PEAK_FLOPS
+    frac = t_ideal / bound if bound > 0 else 0.0
+    return {
+        **{f"t_{k}_s": v for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "useful_flops_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": frac,
+    }
+
+
+def analyze(results_path: str, out_path: str | None = None):
+    with open(results_path) as f:
+        cells = json.load(f)
+    rows = []
+    for cell in cells:
+        if not cell.get("ok"):
+            rows.append(dict(cell))
+            continue
+        rows.append({**cell, **roofline_terms(cell)})
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def print_table(rows):
+    hdr = (f"{'arch':<20} {'shape':<12} {'comp(s)':>9} {'mem(s)':>9} "
+           f"{'coll(s)':>9} {'dom':>6} {'useful':>7} {'roofl%':>7} "
+           f"{'GiB/dev':>8}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if not r.get("ok"):
+            print(f"{r['arch']:<20} {r['shape']:<12} FAILED: "
+                  f"{r.get('error', '?')[:60]}")
+            continue
+        print(f"{r['arch']:<20} {r['shape']:<12} "
+              f"{r['t_compute_s']:>9.2e} {r['t_memory_s']:>9.2e} "
+              f"{r['t_collective_s']:>9.2e} {r['dominant'][:6]:>6} "
+              f"{r['useful_flops_ratio']:>7.2f} "
+              f"{100 * r['roofline_fraction']:>6.1f}% "
+              f"{r['peak_bytes'] / 2**30:>8.2f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("results", help="dryrun JSON")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = analyze(args.results, args.out)
+    print_table(rows)
+
+
+if __name__ == "__main__":
+    main()

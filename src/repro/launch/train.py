@@ -1,0 +1,60 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it runs reduced configs end-to-end (the real thing);
+on a TPU slice the same entry point builds the production mesh and rules.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, reduced_config
+from repro.data import DataConfig
+from repro.sharding.rules import make_rules
+from repro.train.train_step import TrainConfig
+from repro.train.trainer import Trainer, TrainerConfig
+from repro.train.optimizer import AdamWConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--mesh", choices=["none", "production"], default="none")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", choices=["none", "int8_ef"],
+                    default="none")
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr=args.lr),
+        total_steps=args.steps, warmup_steps=max(args.steps // 10, 1),
+        microbatches=args.microbatches,
+        grad_compression=args.grad_compression,
+    )
+    rules = None
+    if args.mesh == "production":
+        from repro.launch.mesh import make_production_mesh
+        rules = make_rules(make_production_mesh(), n_routed=cfg.n_routed)
+    run = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                        ckpt_dir=args.ckpt_dir)
+    data = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch)
+    trainer = Trainer(cfg, tcfg, run, rules=rules, data_cfg=data)
+    trainer.train()
+    print(f"[train] done: {args.steps} steps of {cfg.name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,441 @@
+"""Multi-head attention: MHA / GQA / MQA, RoPE, sliding windows, KV cache.
+
+The *score path* is pluggable (``impl``):
+
+* ``"xla"``            — chunked online-softmax attention in pure jnp (the
+                         training / dry-run path; GSPMD-partitionable, peak
+                         memory O(chunk^2) instead of O(S^2)).
+* ``"bitstopper_xla"`` — the paper's predictor-free dynamic-sparse attention
+                         (block-granular semantic model; serving path).
+* ``"bitstopper"``     — fused Pallas kernel (interpret on CPU, compiled on TPU).
+* ``"flash"``          — dense fused Pallas kernel.
+
+GQA is computed *grouped* (no KV repetition) on the xla path; the BitStopper
+paths repeat KV heads since the sparsity decision is per query head (each
+query row owns its LATS threshold, exactly like a PE lane in the paper).
+
+KV cache: slots carry their absolute position (``pos``); sliding-window
+layers may use a **ring buffer** of ``window`` slots so ``long_500k`` decode
+stays O(window) in memory.  Invalid slots hold the sentinel position 2^30,
+which every causal/window test rejects.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.besf import BitStopperConfig
+from repro.kernels import ops as kops
+from repro.models import layers as L
+from repro.sharding.api import constrain
+
+NEG_INF = -1e30
+POS_SENTINEL = 2 ** 30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    window: int | None = None          # sliding-window size (None = global)
+    causal: bool = True
+    impl: str = "xla"
+    bitstopper: BitStopperConfig = BitStopperConfig()
+    chunk_q: int = 512
+    chunk_k: int = 512
+
+
+def init_attention(key, cfg: AttnConfig, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": L.init_linear(kq, cfg.d_model, (cfg.n_heads, cfg.head_dim),
+                            cfg.qkv_bias, dtype),
+        "wk": L.init_linear(kk, cfg.d_model, (cfg.n_kv_heads, cfg.head_dim),
+                            cfg.qkv_bias, dtype),
+        "wv": L.init_linear(kv, cfg.d_model, (cfg.n_kv_heads, cfg.head_dim),
+                            cfg.qkv_bias, dtype),
+        "wo": L.init_linear(ko, cfg.n_heads * cfg.head_dim, cfg.d_model,
+                            False, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (jnp "flash"), grouped GQA.
+# ---------------------------------------------------------------------------
+
+
+def _mask_block(q_pos, k_pos, causal: bool, window: int | None):
+    """[Bq, Bk] bool validity from absolute positions."""
+    m = (k_pos[None, :] < POS_SENTINEL) & (q_pos[:, None] >= 0)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def _fwd_impl(q, k, v, q_pos, k_pos, causal, window, cq, ck):
+    """Padded-shape forward.  q [B,Sq,Hkv,G,D] grouped; returns (out, lse).
+
+    lse[b,h,g,i] = m_i + log l_i — the softmax normalizer saved for the
+    manual backward (flash-attention style)."""
+    B, Sq, Hkv, G, D = q.shape
+    Sk, Dv = k.shape[1], v.shape[-1]
+    nq, nk = Sq // cq, Sk // ck
+    sm_scale = 1.0 / D ** 0.5
+
+    kb = k.reshape(B, nk, ck, Hkv, D)
+    vb = v.reshape(B, nk, ck, Hkv, Dv)
+    qp = q_pos.reshape(nq, cq)
+    kp = k_pos.reshape(nk, ck)
+
+    def q_chunk(qi_chunk, qpos):
+        def kv_step(carry, inp):
+            m_run, l_run, acc = carry
+            kc, vc, kpos = inp
+            logits = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qi_chunk.astype(jnp.float32),
+                kc.astype(jnp.float32)) * sm_scale
+            mask = _mask_block(qpos, kpos, causal, window)
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.where(m_run == NEG_INF, 0.0, jnp.exp(m_run - m_new))
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            upd = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + upd
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, Hkv, G, cq), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hkv, G, cq), jnp.float32),
+            jnp.zeros((B, Hkv, G, cq, Dv), jnp.float32),
+        )
+        (m_run, l_run, acc), _ = jax.lax.scan(
+            kv_step, init, (kb.swapaxes(0, 1), vb.swapaxes(0, 1), kp))
+        out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+        lse = jnp.where(l_run > 0, m_run + jnp.log(jnp.maximum(l_run, 1e-30)),
+                        0.0)
+        return jnp.einsum("bhgqd->bqhgd", out), lse      # lse [B,Hkv,G,cq]
+
+    qg = q.reshape(B, nq, cq, Hkv, G, D)
+    out, lse = jax.lax.map(lambda inp: q_chunk(*inp),
+                           (qg.swapaxes(0, 1), qp))
+    out = out.swapaxes(0, 1).reshape(B, Sq, Hkv, G, Dv)
+    lse = jnp.moveaxis(lse, 0, 3).reshape(B, Hkv, G, Sq)
+    return out, lse
+
+
+def _make_chunked_attn(causal, window, cq, ck):
+    """custom_vjp chunked attention with a MANUAL flash-style backward.
+
+    Autodiff through the forward scans would save per-(q,kv)-tile softmax
+    residuals — measured ~13 GB per layer at train_4k scale.  The manual
+    backward recomputes each tile from (q, k, v, lse): residual memory is
+    O(S·D), all tiles transient.
+    """
+
+    @jax.custom_vjp
+    def attn(q, k, v, q_pos, k_pos):
+        return _fwd_impl(q, k, v, q_pos, k_pos, causal, window, cq, ck)[0]
+
+    def fwd(q, k, v, q_pos, k_pos):
+        out, lse = _fwd_impl(q, k, v, q_pos, k_pos, causal, window, cq, ck)
+        return out, (q, k, v, q_pos, k_pos, out, lse)
+
+    def bwd(res, dout):
+        q, k, v, q_pos, k_pos, out, lse = res
+        B, Sq, Hkv, G, D = q.shape
+        Sk, Dv = k.shape[1], v.shape[-1]
+        nq, nk = Sq // cq, Sk // ck
+        sm_scale = 1.0 / D ** 0.5
+
+        dout = dout.astype(jnp.float32)
+        # Per-row correction term D_i = sum_d dout_i · out_i.
+        delta = jnp.einsum("bqhgd,bqhgd->bhgq", dout,
+                           out.astype(jnp.float32))       # [B,Hkv,G,Sq]
+
+        qg = q.reshape(B, nq, cq, Hkv, G, D).astype(jnp.float32)
+        dog = dout.reshape(B, nq, cq, Hkv, G, Dv)
+        kb = k.reshape(B, nk, ck, Hkv, D).astype(jnp.float32)
+        vb = v.reshape(B, nk, ck, Hkv, Dv).astype(jnp.float32)
+        lse_c = lse.reshape(B, Hkv, G, nq, cq)
+        del_c = delta.reshape(B, Hkv, G, nq, cq)
+        qp = q_pos.reshape(nq, cq)
+        kp = k_pos.reshape(nk, ck)
+
+        # Outer scan over KV chunks: emits (dk, dv) per chunk, carries the
+        # full dq accumulator (O(S·D) f32).
+        def kv_step(dq_acc, inp):
+            kc, vc, kpos = inp                            # [B,ck,Hkv,D], ...
+
+            def q_step(carry, qinp):
+                dk_c, dv_c = carry
+                qi, doi, lsei, deli, qpos = qinp
+                logits = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kc) * sm_scale
+                mask = _mask_block(qpos, kpos, causal, window)
+                p = jnp.where(mask[None, None, None],
+                              jnp.exp(logits - lsei[..., None]), 0.0)
+                dv_c = dv_c + jnp.einsum("bhgqk,bqhgd->bkhd", p, doi)
+                dp = jnp.einsum("bqhgd,bkhd->bhgqk", doi, vc)
+                ds = p * (dp - deli[..., None]) * sm_scale
+                dq_i = jnp.einsum("bhgqk,bkhd->bqhgd", ds, kc)
+                dk_c = dk_c + jnp.einsum("bhgqk,bqhgd->bkhd", ds, qi)
+                return (dk_c, dv_c), dq_i
+
+            init = (jnp.zeros((B, ck, Hkv, D), jnp.float32),
+                    jnp.zeros((B, ck, Hkv, Dv), jnp.float32))
+            (dk_c, dv_c), dq_parts = jax.lax.scan(
+                q_step, init,
+                (qg.swapaxes(0, 1), dog.swapaxes(0, 1),
+                 lse_c.transpose(3, 0, 1, 2, 4), del_c.transpose(3, 0, 1, 2, 4),
+                 qp))
+            dq_acc = dq_acc + jnp.moveaxis(dq_parts, 0, 1).reshape(
+                B, Sq, Hkv, G, D)
+            return dq_acc, (dk_c, dv_c)
+
+        dq0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+        dq, (dk_parts, dv_parts) = jax.lax.scan(
+            kv_step, dq0, (kb.swapaxes(0, 1), vb.swapaxes(0, 1), kp))
+        dk = jnp.moveaxis(dk_parts, 0, 1).reshape(B, Sk, Hkv, D)
+        dv = jnp.moveaxis(dv_parts, 0, 1).reshape(B, Sk, Hkv, Dv)
+
+        import numpy as _np
+        zp = _np.zeros(q_pos.shape, jax.dtypes.float0)
+        zk = _np.zeros(k_pos.shape, jax.dtypes.float0)
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+                zp, zk)
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+def chunked_attention(
+    q: jax.Array,              # [B, Sq, Hq, D]
+    k: jax.Array,              # [B, Sk, Hkv, D]
+    v: jax.Array,              # [B, Sk, Hkv, D]
+    q_positions: jax.Array,    # [Sq] absolute positions of the queries
+    k_positions: jax.Array,    # [Sk]
+    causal: bool,
+    window: int | None,
+    chunk_q: int,
+    chunk_k: int,
+) -> jax.Array:
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    cq = min(chunk_q, Sq)
+    ck = min(chunk_k, Sk)
+    pad_q, pad_k = (-Sq) % cq, (-Sk) % ck
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pad_q), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, (0, pad_k),
+                              constant_values=POS_SENTINEL)
+    qg = q.reshape(B, q.shape[1], Hkv, G, D)
+    attn = _make_chunked_attn(causal, window, cq, ck)
+    out = attn(qg, k, v, q_positions, k_positions)       # [B,Sq',Hkv,G,Dv]
+    out = out.reshape(B, q.shape[1], Hq, Dv)
+    return out[:, :Sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# BitStopper score path: per-query-head dynamic sparsity.
+# ---------------------------------------------------------------------------
+
+
+def _bitstopper_full(q, k, v, cfg: AttnConfig, mask2d):
+    """q [B,S,Hq,D], k/v [B,T,Hkv,D], mask2d [S,T] or None → [B,S,Hq,D]."""
+    G = cfg.n_heads // cfg.n_kv_heads
+    kr = jnp.repeat(k, G, axis=2).swapaxes(1, 2)      # [B, Hq, T, D]
+    vr = jnp.repeat(v, G, axis=2).swapaxes(1, 2)
+    qt = q.swapaxes(1, 2)                             # [B, Hq, S, D]
+
+    if cfg.impl == "bitstopper_xla" or mask2d is not None:
+        from repro.core.block_adaptation import block_bitstopper_attention
+        bq = min(128, qt.shape[2])
+        bk = min(128, kr.shape[2])
+        flat = lambda a: a.reshape((-1,) + a.shape[2:])
+        res = jax.vmap(
+            lambda a, b, c: block_bitstopper_attention(
+                a, b, c, cfg=cfg.bitstopper, block_q=bq, block_k=bk,
+                mask=mask2d)
+        )(flat(qt), flat(kr), flat(vr))
+        out = res.out.reshape(qt.shape[:2] + res.out.shape[1:])
+    else:
+        out = kops.attention(qt, kr, vr, impl=cfg.impl, causal=cfg.causal,
+                             cfg=cfg.bitstopper)
+    return out.swapaxes(1, 2).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.float32,
+               ring: bool = False):
+    """With ``ring=True`` (sliding-window layers) only ``window`` slots are
+    allocated and writes wrap — O(window) memory for long_500k decode.
+    Ring-ness needs no flag at use time: writes always go to
+    ``length mod n_slots``, which is the identity while length < n_slots."""
+    n_slots = min(max_len, cfg.window) if (ring and cfg.window) else max_len
+    return {
+        "k": jnp.zeros((batch, n_slots, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, n_slots, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((n_slots,), POS_SENTINEL, jnp.int32),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def _update_cache(cache, k, v, positions):
+    """Write the new token(s) into the cache.
+
+    With active sharding rules and the cache's sequence axis sharded over
+    "model", a plain dynamic-update-slice is decomposed by GSPMD into a
+    masked SELECT over the whole local cache (full read+write of GiBs per
+    layer per decoded token — measured as THE dominant decode traffic).
+    The shard_map path does what serving systems do on real hardware: each
+    shard tests whether the global slot lands in its range and performs an
+    in-place LOCAL update of just that slot.
+    """
+    from repro.sharding.api import current_rules
+
+    S = k.shape[1]
+    n_slots = cache["k"].shape[1]
+    widx = jax.lax.rem(cache["length"], n_slots)
+    kc = k.astype(cache["k"].dtype)
+    vc = v.astype(cache["v"].dtype)
+    pc = positions.astype(jnp.int32)
+
+    rules = current_rules()
+    use_shmap = (S == 1 and rules is not None
+                 and "model" in rules.mesh.shape
+                 and n_slots % rules.mesh.shape["model"] == 0)
+    if not use_shmap:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kc, widx, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vc, widx, 1)
+        cpos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], pc, widx, 0)
+    else:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        mesh = rules.mesh
+        bspec = rules.pspec(("batch",), (cache["k"].shape[0],))[0]
+        cache_spec = P(bspec, "model", None, None)
+        new_spec = P(bspec, None, None, None)
+
+        def body(ck_l, cv_l, pos_l, kn, vn, pn, wi):
+            T_loc = ck_l.shape[1]
+            local = wi[0] - jax.lax.axis_index("model") * T_loc
+            in_rng = (local >= 0) & (local < T_loc)
+            idx = jnp.clip(local, 0, T_loc - 1)
+            cur_k = jax.lax.dynamic_slice_in_dim(ck_l, idx, 1, 1)
+            cur_v = jax.lax.dynamic_slice_in_dim(cv_l, idx, 1, 1)
+            cur_p = jax.lax.dynamic_slice_in_dim(pos_l, idx, 1, 0)
+            ck_l = jax.lax.dynamic_update_slice_in_dim(
+                ck_l, jnp.where(in_rng, kn, cur_k), idx, 1)
+            cv_l = jax.lax.dynamic_update_slice_in_dim(
+                cv_l, jnp.where(in_rng, vn, cur_v), idx, 1)
+            pos_l = jax.lax.dynamic_update_slice_in_dim(
+                pos_l, jnp.where(in_rng, pn, cur_p), idx, 0)
+            return ck_l, cv_l, pos_l
+
+        ck, cv, cpos = shard_map(
+            body, mesh=mesh,
+            in_specs=(cache_spec, cache_spec, P("model"),
+                      new_spec, new_spec, P(None), P(None)),
+            out_specs=(cache_spec, cache_spec, P("model")),
+            check_rep=False,
+        )(cache["k"], cache["v"], cache["pos"], kc, vc, pc,
+          widx[None])
+    new = dict(cache, k=ck, v=cv, pos=cpos, length=cache["length"] + S)
+    return ck, cv, cpos, new
+
+
+def _cached_attention(q, k_all, v_all, q_positions, k_positions,
+                      cfg: AttnConfig):
+    """Attention against the (padded/ring) cache, mask from slot positions."""
+    mask = _mask_block(q_positions, k_positions, causal=True,
+                       window=cfg.window)
+    if cfg.impl in ("bitstopper_xla", "bitstopper"):
+        return _bitstopper_full(q, k_all, v_all, cfg, mask)
+    G = cfg.n_heads // cfg.n_kv_heads
+    B, T, Hkv, D = k_all.shape
+    qg = q.reshape(q.shape[0], q.shape[1], Hkv, G, D)
+    # Mixed-dtype einsums with f32 accumulation: never materialize an f32
+    # copy of the (multi-GiB) KV cache — reads stay bf16 (measured ~3x
+    # decode HBM-traffic reduction vs .astype(f32) upcasting).
+    logits = jnp.einsum("bqhgd,bthd->bhgqt", qg, k_all,
+                        preferred_element_type=jnp.float32) / D ** 0.5
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    out = jnp.einsum("bhgqt,bthd->bqhgd", p.astype(v_all.dtype), v_all,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(q.shape).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Public layer
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    p,
+    x: jax.Array,                    # [B, S, d_model]
+    positions: jax.Array,            # [S]
+    cfg: AttnConfig,
+    cache: dict[str, Any] | None = None,
+):
+    """Returns (out [B,S,d_model], new_cache)."""
+    B, S, _ = x.shape
+    q = L.linear(p["wq"], x)                         # [B, S, Hq, D]
+    k = L.linear(p["wk"], x)                         # [B, S, Hkv, D]
+    v = L.linear(p["wv"], x)
+    q = L.rope(q, positions[None, :], cfg.rope_theta)
+    k = L.rope(k, positions[None, :], cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+
+    if cache is None:
+        if cfg.impl in ("bitstopper_xla", "bitstopper"):
+            mask2d = None
+            if cfg.window is not None:
+                mask2d = _mask_block(positions, positions, cfg.causal,
+                                     cfg.window)
+            out = _bitstopper_full(q, k, v, cfg, mask2d)
+        elif cfg.impl == "flash" and cfg.window is None:
+            G = cfg.n_heads // cfg.n_kv_heads
+            kr = jnp.repeat(k, G, axis=2).swapaxes(1, 2)
+            vr = jnp.repeat(v, G, axis=2).swapaxes(1, 2)
+            out = kops.attention(q.swapaxes(1, 2), kr, vr, impl="flash",
+                                 causal=cfg.causal).swapaxes(1, 2)
+        else:
+            out = chunked_attention(
+                q, k, v, positions, positions,
+                causal=cfg.causal, window=cfg.window,
+                chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k,
+            )
+        new_cache = None
+    else:
+        k_all, v_all, k_pos, new_cache = _update_cache(cache, k, v, positions)
+        out = _cached_attention(q, k_all, v_all, positions, k_pos, cfg)
+
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    y = L.linear(p["wo"], out)
+    y = constrain(y, "batch", "seq", "embed")
+    return y, new_cache

@@ -1,0 +1,29 @@
+"""Modality frontends — STUBS per the assignment.
+
+``[audio]`` / ``[vlm]`` archs specify the transformer *backbone* only; the
+modality encoder (EnCodec / CLIP-ViT) is out of scope.  ``input_specs()``
+supplies precomputed frame/patch embeddings; these helpers splice them into
+the token stream so the backbone sees an ordinary [B, S, d_model] sequence.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def audio_frontend(params, codes, cfg):
+    """MusicGen-style: EnCodec codes ARE discrete tokens (vocab 2048); the
+    'frontend' is just the embedding table — returned as embeddings so the
+    backbone path is uniform with the VLM case."""
+    return L.embed(params["embed"], codes).astype(cfg.activation_dtype)
+
+
+def vision_frontend(params, tokens, patch_embeds, cfg):
+    """LLaVA-NeXT-style: precomputed anyres patch embeddings [B, P, D] are
+    prepended to the embedded text tokens [B, S_text, D]."""
+    text = L.embed(params["embed"], tokens)
+    return jnp.concatenate(
+        [patch_embeds.astype(text.dtype), text], axis=1
+    ).astype(cfg.activation_dtype)

@@ -1,0 +1,187 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Queries and KV are low-rank compressed; the KV cache stores only the latent
+``c_kv`` [S, kv_rank] plus the decoupled RoPE key [S, rope_dim].
+
+Two execution paths:
+* **prefill/train** — expand the latents into per-head K/V and run standard
+  chunked attention (compute-bound regime; expansion is one matmul).
+* **decode (absorbed)** — fold ``W_uk`` into the query so scores form
+  directly against the latent cache:  ``s = (q_nope W_uk) · c_kv + q_pe·k_pe``.
+  This is where BitStopper applies for this arch: the latent cache is the
+  K operand, so bit-plane early termination prunes *latent rows* — identical
+  token granularity, d = kv_rank + rope_dim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.besf import BitStopperConfig
+from repro.models import layers as L
+from repro.sharding.api import constrain
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_rank: int = 1536
+    kv_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+    impl: str = "xla"               # decode path: "xla" | "bitstopper_xla"
+    bitstopper: BitStopperConfig = BitStopperConfig()
+    chunk_q: int = 512
+    chunk_k: int = 512
+
+
+def init_mla(key, cfg: MLAConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq_a": L.init_linear(ks[0], cfg.d_model, cfg.q_rank, False, dtype),
+        "q_norm": L.init_rmsnorm(cfg.q_rank, dtype),
+        "wq_b": L.init_linear(ks[1], cfg.q_rank, (cfg.n_heads, qk_dim), False, dtype),
+        "wkv_a": L.init_linear(ks[2], cfg.d_model,
+                               cfg.kv_rank + cfg.qk_rope_dim, False, dtype),
+        "kv_norm": L.init_rmsnorm(cfg.kv_rank, dtype),
+        "wkv_b": L.init_linear(ks[3], cfg.kv_rank,
+                               (cfg.n_heads, cfg.qk_nope_dim + cfg.v_head_dim),
+                               False, dtype),
+        "wo": L.init_linear(ks[4], cfg.n_heads * cfg.v_head_dim, cfg.d_model,
+                            False, dtype),
+    }
+
+
+def _project_q(p, x, cfg: MLAConfig, positions):
+    q_lat = L.rms_norm(p["q_norm"], L.linear(p["wq_a"], x))
+    q = L.linear(p["wq_b"], q_lat)                       # [B,S,H,nope+rope]
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_pe = L.rope(q[..., cfg.qk_nope_dim:], positions[None, :], cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _project_kv_latent(p, x, cfg: MLAConfig, positions):
+    kv = L.linear(p["wkv_a"], x)                         # [B,S,kv_rank+rope]
+    c_kv = L.rms_norm(p["kv_norm"], kv[..., : cfg.kv_rank])
+    k_pe = L.rope(kv[..., None, cfg.kv_rank:], positions[None, :],
+                  cfg.rope_theta)[..., 0, :]             # [B,S,rope]
+    return c_kv, k_pe
+
+
+def mla_attention(
+    p,
+    x: jax.Array,                     # [B, S, d_model]
+    positions: jax.Array,             # [S]
+    cfg: MLAConfig,
+    cache: dict[str, Any] | None = None,
+):
+    """Returns (out, new_cache).  Cache = latent c_kv + k_pe (MLA's point)."""
+    B, S, _ = x.shape
+    q_nope, q_pe = _project_q(p, x, cfg, positions)
+    c_kv, k_pe = _project_kv_latent(p, x, cfg, positions)
+    q_nope = constrain(q_nope, "batch", None, "heads", None)
+
+    if cache is None:
+        # Prefill/train: expand latents to per-head K/V, chunked attention.
+        kv = L.linear(p["wkv_b"], c_kv)                  # [B,S,H,nope+v]
+        k_nope = kv[..., : cfg.qk_nope_dim]
+        v = kv[..., cfg.qk_nope_dim:]
+        k_pe_h = jnp.broadcast_to(k_pe[:, :, None, :],
+                                  k_pe.shape[:2] + (cfg.n_heads, cfg.qk_rope_dim))
+        q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+        k_full = jnp.concatenate([k_nope, k_pe_h], axis=-1)
+        from repro.models.attention import chunked_attention
+        out = chunked_attention(
+            q_full, k_full, v, positions, positions,
+            causal=True, window=None,
+            chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k,
+        )                                                 # [B,S,H,v_dim]
+        out = out.reshape(B, S, cfg.n_heads * cfg.v_head_dim)
+        y = L.linear(p["wo"], out)
+        return constrain(y, "batch", None, "embed"), None
+
+    # Decode: absorbed scoring against the latent cache.
+    idx = cache["length"]
+    c_all = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), idx, 1)
+    pe_all = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), idx, 1)
+    new_cache = {"c_kv": c_all, "k_pe": pe_all, "length": idx + S}
+
+    w_kv_b = p["wkv_b"]["w"]                              # [kv_rank, H, nope+v]
+    w_uk = w_kv_b[..., : cfg.qk_nope_dim]                 # [kv_rank, H, nope]
+    w_uv = w_kv_b[..., cfg.qk_nope_dim:]                  # [kv_rank, H, v]
+
+    # Absorb W_uk into q: q_abs [B,S,H,kv_rank].
+    q_abs = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    T = c_all.shape[1]
+    k_positions = jnp.arange(T)
+    q_positions = positions
+    mask = k_positions[None, :] <= q_positions[:, None]   # [S, T]
+
+    if cfg.impl == "bitstopper_xla":
+        # BitStopper on the latent cache: K rows are [c_kv ; k_pe] of width
+        # kv_rank + rope_dim; queries are [q_abs ; q_pe].
+        from repro.core.block_adaptation import block_bitstopper_attention
+        q_cat = jnp.concatenate([q_abs, jnp.broadcast_to(
+            q_pe.astype(jnp.float32), q_pe.shape)], axis=-1)
+        k_cat = jnp.concatenate([c_all, pe_all], axis=-1) # [B,T,rank+rope]
+        qt = q_cat.swapaxes(1, 2)                         # [B,H,S,rank+rope]
+        d_lat = k_cat.shape[-1]
+        sm = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+        # block_bitstopper applies 1/sqrt(d_lat); rescale via q so the
+        # effective softmax scale matches 1/sqrt(qk_dim).
+        qt = qt * (sm * d_lat ** 0.5)
+        bq = min(128, qt.shape[2])
+        bk = min(128, T)
+
+        def per_head(qh, kb, vb):      # qh [S, dlat], kb [T, dlat]
+            return block_bitstopper_attention(
+                qh, kb, vb, cfg=cfg.bitstopper, block_q=bq, block_k=bk,
+                mask=mask).scores
+
+        def per_batch(qb, kb):         # qb [H, S, dlat], kb [T, dlat]
+            dummy_v = jnp.ones((T, 1), jnp.float32)
+            return jax.vmap(lambda a: per_head(a, kb, dummy_v))(qb)
+
+        logits = jax.vmap(per_batch)(qt, k_cat.astype(jnp.float32))
+        probs = jax.nn.softmax(jnp.where(logits <= NEG_INF / 2, NEG_INF, logits),
+                               axis=-1)
+        probs = jnp.where(logits <= NEG_INF / 2, 0.0, probs)
+    else:
+        sm = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+        # mixed-dtype einsums: no f32 copy of the latent cache
+        s_lat = jnp.einsum("bshr,btr->bhst", q_abs.astype(c_all.dtype),
+                           c_all, preferred_element_type=jnp.float32)
+        s_pe = jnp.einsum("bshr,btr->bhst", q_pe.astype(pe_all.dtype),
+                          pe_all, preferred_element_type=jnp.float32)
+        logits = (s_lat + s_pe) * sm
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+
+    # Weighted latent sum then expand through W_uv (absorbed V path).
+    ctx_lat = jnp.einsum("bhst,btr->bshr", probs.astype(c_all.dtype), c_all,
+                         preferred_element_type=jnp.float32)
+    out = jnp.einsum("bshr,rhv->bshv", ctx_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(B, S, cfg.n_heads * cfg.v_head_dim).astype(x.dtype)
+    y = L.linear(p["wo"], out)
+    return constrain(y, "batch", None, "embed"), new_cache
+
+
+def init_mla_cache(cfg: MLAConfig, batch: int, max_len: int, dtype=jnp.float32):
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_rank), dtype),
+        "k_pe": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }

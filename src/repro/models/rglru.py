@@ -1,0 +1,116 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block = gate branch (linear→GeLU) ⊙ recurrent branch (linear→conv1d→RG-LRU),
+then output linear.  The RG-LRU recurrence
+
+    r_t = sigmoid(W_a x_t)        (recurrence gate, block-diag per head)
+    i_t = sigmoid(W_x x_t)        (input gate)
+    a_t = exp(-c * softplus(Λ) * r_t),   c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+is a diagonal linear recurrence → computed with ``lax.associative_scan``
+(log-depth) for train/prefill and a single fused step for decode (the
+``long_500k`` path: O(1) state per token).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding.api import constrain
+
+_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    width: int                    # recurrent width (lru_width)
+    n_heads: int
+    d_conv: int = 4
+
+
+def init_rglru(key, cfg: RGLRUConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    W, H = cfg.width, cfg.n_heads
+    hd = W // H
+    return {
+        "in_x": L.init_linear(ks[0], cfg.d_model, W, False, dtype),
+        "in_gate": L.init_linear(ks[1], cfg.d_model, W, False, dtype),
+        "conv_w": L.truncated_normal_init(ks[2], (cfg.d_conv, W), 1.0, dtype),
+        "conv_b": jnp.zeros((W,), dtype),
+        # block-diagonal head-wise gates
+        "rg": {"w": L.truncated_normal_init(ks[3], (H, hd, hd), 1.0, dtype)},
+        "ig": {"w": L.truncated_normal_init(ks[4], (H, hd, hd), 1.0, dtype)},
+        # Λ init so a^(1/c) ~ U[0.9, 0.999] (paper appendix)
+        "a_param": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, W)) )).astype(dtype),
+        "out": L.init_linear(ks[5], W, cfg.d_model, False, dtype),
+    }
+
+
+def _headwise(w, x, n_heads):
+    """Block-diagonal matmul.  x [...,W] → [...,W] with w [H, hd, hd]."""
+    shape = x.shape
+    xh = x.reshape(shape[:-1] + (n_heads, shape[-1] // n_heads))
+    y = jnp.einsum("...hi,hij->...hj", xh.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    return y.reshape(shape)
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(pad[:, i: i + x.shape[1]] * w[i] for i in range(K)) + b
+
+
+def _gates(p, xr, cfg: RGLRUConfig):
+    r = jax.nn.sigmoid(_headwise(p["rg"]["w"], xr, cfg.n_heads))
+    i = jax.nn.sigmoid(_headwise(p["ig"]["w"], xr, cfg.n_heads))
+    log_a = -_C * jax.nn.softplus(p["a_param"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xr.astype(jnp.float32))
+    return a, gated_in
+
+
+def rglru_forward(p, x, cfg: RGLRUConfig, cache: dict[str, Any] | None = None):
+    """x [B,S,D] → (out, new_cache)."""
+    B, S, D = x.shape
+    gate = jax.nn.gelu(L.linear(p["in_gate"], x).astype(jnp.float32))
+    xr = L.linear(p["in_x"], x)
+
+    if cache is None:
+        xr = _causal_conv(xr, p["conv_w"], p["conv_b"])
+        a, gin = _gates(p, xr, cfg)
+        # h_t = a_t h_{t-1} + gin_t  — associative scan over S.
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        _, h = jax.lax.associative_scan(combine, (a, gin), axis=1)
+        new_cache = None
+    else:
+        conv_state = jnp.concatenate(
+            [cache["conv"][:, S:], xr.astype(cache["conv"].dtype)], axis=1)
+        K = cfg.d_conv
+        window = conv_state[:, -K:]
+        xr = (jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"])[:, None]
+        a, gin = _gates(p, xr, cfg)
+        h = a * cache["h"][:, None] + gin
+        new_cache = {"conv": conv_state, "h": h[:, 0]}
+
+    y = (h * gate).astype(x.dtype)
+    out = L.linear(p["out"], y)
+    return constrain(out, "batch", None, "embed"), new_cache
+
+
+def init_rglru_cache(cfg: RGLRUConfig, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv, cfg.width), dtype),
+        "h": jnp.zeros((batch, cfg.width), jnp.float32),
+    }

@@ -1,0 +1,207 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Chunked SSD for train/prefill (sequence split into chunks; quadratic
+attention-like compute within a chunk, linear recurrence across chunks) and
+an O(1)-per-token stateful step for decode — this is what makes the
+``long_500k`` shape runnable for this family.
+
+Layout follows mamba2 reference: in_proj → [z, x, B, C, dt]; causal depthwise
+conv over (x,B,C); SSD; gated RMSNorm; out_proj.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding.api import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def init_ssm(key, cfg: SSMConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.n_groups * cfg.d_state + cfg.n_heads
+    return {
+        "in_proj": L.init_linear(ks[0], cfg.d_model, d_in_proj, False, dtype),
+        "conv_w": L.truncated_normal_init(ks[1], (cfg.d_conv, cfg.conv_dim), 1.0, dtype),
+        "conv_b": jnp.zeros((cfg.conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, cfg.n_heads)).astype(dtype),
+        "D": jnp.ones((cfg.n_heads,), dtype),
+        "dt_bias": jnp.zeros((cfg.n_heads,), dtype),
+        "norm": L.init_rmsnorm(cfg.d_inner, dtype),
+        "out_proj": L.init_linear(ks[2], cfg.d_inner, cfg.d_model, False, dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg: SSMConfig):
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di: di + cfg.conv_dim]
+    dt = zxbcdt[..., di + cfg.conv_dim:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv1d.  xBC [B,S,C], w [K,C]."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xBC.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _segsum_decay(log_a):
+    """log_a [..., Q] → L [..., Q, Q]: exp(cumsum_i - cumsum_j) lower-tri.
+
+    The upper triangle has *positive* exponents (would overflow to inf and
+    poison gradients through the mask), so it is masked to -inf BEFORE exp.
+    """
+    Q = log_a.shape[-1]
+    cum = jnp.cumsum(log_a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.exp(jnp.where(tri, diff, -jnp.inf))
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD over a full sequence — one ``lax.scan`` step per chunk.
+
+    x [b,S,h,p], dt [b,S,h] (post-softplus), A [h] (negative),
+    B,C [b,S,g,n].  Returns y [b,S,h,p] and final state [b,h,n,p].
+
+    Scanning chunk-by-chunk keeps peak memory at ONE chunk's decay matrix
+    ([b,h,Q,Q] ≈ 100 MB at b=16,h=24,Q=256) instead of all n_chunks at once
+    (which was 10s of GB per layer at train_4k scale).
+    """
+    b, S, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    log_a = dt * A[None, None, :]                            # [b,S,h]
+
+    # [nc, b, Q, ...] scan inputs, kept in the activation dtype (the f32
+    # upcasts happen inside the checkpointed step — halves scan residuals).
+    xc = x.reshape(b, nc, Q, h, p).swapaxes(0, 1)
+    dtc = dt.reshape(b, nc, Q, h).swapaxes(0, 1)
+    lac = log_a.reshape(b, nc, Q, h).swapaxes(0, 1)
+    Bc = B.reshape(b, nc, Q, g, n).swapaxes(0, 1)
+    Cc = C.reshape(b, nc, Q, g, n).swapaxes(0, 1)
+
+    @jax.checkpoint  # recompute the O(Q^2) decay/score matrices in backward
+    def chunk_step(state, inp):
+        xq, dtq, la, Bq, Cq = inp       # [b,Q,h,p], [b,Q,h]×2, [b,Q,g,n]×2
+        xd = xq.astype(jnp.float32) * dtq[..., None]
+        la = la.astype(jnp.float32)
+        Bq = Bq.astype(jnp.float32)
+        Cq = Cq.astype(jnp.float32)
+        cum = jnp.cumsum(la, axis=1)                          # [b,Q,h]
+        # Intra-chunk (attention-like): scores_ij = (C_i . B_j) * L_ij.
+        Lm = _segsum_decay(la.transpose(0, 2, 1))             # [b,h,Q,Q]
+        CB = jnp.einsum("bqgn,bkgn->bgqk", Cq, Bq)            # [b,g,Q,Q]
+        CB = jnp.repeat(CB, hg, axis=1)                       # [b,h,Q,Q]
+        y_intra = jnp.einsum("bhqk,bkhp->bqhp", CB * Lm, xd)
+        # Chunk summary: S_c = sum_j exp(cum_Q - cum_j) B_j xdt_j^T.
+        decay_tail = jnp.exp(cum[:, -1:, :] - cum)            # [b,Q,h]
+        Bh = jnp.repeat(Bq, hg, axis=2)                       # [b,Q,h,n]
+        S_c = jnp.einsum("bqhn,bqhp,bqh->bhnp", Bh, xd, decay_tail)
+        # Inter-chunk: y_t += (C_t . state_prev) * exp(cum_t).
+        Ch = jnp.repeat(Cq, hg, axis=2)
+        y_inter = jnp.einsum("bqhn,bhnp,bqh->bqhp", Ch, state, jnp.exp(cum))
+        new_state = state * jnp.exp(cum[:, -1])[..., None, None] + S_c
+        return new_state, (y_intra + y_inter).astype(xq.dtype)
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    final_state, ys = jax.lax.scan(chunk_step, init, (xc, dtc, lac, Bc, Cc))
+    y = ys.astype(x.dtype).swapaxes(0, 1).reshape(b, S, h, p)
+    return y, final_state
+
+
+def ssm_forward(p, x, cfg: SSMConfig, cache: dict[str, Any] | None = None):
+    """Full mixer.  x [B,S,D] → (out, new_cache)."""
+    Bb, S, D = x.shape
+    zxbcdt = L.linear(p["in_proj"], x)
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if cache is None:
+        xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+        new_cache = None
+    else:
+        # Decode: roll the conv window, single-step conv + SSM update.
+        conv_state = cache["conv"]                             # [B,K,C]
+        conv_state = jnp.concatenate(
+            [conv_state[:, S:], xBC.astype(conv_state.dtype)], axis=1)
+        K = cfg.d_conv
+        w, bconv = p["conv_w"], p["conv_b"]
+        # For S==1 the last K entries of the rolled buffer are the window.
+        window = conv_state[:, -K:]
+        out = jnp.einsum("bkc,kc->bc", window, w)
+        xBC = jax.nn.silu(out + bconv)[:, None, :]
+
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    xs = xBC[..., :di].reshape(Bb, -1, cfg.n_heads, cfg.head_dim)
+    Bmat = xBC[..., di: di + gn].reshape(Bb, -1, cfg.n_groups, cfg.d_state)
+    Cmat = xBC[..., di + gn:].reshape(Bb, -1, cfg.n_groups, cfg.d_state)
+
+    if cache is None:
+        y, final_state = ssd_chunked(xs, dt, A, Bmat, Cmat, cfg.chunk)
+    else:
+        # Single-token recurrent update (O(1) per token): the long_500k path.
+        state = cache["ssm"]                                   # [B,h,n,p]
+        hg = cfg.n_heads // cfg.n_groups
+        a = jnp.exp(dt[:, 0] * A[None, :])                     # [B,h]
+        Bh = jnp.repeat(Bmat[:, 0], hg, axis=1)                # [B,h,n]
+        Ch = jnp.repeat(Cmat[:, 0], hg, axis=1)
+        xdt = xs[:, 0].astype(jnp.float32) * dt[:, 0][..., None]
+        state = state * a[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", Bh.astype(jnp.float32), xdt)
+        y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), state)
+        y = y[:, None].astype(x.dtype)                         # [B,1,h,p]
+        final_state = state
+        new_cache = {"conv": conv_state, "ssm": state}
+
+    y = y + xs * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(Bb, -1, cfg.d_inner)
+    y = L.rms_norm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
+    out = L.linear(p["out_proj"], y)
+    out = constrain(out, "batch", None, "embed")
+    if cache is None:
+        return out, None
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: SSMConfig, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv, cfg.conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim),
+                         jnp.float32),
+    }

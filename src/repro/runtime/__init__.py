@@ -1,0 +1,5 @@
+"""Cluster runtime: failure detection, elastic re-meshing, stragglers."""
+
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    ClusterMonitor, ElasticMeshManager, StragglerPolicy,
+)

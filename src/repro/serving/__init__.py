@@ -1,0 +1,3 @@
+"""Serving: prefill/decode engine with BitStopper sparse attention."""
+
+from repro.serving.engine import ServeConfig, ServingEngine  # noqa: F401

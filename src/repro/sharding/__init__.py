@@ -1,0 +1,5 @@
+"""Logical-axis sharding: rules mapping named axes → mesh axes (GSPMD)."""
+
+from repro.sharding.api import (  # noqa: F401
+    MeshRules, constrain, current_rules, use_rules,
+)

@@ -1,0 +1,109 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style, mesh-agnostic).
+
+Models name their activation axes logically (``constrain(x, "batch", None,
+"embed")``); a :class:`MeshRules` context maps those names onto physical mesh
+axes and inserts GSPMD sharding constraints.  With no active rules the model
+runs unsharded — smoke tests on one CPU device never touch jax device state.
+
+Key behaviours:
+* **divisibility fallback** — a logical axis whose dim is not divisible by
+  the product of its mapped mesh axes is silently replicated (e.g. granite's
+  single KV head over a 16-way model axis).
+* **composed axes** — a logical name may map to a tuple of mesh axes
+  (``"batch" → ("pod", "data")``).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import re
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: list["MeshRules"] = []
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    mesh: Mesh
+    axis_map: dict[str, Any]            # logical name -> mesh axis | tuple | None
+    param_rules: tuple[tuple[str, tuple], ...] = ()   # (path regex, logical axes)
+
+    # -- axis resolution ---------------------------------------------------
+
+    def _mesh_size(self, mesh_axes) -> int:
+        if mesh_axes is None:
+            return 1
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        return math.prod(self.mesh.shape[a] for a in mesh_axes)
+
+    def pspec(self, logical_axes: Sequence[str | None],
+              shape: Sequence[int] | None = None) -> P:
+        """PartitionSpec for the given logical axes (with divisibility check
+        when ``shape`` is provided)."""
+        entries = []
+        for i, name in enumerate(logical_axes):
+            mesh_axes = self.axis_map.get(name) if name else None
+            if mesh_axes is not None and shape is not None:
+                if shape[i] % self._mesh_size(mesh_axes) != 0:
+                    mesh_axes = None          # replicate indivisible dims
+            entries.append(mesh_axes)
+        return P(*entries)
+
+    def sharding(self, logical_axes, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(logical_axes, shape))
+
+    # -- parameter trees ----------------------------------------------------
+
+    def param_pspec(self, path: str, shape: Sequence[int]) -> P:
+        for pattern, axes in self.param_rules:
+            if re.search(pattern, path):
+                if len(shape) > len(axes):
+                    # scan-over-layers stacking (and conv kernel dims)
+                    # prepend unsharded leading axes so the rule's names
+                    # line up with the parameter's trailing dims.
+                    axes = (None,) * (len(shape) - len(axes)) + tuple(axes)
+                return self.pspec(axes, shape)
+        return P()
+
+    def tree_pspecs(self, tree):
+        """PartitionSpec tree for a parameter pytree (by '/'-joined path)."""
+        def leaf_spec(path, leaf):
+            pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path)
+            return self.param_pspec(pstr, leaf.shape)
+        return jax.tree_util.tree_map_with_path(leaf_spec, tree)
+
+    def tree_shardings(self, tree):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), self.tree_pspecs(tree)
+        )
+
+
+def current_rules() -> MeshRules | None:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+@contextlib.contextmanager
+def use_rules(rules: MeshRules | None):
+    _ACTIVE.append(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.pop()
+
+
+def constrain(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """Sharding constraint by logical axis names; no-op without active rules."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        return x
+    spec = rules.pspec(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))

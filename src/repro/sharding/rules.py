@@ -1,0 +1,145 @@
+"""Concrete parallelism layouts for the production meshes.
+
+Parameter placement (path-pattern → logical axes; first match wins) and the
+activation axis map, composing:
+
+* **DP**    — batch over ("pod", "data")
+* **FSDP**  — parameters' embed axis over "data" (ZeRO-3: jit inserts
+              all-gathers before use, reduce-scatters after backward)
+* **TP**    — heads / ffn / vocab / expert axes over "model" (Megatron split)
+* **EP**    — MoE expert axis over "model" (divisibility decides EP vs
+              expert-TP per config — see models/moe.py)
+* **SP**    — optional: sequence axis over "model" between blocks (long ctx)
+
+Indivisible dims fall back to replication automatically (api.MeshRules).
+"""
+
+from __future__ import annotations
+
+from repro.sharding.api import MeshRules
+
+# Path-pattern parameter rules.  Axis names refer to AXIS_MAP keys below.
+PARAM_RULES: tuple[tuple[str, tuple], ...] = (
+    # Embeddings / unembeddings: vocab sharded over model (TP), embed over fsdp.
+    (r"embed/table$", ("vocab", "fsdp")),
+    (r"unembed/w$", ("fsdp", "vocab")),
+    (r"mtp_head/w$", ("fsdp", "vocab")),
+    # Attention projections: heads over model, d_model over fsdp.
+    (r"attn/wq/w$", ("fsdp", "heads", None)),
+    (r"attn/wk/w$", ("fsdp", "kv_heads", None)),
+    (r"attn/wv/w$", ("fsdp", "kv_heads", None)),
+    (r"attn/wq/b$", ("heads", None)),
+    (r"attn/w[kv]/b$", ("kv_heads", None)),
+    (r"attn/wo/w$", ("heads_flat", "fsdp")),
+    # MLA projections (deepseek): latent ranks replicated, heads over model.
+    (r"mla/wq_a/w$", ("fsdp", None)),
+    (r"mla/wq_b/w$", (None, "heads", None)),
+    (r"mla/wkv_a/w$", ("fsdp", None)),
+    (r"mla/wkv_b/w$", (None, "heads", None)),
+    (r"mla/wo/w$", ("heads_flat", "fsdp")),
+    # Dense MLPs: ffn over model (Megatron).
+    (r"(mlp|ffn|shared)/wi(_gate|_up)?/w$", ("fsdp", "ffn")),
+    (r"(mlp|ffn|shared)/wo/w$", ("ffn", "fsdp")),
+    # MoE experts: expert axis over model (EP) when divisible, else the
+    # per-expert ffn axis picks up "model" via moe.py's expert-TP path.
+    (r"moe/router/w$", ("fsdp", None)),
+    (r"moe/wi(_gate|_up)?$", ("expert", "expert_dmodel", "expert_ffn")),
+    (r"moe/wo$", ("expert", "expert_ffn", "expert_dmodel")),
+    # SSM (mamba2): inner channels over model.
+    (r"ssm/in_proj/w$", ("fsdp", "ffn")),
+    (r"ssm/out_proj/w$", ("ffn", "fsdp")),
+    (r"ssm/(conv_w|conv_b|A_log|D|dt_bias)$", ("ffn",)),
+    (r"ssm/norm/scale$", ("ffn",)),
+    # RG-LRU (recurrentgemma): recurrent width over model.
+    (r"rglru/(in_x|in_gate)/w$", ("fsdp", "ffn")),
+    (r"rglru/out/w$", ("ffn", "fsdp")),
+    (r"rglru/(a_param|conv_w|conv_b)$", ("ffn",)),
+    (r"rglru/(rg|ig)/w$", (None, "ffn", None)),
+    # Norm scales replicated.
+    (r"(scale|bias)$", (None,)),
+)
+
+# Logical-axis → mesh-axis maps.
+AXIS_MAP_1POD = {
+    "batch": "data",
+    "fsdp": "data",
+    "embed": None,
+    "seq": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "heads_flat": "model",
+    "ffn": "model",
+    "vocab": "model",
+    "expert": "model",
+    "expert_ffn": None,
+    "seq_sp": "model",
+    # decode KV caches are sharded along the *sequence* axis over "model"
+    # (kv-head counts like 8 or 1 don't divide a 16-way axis; sequence
+    # always does) — GSPMD turns the softmax/PV over the sharded axis into
+    # small logit collectives instead of gathering the cache.
+    "kv_seq": "model",
+}
+
+# Decode-cache leaf-name → logical axes (rank WITHOUT the scan-stack axis;
+# a leading None is prepended automatically for stacked caches).
+CACHE_RULES: dict[str, tuple] = {
+    "k": ("batch", "kv_seq", None, None),
+    "v": ("batch", "kv_seq", None, None),
+    "c_kv": ("batch", "kv_seq", None),
+    "k_pe": ("batch", "kv_seq", None),
+    "conv": ("batch", None, "ffn"),
+    "ssm": ("batch", None, None, None),
+    "h": ("batch", "ffn"),
+    "pos": ("kv_seq",),
+    "length": (),
+}
+
+
+def cache_pspecs(rules: MeshRules, cache_tree):
+    """PartitionSpec tree for a decode-cache pytree (handles scan stacking)."""
+    import jax
+
+    def leaf_spec(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        axes = CACHE_RULES.get(name)
+        if axes is None:
+            return rules.pspec([None] * leaf.ndim, leaf.shape)
+        if leaf.ndim == len(axes) + 1:           # scan-stacked
+            axes = (None,) + axes
+        return rules.pspec(axes, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+AXIS_MAP_MULTIPOD = dict(AXIS_MAP_1POD, batch=("pod", "data"))
+
+
+def make_rules(mesh, *, sequence_parallel: bool = False,
+               fsdp: bool = True, moe_ep: bool | None = None,
+               n_routed: int = 0, moe_resident: bool = False) -> MeshRules:
+    """``moe_ep``: EP-able configs store expert weights with the hidden dim
+    FSDP-sharded over "data" (gathered just-in-time by the MoE shard_map);
+    expert-TP configs store the hidden dim over "model" permanently.  When
+    left None it is derived from ``n_routed`` divisibility."""
+    multi_pod = "pod" in mesh.shape
+    axis_map = dict(AXIS_MAP_MULTIPOD if multi_pod else AXIS_MAP_1POD)
+    if sequence_parallel:
+        axis_map["seq"] = "model"
+    if not fsdp:
+        axis_map["fsdp"] = None
+    if moe_ep is None:
+        tp = mesh.shape.get("model", 1)
+        moe_ep = bool(n_routed) and n_routed % tp == 0
+    # EP:        wi [E→model, D, H→data]   (H gathered just-in-time)
+    # expert-TP: wi [E, D→data, H→model]   (D gathered just-in-time)
+    # Either way expert weights/optimizer state are ~(data×model)-sharded.
+    axis_map["expert_ffn"] = "data" if moe_ep else "model"
+    axis_map["expert_dmodel"] = None if moe_ep else "data"
+    if not moe_ep:
+        axis_map["expert"] = None
+    if moe_resident:
+        # decode: experts fully sharded over data×model, weights resident
+        # (storage layout == the resident shard_map's in_specs).
+        axis_map["expert"] = ("data", "model")
+        axis_map["expert_ffn"] = None
+        axis_map["expert_dmodel"] = None
+    return MeshRules(mesh=mesh, axis_map=axis_map, param_rules=PARAM_RULES)

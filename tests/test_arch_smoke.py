@@ -1,0 +1,107 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step on CPU, asserting output shapes and no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, reduced_config
+from repro.models import transformer as T
+
+ARCHS = list_archs()
+
+
+def _inputs(cfg, batch=2, seq=16):
+    key = jax.random.PRNGKey(0)
+    tokens = jax.random.randint(key, (batch, seq), 0, cfg.vocab)
+    return tokens
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_smoke(arch):
+    cfg = reduced_config(arch)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    tokens = _inputs(cfg)
+    if cfg.frontend == "vision":
+        from repro.models.frontend import vision_frontend
+        patches = jax.random.normal(jax.random.PRNGKey(2), (2, 4, cfg.d_model))
+        embeds = vision_frontend(params, tokens, patches, cfg)
+        logits, _, aux = T.forward(params, tokens, cfg, embeds=embeds)
+        assert logits.shape == (2, 16 + 4, cfg.vocab)
+    else:
+        logits, _, aux = T.forward(params, tokens, cfg)
+        assert logits.shape == (2, 16, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN logits"
+    assert jnp.isfinite(aux)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    """One SGD step must produce finite grads for every param."""
+    cfg = reduced_config(arch)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    tokens = _inputs(cfg)
+
+    def loss_fn(p):
+        logits, _, aux = T.forward(p, tokens, cfg)
+        tgt = jnp.roll(tokens, -1, axis=1)
+        ll = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(ll, tgt[..., None], axis=-1).mean()
+        return nll + aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss {loss}"
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat), f"{arch}: NaN grads"
+    # At least one gradient must be nonzero (the graph is connected).
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch", ["stablelm-1.6b", "granite-20b",
+                                  "qwen2-moe-a2.7b", "deepseek-v3-671b",
+                                  "recurrentgemma-2b", "mamba2-130m"])
+def test_decode_smoke(arch):
+    """Prefill + 3 decode steps; cache-backed logits stay finite and match
+    the full forward pass at the last position."""
+    cfg = reduced_config(arch)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    tokens = _inputs(cfg, batch=2, seq=12)
+    caches = T.init_caches(cfg, 2, 32)
+    lf, _, _ = T.forward(params, tokens, cfg)
+    x = None
+    for t in range(12):
+        x, caches, _ = T.forward(params, tokens[:, t:t + 1], cfg,
+                                 caches=caches, positions=jnp.arange(t, t + 1))
+    np.testing.assert_allclose(np.asarray(x[:, 0]), np.asarray(lf[:, 11]),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_full_configs_construct():
+    """The FULL assigned configs must at least construct and report sane
+    layer counts (they are lowered only via the dry-run)."""
+    expect_layers = {
+        "musicgen-medium": 48, "stablelm-12b": 40, "stablelm-1.6b": 24,
+        "qwen2.5-14b": 48, "granite-20b": 52, "recurrentgemma-2b": 26,
+        "mamba2-130m": 24, "qwen2-moe-a2.7b": 24, "deepseek-v3-671b": 61,
+        "llava-next-34b": 60, "paper-opt1.3b": 24,
+    }
+    for arch, n in expect_layers.items():
+        cfg = get_config(arch)
+        assert cfg.n_layers == n, (arch, cfg.n_layers, n)
+
+
+def test_mtp_head():
+    cfg = reduced_config("deepseek-v3-671b")
+    assert cfg.mtp
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    tokens = _inputs(cfg)
+    logits, _, _ = T.forward(params, tokens, cfg)
+    # MTP needs hidden states: recompute trunk then the extra head.
+    from repro.models import layers as L
+    x = L.embed(params["embed"], tokens).astype(cfg.activation_dtype)
+    from repro.models.transformer import _run_segments, mtp_logits
+    h, _, _ = _run_segments(params, x, jnp.arange(16), cfg)
+    ml = mtp_logits(params, tokens, h, cfg, jnp.arange(16))
+    assert ml.shape == logits.shape
+    assert not bool(jnp.isnan(ml).any())

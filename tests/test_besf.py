@@ -1,0 +1,159 @@
+"""Property + behaviour tests for the faithful BESF algorithm and LATS.
+
+The key invariants (hypothesis-driven):
+  1. margin soundness:  lower <= exact score <= upper at every round;
+  2. argmax survival:   the max-logit valid token is never pruned;
+  3. exactness:         survivors' final logits equal dense INT12 logits;
+  4. containment:       block-streaming keeps a superset of per-token ref;
+  5. monotone traffic:  smaller alpha => fewer or equal planes fetched.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import margins as margins_lib
+from repro.core import quantization as qlib
+from repro.core.baselines import dense_attention
+from repro.core.besf import BitStopperConfig, besf_attention
+from repro.core.block_adaptation import block_bitstopper_attention
+
+
+def _random_qkv(seed, Sq=8, Sk=32, d=16, spiky=True):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(Sq, d)).astype(np.float32)
+    k = rng.normal(size=(Sk, d)).astype(np.float32)
+    if spiky:
+        for i in range(Sq):
+            j = rng.integers(0, Sk)
+            q[i] += 6.0 * k[j] / (np.linalg.norm(k[j]) ** 2) * np.sqrt(d)
+    v = rng.normal(size=(Sk, d)).astype(np.float32)
+    return jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_margin_soundness(seed):
+    rng = np.random.default_rng(seed)
+    d = 8
+    q = jnp.asarray(rng.normal(size=(4, d)) * 2, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(16, d)) * 2, jnp.float32)
+    q_int, _ = qlib.quantize(q, 12)
+    k_int, _ = qlib.quantize(k, 12)
+    planes = qlib.to_bitplanes(k_int, 12)
+    exact = (q_int @ k_int.T).astype(np.int64)
+    m_min, m_max = margins_lib.bit_margins(q_int, 12)
+    for r in range(12):
+        part = np.zeros_like(np.asarray(exact))
+        w = np.array([-(2 ** 11)] + [2 ** (11 - t) for t in range(1, 12)])
+        for t in range(r + 1):
+            part = part + w[t] * np.asarray(q_int) @ np.asarray(planes[t]).T.astype(np.int64)
+        lower = part + np.asarray(m_min[r])[:, None]
+        upper = part + np.asarray(m_max[r])[:, None]
+        assert np.all(lower <= np.asarray(exact) + 1e-6)
+        assert np.all(np.asarray(exact) <= upper + 1e-6)
+        if r == 11:  # all bits seen: interval collapses
+            np.testing.assert_allclose(lower, upper)
+            np.testing.assert_allclose(lower, np.asarray(exact))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([0.2, 0.5, 0.8]))
+def test_argmax_always_survives(seed, alpha):
+    q, k, v = _random_qkv(seed)
+    cfg = BitStopperConfig(alpha=alpha)
+    res = besf_attention(q, k, v, cfg)
+    # dense INT12 logits define the true argmax
+    _, info = dense_attention(q, k, v)
+    arg = jnp.argmax(info["logits"], axis=-1)
+    surv_at_arg = jnp.take_along_axis(res.stats.survivors, arg[:, None], axis=-1)
+    assert bool(jnp.all(surv_at_arg))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_survivor_logits_exact(seed):
+    """Stage fusion: a survivor's logit equals the dense INT12 logit exactly."""
+    q, k, v = _random_qkv(seed)
+    res = besf_attention(q, k, v, BitStopperConfig(alpha=0.6))
+    _, info = dense_attention(q, k, v)
+    surv = np.asarray(res.stats.survivors)
+    np.testing.assert_allclose(
+        np.asarray(res.scores)[surv], np.asarray(info["logits"])[surv], rtol=1e-6
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_block_keeps_superset(seed):
+    """Streaming prefix-max thresholds are conservative vs per-token ref."""
+    q, k, v = _random_qkv(seed, Sq=8, Sk=32, d=16)
+    cfg = BitStopperConfig(alpha=0.6)
+    ref = besf_attention(q, k, v, cfg)
+    blk = block_bitstopper_attention(q, k, v, cfg, block_q=4, block_k=8)
+    assert bool(jnp.all(ref.stats.survivors <= blk.stats.survivors))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_alpha_monotone_traffic(seed):
+    q, k, v = _random_qkv(seed)
+    prev = None
+    for alpha in (0.2, 0.5, 0.8):
+        res = besf_attention(q, k, v, BitStopperConfig(alpha=alpha))
+        tot = int(res.stats.planes_fetched.sum())
+        if prev is not None:
+            assert tot >= prev  # larger alpha keeps more -> fetches more
+        prev = tot
+
+
+def test_probs_normalized_over_survivors():
+    q, k, v = _random_qkv(3)
+    res = besf_attention(q, k, v, BitStopperConfig(alpha=0.6))
+    sums = np.asarray(res.probs.sum(-1))
+    np.testing.assert_allclose(sums, 1.0, atol=1e-5)
+    assert np.all(np.asarray(res.probs)[~np.asarray(res.stats.survivors)] == 0)
+
+
+def test_causal_mask_respected():
+    q, k, v = _random_qkv(4, Sq=16, Sk=16)
+    res = besf_attention(q, k, v, BitStopperConfig(alpha=0.8), causal=True)
+    probs = np.asarray(res.probs)
+    assert np.all(np.triu(probs, k=1) == 0)
+    assert np.all(np.isfinite(np.asarray(res.out)))
+    # planes are never fetched for masked-out (invalid) pairs
+    fetched = np.asarray(res.stats.planes_fetched)
+    assert np.all(np.triu(fetched, k=1) == 0)
+
+
+def test_alpha_zero_keeps_only_near_max():
+    """alpha=0: threshold == max lower bound -> minimal survivors."""
+    q, k, v = _random_qkv(5)
+    res0 = besf_attention(q, k, v, BitStopperConfig(alpha=0.0))
+    res1 = besf_attention(q, k, v, BitStopperConfig(alpha=1.0))
+    assert int(res0.stats.survivors.sum()) <= int(res1.stats.survivors.sum())
+    assert int(res0.stats.survivors.sum()) >= q.shape[0]  # argmax per row
+
+
+def test_batched_matches_loop():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(2, 2, 8, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 2, 16, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 2, 16, 16)), jnp.float32)
+    cfg = BitStopperConfig(alpha=0.6)
+    batched = besf_attention(q, k, v, cfg)
+    for b in range(2):
+        for h in range(2):
+            single = besf_attention(q[b, h], k[b, h], v[b, h], cfg)
+            np.testing.assert_allclose(
+                np.asarray(batched.out[b, h]), np.asarray(single.out), rtol=2e-5, atol=2e-6
+            )
+
+
+def test_decode_shape_single_query():
+    q, k, v = _random_qkv(9, Sq=1, Sk=64, d=32)
+    res = besf_attention(q, k, v, BitStopperConfig(alpha=0.6))
+    assert res.out.shape == (1, 32)
+    assert bool(jnp.all(jnp.isfinite(res.out)))

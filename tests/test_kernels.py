@@ -1,0 +1,144 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.besf import BitStopperConfig
+from repro.kernels import ref as ref_lib
+from repro.kernels.bitstopper_qk import bitstopper_attention_kernel
+from repro.kernels.flash_attention import flash_attention_single
+
+
+def _rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("Sq,Sk,d,dv", [
+    (128, 128, 64, 64),
+    (128, 256, 64, 128),
+    (256, 256, 128, 128),
+    (64, 128, 32, 32),
+])
+@pytest.mark.parametrize("causal", [False, True])
+def test_flash_matches_ref(Sq, Sk, d, dv, causal):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k = _rand(ks[0], Sq, d), _rand(ks[1], Sk, d)
+    v = _rand(ks[2], Sk, dv)
+    got = flash_attention_single(q, k, v, causal=causal, block_q=64, block_k=64)
+    want = ref_lib.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (_rand(x, 128, 128, dtype=dtype) for x in ks)
+    got = flash_attention_single(q, k, v)
+    want = ref_lib.flash_attention(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), atol=tol, rtol=tol
+    )
+
+
+# ---------------------------------------------------------------------------
+# bitstopper fused kernel vs block-granular oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("Sq,Sk,d,dv,bq,bk", [
+    (64, 64, 32, 32, 32, 32),
+    (64, 128, 64, 64, 32, 64),
+    (128, 128, 64, 64, 64, 64),
+    (32, 256, 64, 32, 32, 64),
+])
+@pytest.mark.parametrize("alpha", [0.2, 0.6])
+def test_bitstopper_kernel_matches_oracle(Sq, Sk, d, dv, bq, bk, alpha):
+    ks = jax.random.split(jax.random.PRNGKey(42), 3)
+    # Heavy-tailed scores so pruning actually fires.
+    q = _rand(ks[0], Sq, d) * 2.0
+    k = _rand(ks[1], Sk, d) * 2.0
+    v = _rand(ks[2], Sk, dv)
+    cfg = BitStopperConfig(alpha=alpha)
+
+    got = bitstopper_attention_kernel(q, k, v, cfg=cfg, block_q=bq, block_k=bk)
+    want = ref_lib.bitstopper_attention(q, k, v, cfg=cfg, block_q=bq, block_k=bk)
+
+    np.testing.assert_allclose(got.out, want.out, atol=2e-5, rtol=2e-5)
+    np.testing.assert_array_equal(
+        np.asarray(got.survivors, bool), np.asarray(want.stats.survivors)
+    )
+    np.testing.assert_array_equal(got.rounds, want.stats.rounds_per_block)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_bitstopper_kernel_causal(causal):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q, k, v = (_rand(x, 128, 64) for x in ks)
+    cfg = BitStopperConfig(alpha=0.6)
+    got = bitstopper_attention_kernel(q, k, v, cfg=cfg, block_q=64, block_k=64,
+                                      causal=causal)
+    want = ref_lib.bitstopper_attention(q, k, v, cfg=cfg, block_q=64, block_k=64,
+                                        causal=causal)
+    np.testing.assert_allclose(got.out, want.out, atol=2e-5, rtol=2e-5)
+    np.testing.assert_array_equal(
+        np.asarray(got.survivors, bool), np.asarray(want.stats.survivors)
+    )
+
+
+def test_bitstopper_kernel_batched():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _rand(ks[0], 2, 3, 64, 32)   # [B, H, S, d]
+    k = _rand(ks[1], 2, 3, 64, 32)
+    v = _rand(ks[2], 2, 3, 64, 32)
+    got = bitstopper_attention_kernel(q, k, v, block_q=32, block_k=32)
+    want = ref_lib.bitstopper_attention(q, k, v, block_q=32, block_k=32)
+    assert got.out.shape == (2, 3, 64, 32)
+    np.testing.assert_allclose(got.out, want.out, atol=2e-5, rtol=2e-5)
+
+
+def test_bitstopper_kernel_skips_planes():
+    """With a spiky attention distribution whole kv blocks terminate early,
+    so the kernel fetches strictly fewer bit planes than the dense 12/block."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    d = 64
+    u = jax.random.normal(ks[0], (d,))
+    u = u / jnp.linalg.norm(u)
+    # All queries share a dominant direction; the first kv block contains the
+    # only keys aligned with it — every later block is prunable early.  The
+    # hot-pair logit is ~ (8*8)/sqrt(64) = 8 » alpha*radius = 2, so LATS has
+    # real headroom to prune (a <2-logit spread is *correctly* kept whole).
+    q = 8.0 * u[None, :] + 0.05 * jax.random.normal(ks[1], (64, d))
+    k_hot = 8.0 * u[None, :] + 0.05 * jax.random.normal(ks[2], (32, d))
+    k_cold = 0.05 * jax.random.normal(ks[3], (224, d))
+    k = jnp.concatenate([k_hot, k_cold], axis=0)
+    v = jax.random.normal(jax.random.PRNGKey(12), (256, d))
+    cfg = BitStopperConfig(alpha=0.4)
+    got = bitstopper_attention_kernel(q, k, v, cfg=cfg, block_q=32, block_k=32)
+    total_rounds = int(np.asarray(got.rounds).sum())
+    dense_rounds = got.rounds.size * cfg.bits
+    assert total_rounds < dense_rounds, (
+        f"no early termination: {total_rounds} == {dense_rounds}"
+    )
+    # Output must still match the oracle bit-for-bit.
+    want = ref_lib.bitstopper_attention(q, k, v, cfg=cfg, block_q=32, block_k=32)
+    np.testing.assert_allclose(got.out, want.out, atol=2e-5, rtol=2e-5)
+
+
+def test_bitstopper_kernel_alpha0_is_exactish_dense():
+    """alpha=0 prunes only tokens strictly below the max lower bound; output
+    must match dense INT12 attention on the surviving mass ~closely."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q, k, v = (_rand(x, 64, 64) for x in ks)
+    cfg = BitStopperConfig(alpha=1.0)  # widest threshold: keep nearly all
+    got = bitstopper_attention_kernel(q, k, v, cfg=cfg, block_q=32, block_k=32)
+    dense = ref_lib.flash_attention(q, k, v)
+    # INT12 quantization error only.
+    np.testing.assert_allclose(got.out, dense, atol=5e-2, rtol=5e-2)

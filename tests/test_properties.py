@@ -1,0 +1,171 @@
+"""Hypothesis property tests on the system's core invariants.
+
+The paper's correctness rests on one exact statement: at every bit round r,
+
+    A^r_ij + M_i^{r,min}  <=  A_ij  <=  A^r_ij + M_i^{r,max}
+
+(the bit-level uncertainty margin is a true interval bound).  Everything
+else — mode survival, conservativeness of the block adaptation — follows.
+These tests check the invariants on adversarial integer inputs, not just
+happy-path floats.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import margins as margins_lib
+from repro.core import quantization as qlib
+from repro.core.besf import BitStopperConfig, besf_attention
+from repro.core.block_adaptation import block_bitstopper_attention
+
+_settings = settings(max_examples=25, deadline=None)
+
+ints12 = st.integers(min_value=-2048, max_value=2047)
+
+
+@st.composite
+def int_vectors(draw, max_d=16):
+    d = draw(st.integers(2, max_d))
+    q = draw(st.lists(ints12, min_size=d, max_size=d))
+    k = draw(st.lists(ints12, min_size=d, max_size=d))
+    return np.array(q, np.int32), np.array(k, np.int32)
+
+
+@given(int_vectors())
+@_settings
+def test_margin_interval_bound_every_round(qk):
+    """lower <= exact <= upper, bit-for-bit, at every round."""
+    q, k = qk
+    bits = 12
+    planes = np.asarray(qlib.to_bitplanes(jnp.asarray(k), bits))
+    m_min, m_max = margins_lib.bit_margins(jnp.asarray(q)[None, :], bits)
+    m_min, m_max = np.asarray(m_min)[:, 0], np.asarray(m_max)[:, 0]
+    exact = int(q.astype(np.int64) @ k.astype(np.int64))
+    w = np.array([2 ** (bits - 1 - r) for r in range(bits)], np.int64)
+    w[0] = -w[0]
+    partial = 0
+    for r in range(bits):
+        partial += int(w[r]) * int(q.astype(np.int64) @ planes[r])
+        lo, hi = partial + m_min[r], partial + m_max[r]
+        assert lo <= exact <= hi, (
+            f"round {r}: [{lo}, {hi}] does not contain {exact}")
+    assert partial == exact  # all planes consumed -> exact score
+
+
+@given(int_vectors())
+@_settings
+def test_bitplane_roundtrip(qk):
+    _, k = qk
+    planes = qlib.to_bitplanes(jnp.asarray(k), 12)
+    back = qlib.from_bitplanes(planes)
+    np.testing.assert_array_equal(np.asarray(back), k)
+
+
+@given(st.integers(0, 2**32 - 1), st.floats(0.1, 0.9))
+@_settings
+def test_mode_always_survives(seed, alpha):
+    """The argmax-score token can never be pruned by LATS (its upper bound
+    is >= its own lower bound > eta)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (4, 16)) * 3
+    k = jax.random.normal(ks[1], (32, 16)) * 3
+    v = jax.random.normal(ks[2], (32, 8))
+    res = besf_attention(q, k, v, cfg=BitStopperConfig(alpha=float(alpha)))
+    scores = np.asarray(res.scores)
+    surv = np.asarray(res.stats.survivors)
+    # scores of pruned = NEG_INF so argmax over scores is a survivor.
+    for i in range(scores.shape[0]):
+        assert surv[i, scores[i].argmax()], f"query {i} lost its mode"
+
+
+@given(st.integers(0, 2**32 - 1), st.sampled_from([0.3, 0.6]))
+@_settings
+def test_block_variant_is_conservative(seed, alpha):
+    """The streaming prefix-max block variant keeps a SUPERSET of the
+    faithful global-max reference's survivors (quality >= paper)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (8, 16)) * 4
+    k = jax.random.normal(ks[1], (32, 16)) * 4
+    v = jax.random.normal(ks[2], (32, 8))
+    cfg = BitStopperConfig(alpha=alpha)
+    ref = besf_attention(q, k, v, cfg=cfg)
+    blk = block_bitstopper_attention(q, k, v, cfg=cfg, block_q=4, block_k=8)
+    ref_surv = np.asarray(ref.stats.survivors)
+    blk_surv = np.asarray(blk.stats.survivors)
+    assert (blk_surv | ~ref_surv).all(), "block variant pruned a token the \
+faithful reference kept"
+
+
+@given(st.integers(0, 2**32 - 1))
+@_settings
+def test_survivor_scores_are_exact(seed):
+    """Stage fusion: a surviving token's logit equals the full-precision
+    INT12 dot product (prediction work == execution work)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (4, 8)) * 2
+    k = jax.random.normal(ks[1], (16, 8)) * 2
+    v = jax.random.normal(ks[2], (16, 4))
+    res = besf_attention(q, k, v, cfg=BitStopperConfig(alpha=0.5))
+    q_int, qp = qlib.quantize(q, 12)
+    k_int, kp = qlib.quantize(k, 12)
+    exact = np.asarray(q_int @ k_int.T, np.float64) * float(
+        qp.scale * kp.scale / 8 ** 0.5)
+    scores = np.asarray(res.scores)
+    surv = np.asarray(res.stats.survivors)
+    np.testing.assert_allclose(scores[surv], exact[surv], rtol=1e-5)
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 4))
+@_settings
+def test_chunked_loss_matches_direct(seed, chunks):
+    """chunked_lm_loss == naive full-logits loss."""
+    from repro.train.train_step import chunked_lm_loss, lm_loss
+    from repro.models import layers as L
+    key = jax.random.PRNGKey(seed)
+    B, S, D, V = 2, 8 * chunks, 16, 32
+    h = jax.random.normal(key, (B, S, D))
+    table = jax.random.normal(jax.random.PRNGKey(seed + 1), (V, D))
+    tokens = jax.random.randint(jax.random.PRNGKey(seed + 2), (B, S), 0, V)
+    params = {"embed": {"table": table}}
+
+    class Cfg:
+        tie_embeddings = True
+    got = chunked_lm_loss(h, params, tokens, Cfg, chunk=8)
+    logits = L.unembed(params["embed"], h)
+    want = lm_loss(logits, tokens)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+@given(st.integers(0, 2**32 - 1))
+@_settings
+def test_int8_error_feedback_reduces_bias(seed):
+    """Compression error with feedback stays bounded and unbiased-ish:
+    sum of delivered grads ~ sum of true grads."""
+    from repro.train.train_step import _compress_int8
+    rng = np.random.default_rng(seed)
+    g_true = rng.normal(size=(64,)).astype(np.float32)
+    err = jnp.zeros((64,))
+    delivered = np.zeros((64,))
+    for _ in range(8):
+        q, scale, err = _compress_int8(jnp.asarray(g_true), err)
+        delivered += np.asarray(q, np.float32) * float(scale)
+    np.testing.assert_allclose(delivered / 8, g_true, atol=2e-2)
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 3))
+@_settings
+def test_pack_unpack_seq(seed, bits_pow):
+    rng = np.random.default_rng(seed)
+    S, d = 16, 8
+    bits = 4 * bits_pow
+    vals = rng.integers(-(2 ** (bits - 1)), 2 ** (bits - 1), (S, d))
+    planes = qlib.to_bitplanes(jnp.asarray(vals, jnp.int32), bits)
+    packed = qlib.pack_planes_seq(planes)
+    assert packed.shape == (bits, S // 8, d)
+    unpacked = qlib.unpack_planes_seq(packed)
+    np.testing.assert_array_equal(np.asarray(unpacked), np.asarray(planes))

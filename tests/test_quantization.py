@@ -1,0 +1,68 @@
+"""Unit + property tests for INT12 quantization and bit-plane decomposition."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as qlib
+
+
+def test_plane_weights_msb_negative():
+    w = qlib.plane_weights(12)
+    assert w[0] == -(2 ** 11)
+    assert w[-1] == 1
+    assert float(jnp.sum(w)) == -1  # -2^11 + (2^11 - 1)
+
+
+@pytest.mark.parametrize("bits", [4, 8, 12])
+def test_bitplane_roundtrip_exhaustive_range(bits):
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    vals = jnp.arange(lo, hi + 1, dtype=jnp.int32)
+    planes = qlib.to_bitplanes(vals, bits)
+    back = qlib.from_bitplanes(planes)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(vals))
+
+
+def test_partial_value_monotone_prefix():
+    vals = jnp.array([-2048, -1, 0, 1, 2047, 1234, -777], jnp.int32)
+    planes = qlib.to_bitplanes(vals, 12)
+    full = qlib.partial_value(planes, 11)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(vals))
+    # partial + remaining nonneg bits <= full for every prefix
+    for r in range(12):
+        part = np.asarray(qlib.partial_value(planes, r))
+        rem = 2 ** (11 - r) - 1
+        assert np.all(part <= np.asarray(vals))
+        assert np.all(np.asarray(vals) <= part + rem)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_quantize_dequantize_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(37,)) * rng.uniform(0.1, 10))
+    q, params = qlib.quantize(x, 12)
+    assert int(jnp.max(q)) <= params.qmax and int(jnp.min(q)) >= params.qmin
+    err = jnp.max(jnp.abs(qlib.dequantize(q, params) - x))
+    assert float(err) <= float(params.scale) * 0.5 + 1e-7
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([8, 16, 64]))
+def test_pack_unpack_seq_roundtrip(seed, S):
+    rng = np.random.default_rng(seed)
+    d = 16
+    q = jnp.asarray(rng.integers(-2048, 2048, size=(S, d)), jnp.int32)
+    planes = qlib.to_bitplanes(q, 12)
+    packed = qlib.pack_planes_seq(planes)
+    assert packed.shape == (12, S // 8, d)
+    np.testing.assert_array_equal(
+        np.asarray(qlib.unpack_planes_seq(packed)), np.asarray(planes)
+    )
+
+
+def test_pack_rejects_unaligned():
+    planes = jnp.zeros((12, 9, 4), jnp.uint8)
+    with pytest.raises(AssertionError):
+        qlib.pack_planes_seq(planes)
