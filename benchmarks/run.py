@@ -65,7 +65,8 @@ def _paper_claims():
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="fig3b | fig10_11 | fig12 | fig13a | fig13b")
+                    help="fig3b | fig10_11 | fig12 | fig13a | fig13b | "
+                         "serve_traffic")
     args = ap.parse_args()
 
     from benchmarks import fig3b, fig10_11, fig12_13
@@ -75,6 +76,7 @@ def main():
         "fig12": fig12_13.run_fig12,
         "fig13a": fig12_13.run_fig13a,
         "fig13b": fig12_13.run_fig13b,
+        "serve_traffic": fig12_13.run_serve_traffic,
     }
     if args.only:
         jobs = {args.only: jobs[args.only]}

@@ -1,6 +1,7 @@
-"""Batched serving with BitStopper sparse attention (the deployment shape
-of the paper's accelerator): prefill a batch of requests, decode with the
-predictor-free sparse score path, report measured traffic reduction.
+"""Continuous-batching serving with BitStopper sparse attention (the
+deployment shape of the paper's accelerator): a mixed-length request trace
+flows through the admission queue, prefill interleaves with in-flight
+decode, and every decode step runs the single-query BESF fast path.
 
     PYTHONPATH=src python examples/serve_sparse.py
 """
@@ -12,9 +13,7 @@ import numpy as np
 
 from repro.configs import reduced_config
 from repro.core.besf import BitStopperConfig
-from repro.models import transformer as T
-from repro.serving import ServeConfig, ServingEngine
-from repro.serving.engine import Request
+from repro.serving import ContinuousBatchingEngine, Request, ServeConfig
 
 
 def main():
@@ -37,27 +36,36 @@ def main():
                                      global_batch=8, seed=3))
     state = tr.train()
     params = state["params"]
-    engine = ServingEngine(cfg, params, ServeConfig(max_len=96))
+    engine = ContinuousBatchingEngine(
+        cfg, params, ServeConfig(max_len=96, max_slots=2, prefill_bucket=8))
 
+    # Mixed-length trace with more requests than slots: the queue drains
+    # as slots free up — no length bucketing, no re-padding.
     rng = np.random.default_rng(0)
     requests = [
-        Request(prompt=rng.integers(0, cfg.vocab, 48, dtype=np.int32),
+        Request(prompt=rng.integers(0, cfg.vocab, L, dtype=np.int32),
                 max_new_tokens=16)
-        for _ in range(4)
+        for L in (24, 48, 33, 48)
     ]
     t0 = time.monotonic()
-    engine.generate(requests)
+    engine.generate(requests, seed=0)
     dt = time.monotonic() - t0
     n = sum(len(r.generated) for r in requests)
-    print(f"served {len(requests)} requests / {n} tokens in {dt:.2f}s")
-    for i, r in enumerate(requests):
-        print(f"  req{i}: {r.generated}")
+    print(f"served {len(requests)} requests / {n} tokens in {dt:.2f}s "
+          f"({engine.counters})")
+    for r in requests:
+        print(f"  req{r.rid} (len {len(r.prompt)}): {r.generated}")
 
-    rep = engine.sparsity_report(np.stack([r.prompt for r in requests]))
-    print("\nmeasured BitStopper traffic on this batch (layer 0):")
-    print(f"  bit planes fetched:   {rep['plane_fraction']*100:.1f}% of dense")
-    print(f"  kv-blocks V-fetched:  {rep['block_alive_fraction']*100:.1f}%")
-    print(f"  surviving (q,k) pairs:{rep['survivor_fraction']*100:.1f}%")
+    rep = engine.sparsity_report([r.prompt for r in requests])
+    print("\nmeasured BitStopper traffic (layer 0, per served request):")
+    for pr in rep["per_request"]:
+        print(f"  len={pr['prompt_len']:3d}  "
+              f"bit planes fetched: {pr['plane_fraction']*100:5.1f}% of dense  "
+              f"kv-blocks V-fetched: {pr['block_alive_fraction']*100:5.1f}%  "
+              f"survivors: {pr['survivor_fraction']*100:5.1f}%")
+    print(f"aggregate: planes {rep['plane_fraction']*100:.1f}%, "
+          f"V-blocks {rep['block_alive_fraction']*100:.1f}%, "
+          f"survivors {rep['survivor_fraction']*100:.1f}%")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 gate: runs the full test suite on CPU.  A collection error (such
+# as a hard import of an uninstalled dependency) fails this script, which
+# is exactly the failure mode this gate exists to catch.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

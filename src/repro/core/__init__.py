@@ -1,6 +1,12 @@
 """BitStopper core algorithms (the paper's contribution, in JAX)."""
 
-from repro.core.besf import BESFOutput, BESFStats, BitStopperConfig, besf_attention
+from repro.core.besf import (
+    BESFOutput,
+    BESFStats,
+    BitStopperConfig,
+    besf_attention,
+    besf_attention_decode,
+)
 from repro.core.block_adaptation import (
     BlockBESFOutput,
     BlockStats,
@@ -18,6 +24,7 @@ __all__ = [
     "BESFStats",
     "BitStopperConfig",
     "besf_attention",
+    "besf_attention_decode",
     "BlockBESFOutput",
     "BlockStats",
     "block_bitstopper_attention",

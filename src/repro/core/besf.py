@@ -132,6 +132,129 @@ def _besf_single(
     )
 
 
+def _besf_decode_single(
+    q: jax.Array,               # [1, d] float — single decode query
+    k: jax.Array,               # [Sk, d]
+    v: jax.Array,               # [Sk, dv]
+    mask: jax.Array | None,     # [1, Sk] bool or None
+    cfg: BitStopperConfig,
+) -> BESFOutput:
+    """Sq=1 fast path: identical results to :func:`_besf_single`, different
+    schedule.
+
+    The reference issues one int matmul per bit round inside the LATS scan —
+    the right shape for prefill, but at decode (one query) each round is a
+    tiny matvec and the per-round setup dominates.  Here ALL plane
+    contributions are computed in one fused integer contraction up front
+    ([bits, Sk, d] x [d] -> [bits, Sk]) and prefix-summed; the remaining
+    per-round scan is pure elementwise threshold logic.
+
+    Bit-exactness vs the reference: a candidate alive at round r has, by
+    definition, accumulated every plane 0..r — so its gated partial equals
+    the ungated prefix sum.  Pruned candidates' partials diverge, but they
+    contribute neither to eta (masked by `alive`) nor to the output
+    (NEG_INF logits), so every observable — survivors, planes_fetched,
+    scores, probs, out — matches the reference bit for bit.
+    """
+    _, d = q.shape
+    Sk = k.shape[0]
+    bits = cfg.bits
+    sm_scale = 1.0 / (d ** 0.5)
+
+    q_int, q_params = qlib.quantize(q, bits)
+    k_int, k_params = qlib.quantize(k, bits)
+    planes = qlib.to_bitplanes(k_int, bits)                     # [bits, Sk, d]
+    w = (2 ** jnp.arange(bits - 1, -1, -1)).astype(jnp.int32)
+    w = w * jnp.where(jnp.arange(bits) == 0, -1, 1)
+
+    m_min, m_max = margins_lib.bit_margins(q_int, bits)         # [bits, 1]
+
+    scale_total = q_params.scale * k_params.scale * sm_scale
+    radius_int = cfg.radius / scale_total
+
+    valid = jnp.ones((1, Sk), bool) if mask is None else mask.astype(bool)
+
+    # One fused plane contraction + prefix sum replaces bits separate
+    # matvecs: deltas[r] = w_r * (q_int @ plane_r^T), partials[r] = sum<=r.
+    deltas = w[:, None, None] * jnp.einsum(
+        "rkd,qd->rqk", planes.astype(jnp.int32), q_int)         # [bits, 1, Sk]
+    partials = jnp.cumsum(deltas, axis=0)
+
+    def round_body(carry, inp):
+        alive, fetched = carry
+        part, mn, mx, r = inp
+        fetched = fetched + alive.astype(jnp.int32)
+        lower = part.astype(jnp.float32) + mn[:, None]
+        upper = part.astype(jnp.float32) + mx[:, None]
+        eta = lats_threshold(lower, alive, cfg.alpha, radius_int)
+        keep = lats_keep(upper, eta, alive)
+        keep = jnp.where(r < cfg.min_rounds - 1, alive, keep)
+        return (keep, fetched), None
+
+    fetched0 = jnp.zeros((1, Sk), jnp.int32)
+    (alive, fetched), _ = jax.lax.scan(
+        round_body, (valid, fetched0),
+        (partials, m_min, m_max, jnp.arange(bits)))
+
+    final = partials[-1]
+    logits = jnp.where(alive, final.astype(jnp.float32) * scale_total, NEG_INF)
+    logits = jnp.where(valid, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(alive & valid, probs, 0.0)
+
+    if cfg.quantize_v:
+        v_int, v_params = qlib.quantize(v, bits)
+        v_eff = qlib.dequantize(v_int, v_params)
+    else:
+        v_eff = v
+    out = probs @ v_eff
+
+    return BESFOutput(
+        out=out,
+        probs=probs,
+        scores=logits,
+        stats=BESFStats(planes_fetched=fetched, survivors=alive, valid=valid),
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def besf_attention_decode(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    cfg: BitStopperConfig = BitStopperConfig(),
+    mask: jax.Array | None = None,
+) -> BESFOutput:
+    """Decode-specialized BitStopper attention (Sq == 1 per leading index).
+
+    q [..., 1, d], k [..., Sk, d], v [..., Sk, dv]; ``mask`` broadcastable
+    to q.shape[:-2] + (1, Sk) — per-example masks (e.g. per serving slot)
+    are supported, unlike the prefill entry point.
+    """
+    assert q.shape[-2] == 1, "decode path is single-query; use besf_attention"
+    Sk = k.shape[-2]
+
+    if q.ndim == 2:
+        return _besf_decode_single(q, k, v, mask, cfg)
+
+    flat_q = q.reshape((-1,) + q.shape[-2:])
+    flat_k = k.reshape((-1,) + k.shape[-2:])
+    flat_v = v.reshape((-1,) + v.shape[-2:])
+    if mask is not None:
+        flat_m = jnp.broadcast_to(mask, q.shape[:-2] + (1, Sk))
+        flat_m = flat_m.reshape((-1, 1, Sk))
+        res = jax.vmap(lambda a, b, c, m: _besf_decode_single(a, b, c, m, cfg))(
+            flat_q, flat_k, flat_v, flat_m
+        )
+    else:
+        res = jax.vmap(lambda a, b, c: _besf_decode_single(a, b, c, None, cfg))(
+            flat_q, flat_k, flat_v
+        )
+    shape = q.shape[:-2]
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape(shape + x.shape[1:]), res)
+
+
 @partial(jax.jit, static_argnames=("cfg", "causal"))
 def besf_attention(
     q: jax.Array,

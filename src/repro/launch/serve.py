@@ -1,6 +1,10 @@
-"""Serving launcher: batched generation with BitStopper sparse attention.
+"""Serving launcher: continuous-batching generation with BitStopper sparse
+attention over a mixed-length request trace.
 
 ``python -m repro.launch.serve --arch stablelm-1.6b --impl bitstopper_xla``
+
+``--engine static`` selects the legacy length-bucketed batcher (the
+baseline ``benchmarks/serve_throughput.py`` measures against).
 """
 
 from __future__ import annotations
@@ -14,8 +18,23 @@ import numpy as np
 from repro.configs import reduced_config
 from repro.core.besf import BitStopperConfig
 from repro.models import transformer as T
-from repro.serving import ServeConfig, ServingEngine
-from repro.serving.engine import Request
+from repro.serving import (
+    ContinuousBatchingEngine,
+    Request,
+    ServeConfig,
+    StaticBucketEngine,
+)
+
+
+def make_trace(rng, vocab, n_requests, min_len, max_len, new_tokens):
+    """Mixed-length request trace (what a real frontend would enqueue)."""
+    return [
+        Request(prompt=rng.integers(0, vocab,
+                                    int(rng.integers(min_len, max_len + 1)),
+                                    dtype=np.int32),
+                max_new_tokens=new_tokens)
+        for _ in range(n_requests)
+    ]
 
 
 def main():
@@ -23,10 +42,16 @@ def main():
     ap.add_argument("--arch", default="stablelm-1.6b")
     ap.add_argument("--impl", default="bitstopper_xla",
                     choices=["xla", "bitstopper_xla"])
+    ap.add_argument("--engine", default="continuous",
+                    choices=["continuous", "static"])
     ap.add_argument("--alpha", type=float, default=0.6)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--min-prompt", type=int, default=8)
+    ap.add_argument("--max-prompt", type=int, default=48)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch).replace(
@@ -34,23 +59,33 @@ def main():
         bitstopper=BitStopperConfig(alpha=args.alpha),
     )
     params = T.init_model(jax.random.PRNGKey(0), cfg)
-    engine = ServingEngine(cfg, params, ServeConfig(
-        max_len=args.prompt_len + args.new_tokens + 8))
+    scfg = ServeConfig(max_len=args.max_prompt + args.new_tokens + 8,
+                       max_slots=args.slots, temperature=args.temperature)
+    if args.engine == "continuous":
+        engine = ContinuousBatchingEngine(cfg, params, scfg)
+    else:
+        engine = StaticBucketEngine(cfg, params, scfg)
 
-    rng = np.random.default_rng(0)
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab, args.prompt_len,
-                                        dtype=np.int32),
-                    max_new_tokens=args.new_tokens)
-            for _ in range(args.batch)]
+    rng = np.random.default_rng(args.seed)
+    reqs = make_trace(rng, cfg.vocab, args.requests,
+                      args.min_prompt, args.max_prompt, args.new_tokens)
     t0 = time.monotonic()
-    engine.generate(reqs)
+    engine.generate(reqs, seed=args.seed)
     dt = time.monotonic() - t0
     n_tok = sum(len(r.generated) for r in reqs)
-    print(f"[serve] {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / dt:.1f} tok/s, impl={args.impl})")
-    rep = engine.sparsity_report(np.stack([r.prompt for r in reqs]))
-    if rep:
-        print(f"[serve] measured sparsity: {rep}")
+    print(f"[serve] {len(reqs)} requests / {n_tok} new tokens in {dt:.2f}s "
+          f"({n_tok / dt:.1f} tok/s, engine={args.engine}, impl={args.impl})")
+    if isinstance(engine, ContinuousBatchingEngine):
+        print(f"[serve] counters: {engine.counters}")
+        rep = engine.sparsity_report([r.prompt for r in reqs])
+        if rep:
+            agg = {k: round(v, 4) for k, v in rep.items()
+                   if k != "per_request"}
+            print(f"[serve] measured sparsity (aggregate): {agg}")
+            for r in rep["per_request"]:
+                print(f"[serve]   len={r['prompt_len']:4d} "
+                      f"planes={r['plane_fraction']:.2f} "
+                      f"survivors={r['survivor_fraction']:.2f}")
 
 
 if __name__ == "__main__":

@@ -257,17 +257,47 @@ def chunked_attention(
 # ---------------------------------------------------------------------------
 
 
-def _bitstopper_full(q, k, v, cfg: AttnConfig, mask2d):
-    """q [B,S,Hq,D], k/v [B,T,Hkv,D], mask2d [S,T] or None → [B,S,Hq,D]."""
-    G = cfg.n_heads // cfg.n_kv_heads
+def _divisor_block(n: int, cap: int = 128) -> int:
+    """Largest divisor of n that is <= cap (block sizes must tile exactly)."""
+    b = min(cap, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _expand_gqa(q, k, v, G):
+    """[B,S,H*,D] layout → head-major [B,Hq,S,D] with KV heads repeated
+    (the BitStopper paths decide sparsity per query head)."""
     kr = jnp.repeat(k, G, axis=2).swapaxes(1, 2)      # [B, Hq, T, D]
     vr = jnp.repeat(v, G, axis=2).swapaxes(1, 2)
-    qt = q.swapaxes(1, 2)                             # [B, Hq, S, D]
+    return q.swapaxes(1, 2), kr, vr
+
+
+def _bitstopper_full(q, k, v, cfg: AttnConfig, mask2d):
+    """q [B,S,Hq,D], k/v [B,T,Hkv,D], mask2d [S,T] or None → [B,S,Hq,D]."""
+    qt, kr, vr = _expand_gqa(q, k, v, cfg.n_heads // cfg.n_kv_heads)
+    Sq = qt.shape[2]
 
     if cfg.impl == "bitstopper_xla" or mask2d is not None:
         from repro.core.block_adaptation import block_bitstopper_attention
-        bq = min(128, qt.shape[2])
-        bk = min(128, kr.shape[2])
+        Sk = kr.shape[2]
+        if mask2d is None and cfg.causal:
+            mask2d = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        # Pad up to a block multiple (pads fully masked: zero rows don't
+        # move the max-abs quant scale and dead blocks never fetch planes)
+        # rather than shrinking blocks to a divisor — a prime length would
+        # otherwise degrade to 1x1 blocks.
+        bq = min(128, Sq)
+        bk = min(128, Sk)
+        pad_q = (-Sq) % bq
+        pad_k = (-Sk) % bk
+        if pad_q or pad_k:
+            if mask2d is None:
+                mask2d = jnp.ones((Sq, Sk), bool)
+            mask2d = jnp.pad(mask2d, ((0, pad_q), (0, pad_k)))
+            qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+            kr = jnp.pad(kr, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+            vr = jnp.pad(vr, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
         flat = lambda a: a.reshape((-1,) + a.shape[2:])
         res = jax.vmap(
             lambda a, b, c: block_bitstopper_attention(
@@ -278,7 +308,7 @@ def _bitstopper_full(q, k, v, cfg: AttnConfig, mask2d):
     else:
         out = kops.attention(qt, kr, vr, impl=cfg.impl, causal=cfg.causal,
                              cfg=cfg.bitstopper)
-    return out.swapaxes(1, 2).astype(q.dtype)
+    return out.swapaxes(1, 2)[:, :Sq].astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -287,18 +317,34 @@ def _bitstopper_full(q, k, v, cfg: AttnConfig, mask2d):
 
 
 def init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.float32,
-               ring: bool = False):
+               ring: bool = False, per_slot: bool = False):
     """With ``ring=True`` (sliding-window layers) only ``window`` slots are
     allocated and writes wrap — O(window) memory for long_500k decode.
     Ring-ness needs no flag at use time: writes always go to
-    ``length mod n_slots``, which is the identity while length < n_slots."""
+    ``length mod n_slots``, which is the identity while length < n_slots.
+
+    With ``per_slot=True`` (continuous-batching serving) every batch row is
+    an independent *slot*: it carries its own write cursor (``length`` is
+    [batch]) and its own slot->position map (``pos`` is [batch, n_slots]),
+    so requests of different lengths share one decode batch without
+    re-padding.  ``cache_is_per_slot`` distinguishes the two layouts."""
     n_slots = min(max_len, cfg.window) if (ring and cfg.window) else max_len
+    if per_slot:
+        pos = jnp.full((batch, n_slots), POS_SENTINEL, jnp.int32)
+        length = jnp.zeros((batch,), jnp.int32)
+    else:
+        pos = jnp.full((n_slots,), POS_SENTINEL, jnp.int32)
+        length = jnp.zeros((), jnp.int32)
     return {
         "k": jnp.zeros((batch, n_slots, cfg.n_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((batch, n_slots, cfg.n_kv_heads, cfg.head_dim), dtype),
-        "pos": jnp.full((n_slots,), POS_SENTINEL, jnp.int32),
-        "length": jnp.zeros((), jnp.int32),
+        "pos": pos,
+        "length": length,
     }
+
+
+def cache_is_per_slot(cache) -> bool:
+    return cache["pos"].ndim == 2
 
 
 def _update_cache(cache, k, v, positions):
@@ -316,11 +362,33 @@ def _update_cache(cache, k, v, positions):
 
     S = k.shape[1]
     n_slots = cache["k"].shape[1]
-    widx = jax.lax.rem(cache["length"], n_slots)
     kc = k.astype(cache["k"].dtype)
     vc = v.astype(cache["v"].dtype)
     pc = positions.astype(jnp.int32)
 
+    if cache_is_per_slot(cache):
+        # Per-slot layout: every batch row has its own cursor.  Writes are a
+        # batched scatter at (length[b] + i) mod n_slots — rows at different
+        # fill levels advance independently (continuous batching).  Tokens
+        # whose position is the pad sentinel (bucketed prefill padding,
+        # always trailing) are routed out of bounds and dropped, so pads
+        # never consume ring slots or advance the cursor.
+        B = kc.shape[0]
+        pc2 = jnp.broadcast_to(pc, (B, S))
+        real = pc2 != POS_SENTINEL
+        idx = jax.lax.rem(
+            cache["length"][:, None] + jnp.arange(S, dtype=jnp.int32)[None],
+            n_slots)                                          # [B, S]
+        idx = jnp.where(real, idx, n_slots)                   # OOB => dropped
+        rows = jnp.arange(B)[:, None]
+        ck = cache["k"].at[rows, idx].set(kc, mode="drop")
+        cv = cache["v"].at[rows, idx].set(vc, mode="drop")
+        cpos = cache["pos"].at[rows, idx].set(pc2, mode="drop")
+        new = dict(cache, k=ck, v=cv, pos=cpos,
+                   length=cache["length"] + real.sum(axis=1, dtype=jnp.int32))
+        return ck, cv, cpos, new
+
+    widx = jax.lax.rem(cache["length"], n_slots)
     rules = current_rules()
     use_shmap = (S == 1 and rules is not None
                  and "model" in rules.mesh.shape
@@ -367,11 +435,47 @@ def _update_cache(cache, k, v, positions):
 
 def _cached_attention(q, k_all, v_all, q_positions, k_positions,
                       cfg: AttnConfig):
-    """Attention against the (padded/ring) cache, mask from slot positions."""
-    mask = _mask_block(q_positions, k_positions, causal=True,
-                       window=cfg.window)
+    """Attention against the (padded/ring) cache, mask from slot positions.
+
+    ``q_positions`` / ``k_positions`` may be 1-D (legacy shared-cursor
+    cache: mask shared across the batch) or 2-D [B, ...] (per-slot cache:
+    every batch row masks against its own fill level)."""
+    B, Sq = q.shape[0], q.shape[1]
+    per_slot = q_positions.ndim == 2
+    if per_slot:
+        mask = jax.vmap(
+            lambda qp, kp: _mask_block(qp, kp, causal=True, window=cfg.window)
+        )(q_positions, k_positions)                          # [B, Sq, T]
+    else:
+        mask = _mask_block(q_positions, k_positions, causal=True,
+                           window=cfg.window)                # [Sq, T]
+    bmask = mask if per_slot else jnp.broadcast_to(
+        mask[None], (B,) + mask.shape)
+
     if cfg.impl in ("bitstopper_xla", "bitstopper"):
-        return _bitstopper_full(q, k_all, v_all, cfg, mask)
+        if Sq == 1:
+            # Decode fast path: single-query BESF with the per-round
+            # threshold-scan setup amortized across planes (one fused int
+            # plane contraction per head instead of one per bit round).
+            from repro.core.besf import besf_attention_decode
+            qt, kr, vr = _expand_gqa(q, k_all, v_all,
+                                     cfg.n_heads // cfg.n_kv_heads)
+            res = besf_attention_decode(
+                qt, kr, vr, cfg=cfg.bitstopper, mask=bmask[:, None])
+            return res.out.swapaxes(1, 2).astype(q.dtype)
+        if not per_slot:
+            return _bitstopper_full(q, k_all, v_all, cfg, mask)
+        if B == 1:
+            return _bitstopper_full(q, k_all, v_all, cfg, mask[0])
+        # Per-slot multi-request prefill: per-token reference with
+        # per-example masks (rare; the engine prefills one slot at a time).
+        from repro.core.besf import besf_attention
+        qt, kr, vr = _expand_gqa(q, k_all, v_all,
+                                 cfg.n_heads // cfg.n_kv_heads)
+        res = besf_attention(qt, kr, vr, cfg=cfg.bitstopper,
+                             mask=bmask[:, None])
+        return res.out.swapaxes(1, 2).astype(q.dtype)
+
     G = cfg.n_heads // cfg.n_kv_heads
     B, T, Hkv, D = k_all.shape
     qg = q.reshape(q.shape[0], q.shape[1], Hkv, G, D)
@@ -380,9 +484,9 @@ def _cached_attention(q, k_all, v_all, q_positions, k_positions,
     # decode HBM-traffic reduction vs .astype(f32) upcasting).
     logits = jnp.einsum("bqhgd,bthd->bhgqt", qg, k_all,
                         preferred_element_type=jnp.float32) / D ** 0.5
-    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    logits = jnp.where(bmask[:, None, None], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
-    p = jnp.where(mask[None, None, None], p, 0.0)
+    p = jnp.where(bmask[:, None, None], p, 0.0)
     out = jnp.einsum("bhgqt,bthd->bqhgd", p.astype(v_all.dtype), v_all,
                      preferred_element_type=jnp.float32)
     return out.reshape(q.shape).astype(q.dtype)
@@ -400,18 +504,36 @@ def attention(
     cfg: AttnConfig,
     cache: dict[str, Any] | None = None,
 ):
-    """Returns (out [B,S,d_model], new_cache)."""
+    """Returns (out [B,S,d_model], new_cache).
+
+    ``positions`` is [S] (shared across the batch) or, with a per-slot
+    cache, [B, S] — each serving slot decodes at its own absolute position.
+    """
     B, S, _ = x.shape
+    if cache is not None and cache_is_per_slot(cache) and positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None], (B, S))
     q = L.linear(p["wq"], x)                         # [B, S, Hq, D]
     k = L.linear(p["wk"], x)                         # [B, S, Hkv, D]
     v = L.linear(p["wv"], x)
-    q = L.rope(q, positions[None, :], cfg.rope_theta)
-    k = L.rope(k, positions[None, :], cfg.rope_theta)
+    rope_pos = positions if positions.ndim == 2 else positions[None, :]
+    q = L.rope(q, rope_pos, cfg.rope_theta)
+    k = L.rope(k, rope_pos, cfg.rope_theta)
+    if positions.ndim == 2:
+        # Zero pad rows (bucketed-prefill sentinel positions): their k/v are
+        # dropped by the cache scatter, and zero q rows keep the BitStopper
+        # per-tensor max-abs quant scale independent of how much bucket
+        # padding a request happened to get.
+        real = (positions != POS_SENTINEL)[..., None, None]
+        q, k, v = q * real, k * real, v * real
     q = constrain(q, "batch", "seq", "heads", None)
     k = constrain(k, "batch", "seq", "kv_heads", None)
     v = constrain(v, "batch", "seq", "kv_heads", None)
 
     if cache is None:
+        if positions.ndim == 2:
+            # The cache-free (training/prefill) path is batch-uniform; 2-D
+            # positions only arise from the per-slot serving cache.
+            positions = positions[0]
         if cfg.impl in ("bitstopper_xla", "bitstopper"):
             mask2d = None
             if cfg.window is not None:
@@ -419,10 +541,8 @@ def attention(
                                      cfg.window)
             out = _bitstopper_full(q, k, v, cfg, mask2d)
         elif cfg.impl == "flash" and cfg.window is None:
-            G = cfg.n_heads // cfg.n_kv_heads
-            kr = jnp.repeat(k, G, axis=2).swapaxes(1, 2)
-            vr = jnp.repeat(v, G, axis=2).swapaxes(1, 2)
-            out = kops.attention(q.swapaxes(1, 2), kr, vr, impl="flash",
+            qt, kr, vr = _expand_gqa(q, k, v, cfg.n_heads // cfg.n_kv_heads)
+            out = kops.attention(qt, kr, vr, impl="flash",
                                  causal=cfg.causal).swapaxes(1, 2)
         else:
             out = chunked_attention(

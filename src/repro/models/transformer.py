@@ -87,12 +87,17 @@ def block_forward(p, x, positions, spec: BlockSpec, cfg: ModelConfig,
 
 
 def init_block_cache(spec: BlockSpec, cfg: ModelConfig, batch: int,
-                     max_len: int, dtype=jnp.float32):
+                     max_len: int, dtype=jnp.float32, per_slot: bool = False):
     if spec.mixer == "attn":
-        return init_cache(cfg.attn_config(False), batch, max_len, dtype)
+        return init_cache(cfg.attn_config(False), batch, max_len, dtype,
+                          per_slot=per_slot)
     if spec.mixer == "local_attn":
         return init_cache(cfg.attn_config(True), batch, max_len, dtype,
-                          ring=True)
+                          ring=True, per_slot=per_slot)
+    if per_slot:
+        raise NotImplementedError(
+            f"per-slot serving cache supports attn/local_attn mixers only, "
+            f"got {spec.mixer!r}")
     if spec.mixer == "mla":
         return init_mla_cache(cfg.mla_config(), batch, max_len, dtype)
     if spec.mixer == "ssm":
@@ -226,13 +231,17 @@ def mtp_logits(params, tokens, h, cfg: ModelConfig, positions):
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int,
-                dtype=jnp.float32):
-    """Stacked (scan-compatible) cache pytree for decode."""
+                dtype=jnp.float32, per_slot: bool = False):
+    """Stacked (scan-compatible) cache pytree for decode.
+
+    ``per_slot=True`` builds the continuous-batching layout: each batch row
+    is an independent serving slot with its own write cursor and
+    slot-position map (see :func:`repro.models.attention.init_cache`)."""
     caches: dict[str, Any] = {}
     for si, (unit, reps) in enumerate(cfg.segments):
         def unit_cache(_):
             return {f"b{i}": init_block_cache(unit[i], cfg, batch, max_len,
-                                              dtype)
+                                              dtype, per_slot=per_slot)
                     for i in range(len(unit))}
         if cfg.scan_layers and reps > 1:
             caches[f"seg{si}"] = jax.vmap(unit_cache)(jnp.arange(reps))

@@ -1,3 +1,9 @@
-"""Serving: prefill/decode engine with BitStopper sparse attention."""
+"""Serving: continuous-batching engine with BitStopper sparse decode."""
 
-from repro.serving.engine import ServeConfig, ServingEngine  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    ContinuousBatchingEngine,
+    Request,
+    ServeConfig,
+    ServingEngine,
+    StaticBucketEngine,
+)

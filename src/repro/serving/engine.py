@@ -1,19 +1,40 @@
-"""Batched prefill/decode serving engine.
+"""Continuous-batching serving engine with decode-specialized BitStopper.
 
 BitStopper is an *inference* accelerator: this engine is where the paper's
-technique is deployed.  Requests are batched by length bucket (uniform
-cache length per batch — the block-granular kernel's masks are shared
-across the batch), prefilled once, then decoded step-by-step with the
-sparse score path (``attn_impl="bitstopper_xla"`` on CPU, the Pallas kernel
-on a real TPU).
+technique is deployed.  The scheduler is a continuous batcher (vLLM-style,
+minus paging of individual blocks):
 
-The engine also exposes ``sparsity_report()`` — measured plane-fetch /
-survivor statistics from the semantic model, feeding the Fig. 11/12
-benchmarks with *served-traffic* numbers rather than synthetic ones.
+* a FIFO **request queue** with admission into a fixed set of decode
+  **slots** — each slot is one row of a per-slot KV cache
+  (``init_caches(..., per_slot=True)``: per-row write cursors and
+  slot→position maps), so requests of *different* lengths share one decode
+  batch without re-padding;
+* **prefill/decode interleaving**: whenever a slot frees up the next queued
+  request is prefilled (one bucketed-length forward) and its KV inserted
+  into the freed slot, then joins the in-flight decode batch on the very
+  next step;
+* **eviction** on ``max_new_tokens`` or EOS frees the slot immediately.
+
+Decode runs the single-query BitStopper fast path
+(``besf_attention_decode``): all bit-plane contributions in one fused
+integer contraction, per-round LATS logic reduced to elementwise ops.
+
+Sampling is deterministic under a passed-in PRNG seed: every sampling event
+uses ``fold_in(base_key, tick)`` — no hidden global state, and re-serving
+the same trace with the same seed reproduces every token.
+
+``sparsity_report()`` returns measured plane-fetch / survivor statistics
+both aggregated and **per request**, feeding the Fig. 12/13 benchmarks
+with served-traffic numbers.
+
+``StaticBucketEngine`` preserves the previous static length-bucketed
+batcher as the baseline that ``benchmarks/serve_throughput.py`` compares
+against.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any
 
@@ -22,14 +43,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as T
+from repro.models.attention import POS_SENTINEL
 from repro.models.config import ModelConfig
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    max_len: int = 512
+    max_len: int = 512                # KV capacity per slot
+    max_slots: int = 4                # concurrent decode batch width
+    prefill_bucket: int = 16          # prompts pad up to a multiple of this
     temperature: float = 0.0          # 0 = greedy
     cache_dtype: str = "float32"
+    eos_id: int | None = None         # optional early stop token
 
 
 @dataclasses.dataclass
@@ -37,10 +62,252 @@ class Request:
     prompt: np.ndarray                # [S] int32
     max_new_tokens: int = 32
     generated: list = dataclasses.field(default_factory=list)
+    rid: int = -1                     # assigned at submit()
+    # per-request accounting, filled by the engine
+    prefill_len: int = 0
+    admitted_step: int = -1
+    finished_step: int = -1
 
 
-class ServingEngine:
-    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig = ServeConfig()):
+def _supported(cfg: ModelConfig) -> None:
+    mixers = {spec.mixer for unit, _ in cfg.segments for spec in unit}
+    bad = mixers - {"attn", "local_attn"}
+    if bad:
+        raise ValueError(
+            f"continuous batching serves attention models only "
+            f"(per-slot KV cache); config has mixers {sorted(bad)}")
+
+
+class ContinuousBatchingEngine:
+    """Request-level continuous batching over a per-slot KV cache."""
+
+    def __init__(self, cfg: ModelConfig, params,
+                 scfg: ServeConfig = ServeConfig()):
+        _supported(cfg)
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self._dtype = (jnp.bfloat16 if scfg.cache_dtype == "bfloat16"
+                       else jnp.float32)
+
+        def prefill_fn(params, tokens, caches, positions, last_idx):
+            # tokens/positions [1, Sp] (bucket-padded; pads hold the
+            # sentinel position and are dropped by the cache write).
+            logits, caches, _ = T.forward(params, tokens, cfg, caches=caches,
+                                          positions=positions)
+            last = jax.lax.dynamic_slice_in_dim(logits, last_idx, 1, axis=1)
+            return last[:, 0], caches
+
+        def decode_fn(params, tokens, caches, positions):
+            # tokens/positions [B, 1] — B slots, each at its own position.
+            logits, caches, _ = T.forward(params, tokens, cfg, caches=caches,
+                                          positions=positions)
+            return logits[:, -1], caches
+
+        def insert_fn(big, small, slot):
+            def ins(b, s):
+                # The slot (batch) axis is the first one where the engine
+                # cache (max_slots wide) and the batch-1 prefill cache
+                # differ; with max_slots == 1 every axis matches and the
+                # insert is a whole-cache replacement.
+                axis = next((i for i, (x, y) in
+                             enumerate(zip(b.shape, s.shape)) if x != y),
+                            None)
+                if axis is None:
+                    return s.astype(b.dtype)
+                starts = tuple(slot if i == axis else 0
+                               for i in range(b.ndim))
+                return jax.lax.dynamic_update_slice(
+                    b, s.astype(b.dtype), starts)
+
+            return jax.tree_util.tree_map(ins, big, small)
+
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn)
+        self._insert = jax.jit(insert_fn)
+
+        B = scfg.max_slots
+        self.caches = T.init_caches(cfg, B, scfg.max_len, self._dtype,
+                                    per_slot=True)
+        # Reused on every admission: jax arrays are immutable and prefill
+        # is functional, so one empty 1-slot cache serves all requests.
+        self._empty_slot = T.init_caches(cfg, 1, scfg.max_len, self._dtype,
+                                         per_slot=True)
+        self.slots: list[Request | None] = [None] * B
+        self.queue: collections.deque[Request] = collections.deque()
+        self.lengths = np.zeros((B,), np.int32)       # tokens in each slot
+        self.last_token = np.zeros((B,), np.int32)    # next decode input
+        self._next_rid = 0
+        self._step = 0
+        self._tick = 0                                # sampling-event counter
+        self._base_key = jax.random.PRNGKey(0)
+        self.counters = {"prefill_tokens": 0, "decode_tokens": 0,
+                         "decode_steps": 0, "decode_slot_steps": 0,
+                         "requests_finished": 0}
+
+    # ------------------------------------------------------------------
+    # scheduling
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> Request:
+        L = len(req.prompt)
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if L + req.max_new_tokens > self.scfg.max_len:
+            raise ValueError(
+                f"request needs {L}+{req.max_new_tokens} tokens, "
+                f"max_len={self.scfg.max_len}")
+        req.rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(req)
+        return req
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        """Deterministic sampling: key derived from (base_key, tick)."""
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        key = jax.random.fold_in(self._base_key, self._tick)
+        self._tick += 1
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, axis=-1)
+
+    def _bucketed(self, L: int) -> int:
+        b = self.scfg.prefill_bucket
+        return min(self.scfg.max_len, -(-L // b) * b)
+
+    def _admit(self) -> None:
+        while self.queue and None in self.slots:
+            slot = self.slots.index(None)
+            req = self.queue.popleft()
+            L = len(req.prompt)
+            Sp = self._bucketed(L)
+            tokens = np.zeros((1, Sp), np.int32)
+            tokens[0, :L] = np.asarray(req.prompt, np.int32)
+            positions = np.full((1, Sp), POS_SENTINEL, np.int32)
+            positions[0, :L] = np.arange(L, dtype=np.int32)
+
+            last_logits, small = self._prefill(
+                self.params, jnp.asarray(tokens), self._empty_slot,
+                jnp.asarray(positions), jnp.asarray(L - 1, jnp.int32))
+            self.caches = self._insert(self.caches, small,
+                                       jnp.asarray(slot, jnp.int32))
+
+            tok = int(np.asarray(self._sample(last_logits))[0])
+            req.generated.append(tok)
+            req.prefill_len = L
+            req.admitted_step = self._step
+            self.counters["prefill_tokens"] += L
+            self.slots[slot] = req
+            self.lengths[slot] = L
+            self.last_token[slot] = tok
+            self._maybe_evict(slot, tok)
+
+    def _maybe_evict(self, slot: int, tok: int) -> None:
+        req = self.slots[slot]
+        if req is None:
+            return
+        done = len(req.generated) >= req.max_new_tokens
+        if self.scfg.eos_id is not None and tok == self.scfg.eos_id:
+            done = True
+        if done:
+            req.finished_step = self._step
+            self.counters["requests_finished"] += 1
+            self.slots[slot] = None
+
+    def step(self) -> bool:
+        """One scheduler tick: admit from the queue, then one decode step
+        over every active slot.  Returns False when there is no work."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return bool(self.queue)
+        self._step += 1
+        tokens = jnp.asarray(self.last_token[:, None])
+        positions = jnp.asarray(self.lengths[:, None])
+        logits, self.caches = self._decode(
+            self.params, tokens, self.caches, positions)
+        toks = np.asarray(self._sample(logits), np.int32)
+        self.counters["decode_steps"] += 1
+        self.counters["decode_slot_steps"] += len(self.slots)
+        for i in active:
+            req = self.slots[i]
+            req.generated.append(int(toks[i]))
+            self.counters["decode_tokens"] += 1
+            self.lengths[i] += 1
+            self.last_token[i] = toks[i]
+            self._maybe_evict(i, int(toks[i]))
+        return True
+
+    def run(self, seed: int = 0) -> None:
+        """Drain queue + slots to completion, deterministically under seed."""
+        self._base_key = jax.random.PRNGKey(seed)
+        self._tick = 0
+        while self.queue or any(r is not None for r in self.slots):
+            self.step()
+
+    def generate(self, requests: list[Request], seed: int = 0):
+        """Serve a list of requests (arbitrary prompt lengths) to
+        completion; returns the same list with ``generated`` filled."""
+        for r in requests:
+            self.submit(r)
+        self.run(seed)
+        return requests
+
+    # ------------------------------------------------------------------
+    # measured-traffic reporting
+    # ------------------------------------------------------------------
+
+    def sparsity_report(self, prompts) -> dict[str, Any]:
+        """Measured BitStopper traffic, per request and aggregated.
+
+        ``prompts``: 2-D int array [B, S] or a list of 1-D int arrays of
+        arbitrary (per-request) lengths.  Each request's prefill attention
+        at the first attention layer is run through the block-granular
+        semantic model; returns mean planes fetched per (q, kv-block),
+        plane fraction vs dense 12-bit, block-level V-fetch fraction and
+        token survivor fraction — aggregated under the legacy keys, plus a
+        ``per_request`` list for served-traffic benchmarks."""
+        if isinstance(prompts, np.ndarray) and prompts.ndim == 2:
+            prompts = list(prompts)
+        per_request = []
+        for p in prompts:
+            rep = _prompt_sparsity(self.cfg, self.params, np.asarray(p))
+            if rep:
+                per_request.append(rep)
+        if not per_request:
+            return {}
+        # Weighted aggregation: a long prompt has many more (q-tile,
+        # kv-block) units and (q, k) pairs than a short one — an
+        # unweighted mean over requests would let short prompts skew the
+        # traffic headline.
+        blocks = np.array([r["n_blocks"] for r in per_request], np.float64)
+        pairs = np.array([r["n_pairs"] for r in per_request], np.float64)
+
+        def wmean(key, w):
+            vals = np.array([r[key] for r in per_request], np.float64)
+            return float((vals * w).sum() / w.sum())
+
+        agg = {
+            "mean_rounds": wmean("mean_rounds", blocks),
+            "plane_fraction": wmean("plane_fraction", blocks),
+            "block_alive_fraction": wmean("block_alive_fraction", blocks),
+            "survivor_fraction": wmean("survivor_fraction", pairs),
+            "per_request": per_request,
+        }
+        return agg
+
+
+# Public name: the continuous batcher IS the serving engine.
+ServingEngine = ContinuousBatchingEngine
+
+
+class StaticBucketEngine:
+    """The previous engine: one same-length batch at a time, re-padded per
+    batch, shared cursor.  Kept as the baseline for
+    ``benchmarks/serve_throughput.py`` and for A/B-ing the scheduler."""
+
+    def __init__(self, cfg: ModelConfig, params,
+                 scfg: ServeConfig = ServeConfig()):
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
@@ -53,86 +320,97 @@ class ServingEngine:
 
         def decode_fn(params, token, caches, pos):
             logits, caches, _ = T.forward(
-                params, token, cfg, caches=caches,
-                positions=pos[None])
+                params, token, cfg, caches=caches, positions=pos[None])
             return logits[:, -1], caches
 
         self._prefill = jax.jit(prefill_fn)
         self._decode = jax.jit(decode_fn)
 
     def init_caches(self, batch: int):
-        dt = jnp.bfloat16 if self.scfg.cache_dtype == "bfloat16" else jnp.float32
+        dt = (jnp.bfloat16 if self.scfg.cache_dtype == "bfloat16"
+              else jnp.float32)
         return T.init_caches(self.cfg, batch, self.scfg.max_len, dt)
 
     def _sample(self, logits, key):
         if self.scfg.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1)
-        return jax.random.categorical(key, logits / self.scfg.temperature)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, axis=-1)
 
     def generate(self, requests: list[Request], seed: int = 0):
-        """Serve one same-length batch of requests to completion."""
-        assert len({len(r.prompt) for r in requests}) == 1, \
-            "batch requests by prompt length (length bucketing)"
+        """Serve requests bucketed by prompt length, one batch at a time."""
+        base_key = jax.random.PRNGKey(seed)
+        buckets: dict[int, list[Request]] = {}
+        for r in requests:
+            buckets.setdefault(len(r.prompt), []).append(r)
+        for bi, (_, batch) in enumerate(sorted(buckets.items())):
+            self._generate_batch(batch, jax.random.fold_in(base_key, bi))
+        return requests
+
+    def _generate_batch(self, requests: list[Request], key):
         prompts = jnp.asarray(np.stack([r.prompt for r in requests]))
         B, S = prompts.shape
         caches = self.init_caches(B)
         logits, caches = self._prefill(self.params, prompts, caches)
-        key = jax.random.PRNGKey(seed)
         max_new = max(r.max_new_tokens for r in requests)
-        token = self._sample(logits, key)
+        token = self._sample(logits, jax.random.fold_in(key, 0))
         for r, t in zip(requests, np.asarray(token)):
             r.generated.append(int(t))
         for i in range(1, max_new):
-            key, sub = jax.random.split(key)
             logits, caches = self._decode(
                 self.params, token[:, None], caches,
                 jnp.asarray(S + i - 1, jnp.int32))
-            token = self._sample(logits, sub)
+            token = self._sample(logits, jax.random.fold_in(key, i))
             for r, t in zip(requests, np.asarray(token)):
                 if len(r.generated) < r.max_new_tokens:
                     r.generated.append(int(t))
         return requests
 
-    # ------------------------------------------------------------------
 
-    def sparsity_report(self, prompts: np.ndarray) -> dict[str, float]:
-        """Measured BitStopper traffic on a served batch: mean planes
-        fetched per (q, kv-block) and survivor fraction, from the semantic
-        model run over the prefill attention of the first layer."""
-        from repro.core.block_adaptation import block_bitstopper_attention
-        from repro.models import layers as L
+# ---------------------------------------------------------------------------
+# measured sparsity of one prompt's prefill attention (layer 0)
+# ---------------------------------------------------------------------------
 
-        cfg = self.cfg
-        x = L.embed(self.params["embed"], jnp.asarray(prompts)).astype(
-            cfg.activation_dtype)
-        p0 = _first_attn_params(self.params, cfg)
-        if p0 is None:
-            return {}
-        from repro.models.layers import linear, rope
-        acfg = cfg.attn_config(False)
-        pos = jnp.arange(x.shape[1])
-        q = rope(linear(p0["wq"], x), pos[None], acfg.rope_theta)
-        k = rope(linear(p0["wk"], x), pos[None], acfg.rope_theta)
-        v = linear(p0["wv"], x)
-        G = acfg.n_heads // acfg.n_kv_heads
-        kr = jnp.repeat(k, G, axis=2).swapaxes(1, 2)
-        vr = jnp.repeat(v, G, axis=2).swapaxes(1, 2)
-        qt = q.swapaxes(1, 2)
-        # Small q-tiles: a kv block stops fetching planes only when EVERY
-        # query row in the tile agrees, so tall tiles can't terminate.
-        res = block_bitstopper_attention(
-            qt, kr, vr, cfg=cfg.bitstopper,
-            block_q=min(8, qt.shape[-2]), block_k=min(16, kr.shape[-2]),
-            causal=True)
-        rounds = np.asarray(res.stats.rounds_per_block, np.float64)
-        alive = np.asarray(res.stats.block_alive)
-        surv = np.asarray(res.stats.survivors)
-        return {
-            "mean_rounds": float(rounds.mean()),
-            "plane_fraction": float(rounds.mean() / cfg.bitstopper.bits),
-            "block_alive_fraction": float(alive.mean()),
-            "survivor_fraction": float(surv.mean()),
-        }
+
+def _prompt_sparsity(cfg: ModelConfig, params, prompt: np.ndarray):
+    from repro.core.block_adaptation import block_bitstopper_attention
+    from repro.models import layers as L
+    from repro.models.attention import _divisor_block
+
+    x = L.embed(params["embed"], jnp.asarray(prompt)[None]).astype(
+        cfg.activation_dtype)
+    p0 = _first_attn_params(params, cfg)
+    if p0 is None:
+        return {}
+    from repro.models.layers import linear, rope
+    acfg = cfg.attn_config(False)
+    pos = jnp.arange(x.shape[1])
+    q = rope(linear(p0["wq"], x), pos[None], acfg.rope_theta)
+    k = rope(linear(p0["wk"], x), pos[None], acfg.rope_theta)
+    v = linear(p0["wv"], x)
+    G = acfg.n_heads // acfg.n_kv_heads
+    kr = jnp.repeat(k, G, axis=2).swapaxes(1, 2)
+    vr = jnp.repeat(v, G, axis=2).swapaxes(1, 2)
+    qt = q.swapaxes(1, 2)
+    # Small q-tiles: a kv block stops fetching planes only when EVERY
+    # query row in the tile agrees, so tall tiles can't terminate.
+    res = block_bitstopper_attention(
+        qt, kr, vr, cfg=cfg.bitstopper,
+        block_q=_divisor_block(qt.shape[-2], 8),
+        block_k=_divisor_block(kr.shape[-2], 16),
+        causal=True)
+    rounds = np.asarray(res.stats.rounds_per_block, np.float64)
+    alive = np.asarray(res.stats.block_alive)
+    surv = np.asarray(res.stats.survivors)
+    return {
+        "prompt_len": int(prompt.shape[0]),
+        "mean_rounds": float(rounds.mean()),
+        "plane_fraction": float(rounds.mean() / cfg.bitstopper.bits),
+        "block_alive_fraction": float(alive.mean()),
+        "survivor_fraction": float(surv.mean()),
+        "n_blocks": int(rounds.size),
+        "n_pairs": int(surv.size),
+    }
 
 
 def _first_attn_params(params, cfg: ModelConfig):

@@ -1,0 +1,111 @@
+"""`hypothesis` compatibility shim for the property tests.
+
+When `hypothesis` is installed it is used verbatim.  When it is absent
+(the CPU CI container deliberately carries only jax/numpy/pytest) a
+minimal vendored fallback provides the same decorator surface —
+``given`` / ``settings`` / ``strategies`` — backed by a deterministic
+per-test PRNG.  The property tests then still *run* (a fixed number of
+seeded examples per test) instead of dying at collection with
+``ModuleNotFoundError: No module named 'hypothesis'``.
+
+The fallback implements exactly the strategy combinators this suite
+uses: ``integers``, ``floats``, ``sampled_from``, ``lists`` and
+``composite``.  It does no shrinking and no example databases — it is a
+seeded example generator, not a reimplementation of hypothesis.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        """A strategy is just a seeded-draw function."""
+
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 31 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_kw):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def composite(fn):
+            def make(*args, **kwargs):
+                def draw_fn(rng):
+                    return fn(lambda s: s.example(rng), *args, **kwargs)
+
+                return _Strategy(draw_fn)
+
+            return make
+
+    strategies = _StrategiesModule()
+
+    class settings:  # noqa: N801 - mirrors the hypothesis name
+        def __init__(self, max_examples=_DEFAULT_EXAMPLES, deadline=None,
+                     **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._max_examples = self.max_examples
+            return fn
+
+    def given(*strats, **kwstrats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", _DEFAULT_EXAMPLES))
+                # Deterministic per-test stream: failures reproduce.
+                rng = random.Random(f"{fn.__module__}.{fn.__name__}")
+                for _ in range(n):
+                    drawn = tuple(s.example(rng) for s in strats)
+                    kdrawn = {k: s.example(rng) for k, s in kwstrats.items()}
+                    fn(*args, *drawn, **kwargs, **kdrawn)
+
+            # Hide the strategy-supplied parameters from pytest, which would
+            # otherwise treat them as (missing) fixtures.  Positional
+            # strategies fill the test's trailing parameters, as in
+            # hypothesis.
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            if strats:
+                params = params[:-len(strats)]
+            params = [p for p in params if p.name not in kwstrats]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            if hasattr(wrapper, "__wrapped__"):
+                del wrapper.__wrapped__
+            return wrapper
+
+        return deco

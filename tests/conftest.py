@@ -1,0 +1,12 @@
+"""Make `repro` (under src/) and the test-local shim importable regardless
+of how pytest is invoked — ``PYTHONPATH=src python -m pytest`` and a bare
+``python -m pytest`` both work."""
+
+import os
+import sys
+
+_HERE = os.path.dirname(__file__)
+for p in (os.path.join(_HERE, "..", "src"), _HERE):
+    p = os.path.abspath(p)
+    if p not in sys.path:
+        sys.path.insert(0, p)

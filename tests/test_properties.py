@@ -13,7 +13,7 @@ happy-path floats.
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import margins as margins_lib
 from repro.core import quantization as qlib
