@@ -35,12 +35,17 @@ BENCH_DATA = DataConfig(vocab=512, seq_len=512, global_batch=8, seed=7)
 
 
 def train_bench_lm(steps: int = 150, force: bool = False):
-    """Train (or load cached) the benchmark LM.  Returns (params, cfg)."""
+    """Train (or load cached) the benchmark LM.  Returns (params, cfg).
+    A cached checkpoint is only reused if it trained at least ``steps``
+    steps (a smoke run's short checkpoint never poisons a full run)."""
+    from repro.checkpoint.store import latest_step
     params = T.init_model(jax.random.PRNGKey(7), BENCH_LM)
     if not force:
         try:
-            params, _ = load_checkpoint(params, _LM_DIR)
-            return params, BENCH_LM
+            cached = latest_step(_LM_DIR)
+            if cached is not None and cached >= steps:
+                params, _ = load_checkpoint(params, _LM_DIR)
+                return params, BENCH_LM
         except (FileNotFoundError, KeyError):
             pass
     ds = SyntheticLMDataset(BENCH_DATA)

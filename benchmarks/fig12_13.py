@@ -56,19 +56,20 @@ def run_fig12(seq_lens=(256, 512, 1024), err_target: float = 0.02):
 
 def run_serve_traffic(n_requests: int = 6, alpha: float = 0.5,
                       lens=(64, 128, 192), new_tokens: int = 8,
-                      slots: int = 2, seed: int = 0):
-    """Served-traffic numbers: the trained bench LM behind the
+                      slots: int = 2, seed: int = 0,
+                      train_steps: int = 150):
+    """Served-traffic numbers: the trained bench LM behind the paged
     continuous-batching engine, a mixed-length request trace, and the
     engine's **per-request** plane-fetch / survivor accounting — measured
     on real served prompts rather than synthetic Q/K/V."""
-    from repro.serving import ContinuousBatchingEngine, Request, ServeConfig
+    from repro.serving import Request, ServeConfig, ServingEngine
 
-    params, cfg = train_bench_lm()
+    params, cfg = train_bench_lm(steps=train_steps)
     cfg = cfg.replace(attn_impl="bitstopper_xla",
                       bitstopper=BitStopperConfig(alpha=alpha))
     scfg = ServeConfig(max_len=max(lens) + new_tokens + 8, max_slots=slots,
                        prefill_bucket=16)
-    engine = ContinuousBatchingEngine(cfg, params, scfg)
+    engine = ServingEngine(cfg, params, scfg)
 
     rng = np.random.default_rng(seed)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab,

@@ -20,8 +20,11 @@ def _write_csv(rows, path):
     if not rows:
         return
     os.makedirs(os.path.dirname(path), exist_ok=True)
+    # Union of keys in first-seen order: summary rows (e.g. serve_traffic's
+    # aggregate) may carry columns the per-item rows don't.
+    fields = list(dict.fromkeys(k for r in rows for k in r))
     with open(path, "w", newline="") as f:
-        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w = csv.DictWriter(f, fieldnames=fields, restval="")
         w.writeheader()
         w.writerows(rows)
     print(f"[bench] wrote {path} ({len(rows)} rows)")
@@ -67,16 +70,28 @@ def main():
     ap.add_argument("--only", default=None,
                     help="fig3b | fig10_11 | fig12 | fig13a | fig13b | "
                          "serve_traffic")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized serve_traffic (tiny trace, short "
+                         "training); requires --only serve_traffic")
     args = ap.parse_args()
+    if args.smoke and args.only != "serve_traffic":
+        ap.error("--smoke only scales serve_traffic; "
+                 "pass --only serve_traffic with it")
 
     from benchmarks import fig3b, fig10_11, fig12_13
+    serve_traffic = fig12_13.run_serve_traffic
+    if args.smoke:
+        def serve_traffic():
+            return fig12_13.run_serve_traffic(
+                n_requests=3, lens=(24, 40), new_tokens=3, slots=2,
+                train_steps=30)
     jobs = {
         "fig3b": fig3b.run,
         "fig10_11": fig10_11.run,
         "fig12": fig12_13.run_fig12,
         "fig13a": fig12_13.run_fig13a,
         "fig13b": fig12_13.run_fig13b,
-        "serve_traffic": fig12_13.run_serve_traffic,
+        "serve_traffic": serve_traffic,
     }
     if args.only:
         jobs = {args.only: jobs[args.only]}

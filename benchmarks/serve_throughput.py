@@ -1,13 +1,20 @@
-"""Serving throughput: continuous batching vs static length bucketing.
+"""Serving throughput: paged vs contiguous continuous batching vs static
+length bucketing.
 
-Measures end-to-end tokens/sec on a mixed-length request trace — the
-workload where static bucketing loses: it pads every batch to the bucket
-length, cannot refill a finished row, and serializes buckets, while the
-continuous batcher admits the next queued request into any freed slot and
-keeps the decode batch full.
+Two traces:
+
+* **mixed** — prompt lengths cycle, generation lengths vary: the workload
+  where static bucketing loses (it pads every batch to the bucket length,
+  cannot refill a finished row, and serializes buckets).
+* **shared-prefix** — every request starts with the same system prompt.
+  The paged engine maps the shared full blocks into each request's block
+  table (refcount++, prefill skipped) so the common prefix is resident
+  ONCE; the report includes peak KV bytes resident next to tokens/sec,
+  paged-shared vs paged-unshared vs the contiguous reservation.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py
     PYTHONPATH=src python benchmarks/serve_throughput.py --impl bitstopper_xla
+    PYTHONPATH=src python benchmarks/serve_throughput.py --smoke
 """
 
 from __future__ import annotations
@@ -23,24 +30,34 @@ from repro.core.besf import BitStopperConfig
 from repro.models import transformer as T
 from repro.serving import (
     ContinuousBatchingEngine,
+    PagedEngine,
     Request,
     ServeConfig,
     StaticBucketEngine,
 )
 
 
-def make_trace(rng, vocab, n_requests, lens, new_lo, new_hi):
+def make_trace(rng, vocab, n_requests, lens, new_lo, new_hi,
+               shared_prefix=0):
     """Heterogeneous trace: prompt lengths cycle through `lens`, generation
-    lengths vary — the shape that defeats static bucketing."""
-    return [
-        Request(prompt=rng.integers(0, vocab, int(lens[i % len(lens)]),
-                                    dtype=np.int32),
-                max_new_tokens=int(rng.integers(new_lo, new_hi + 1)))
-        for i in range(n_requests)
-    ]
+    lengths vary — the shape that defeats static bucketing.  With
+    ``shared_prefix`` every prompt carries the same leading system prompt
+    (an int draws one of that length; an array is used verbatim)."""
+    if isinstance(shared_prefix, (int, np.integer)):
+        prefix = rng.integers(0, vocab, shared_prefix, dtype=np.int32)
+    else:
+        prefix = np.asarray(shared_prefix, np.int32)
+    reqs = []
+    for i in range(n_requests):
+        tail = rng.integers(0, vocab, int(lens[i % len(lens)]),
+                            dtype=np.int32)
+        reqs.append(Request(
+            prompt=np.concatenate([prefix, tail]),
+            max_new_tokens=int(rng.integers(new_lo, new_hi + 1))))
+    return reqs
 
 
-def _timed(engine, trace, seed):
+def _timed(engine, trace, seed, publish=None):
     # Warm-up on a full same-shaped copy of the trace (short generations):
     # every jit shape the engine will hit — per-bucket prefill and decode
     # batch shapes included — compiles outside the timed region.  The jit
@@ -48,6 +65,23 @@ def _timed(engine, trace, seed):
     warm = [Request(prompt=r.prompt.copy(), max_new_tokens=2)
             for r in trace]
     engine.generate(warm, seed=seed)
+    if hasattr(engine, "pool"):
+        # Fresh pool: the warm-up served the SAME prompts, so its prefix
+        # registry would let the timed run skip prefill entirely —
+        # replay caching, not the cross-request sharing being measured.
+        # (Stale device blocks are unobservable: tables are zeroed and
+        # reads are fill-level masked.)
+        from repro.serving import KVBlockPool
+        engine.pool = KVBlockPool(engine.layout.pool_blocks,
+                                  engine.layout.page_size,
+                                  prefix_sharing=engine.scfg.prefix_sharing)
+        if publish is not None and len(publish):
+            # Steady-state framing for the shared-prefix trace: the system
+            # prompt is resident from prior traffic.  Only the SHARED
+            # prefix is published — per-request tails still prefill.
+            engine.generate([Request(prompt=np.asarray(publish, np.int32),
+                                     max_new_tokens=1)], seed=seed)
+        engine.pool.peak_live_blocks = 0
     if hasattr(engine, "counters"):
         engine.counters = {k: 0 for k in engine.counters}
 
@@ -60,27 +94,85 @@ def _timed(engine, trace, seed):
     return n_tok, dt, engine
 
 
+def _row(name, engine, n_tok, dt):
+    row = {"engine": name, "tokens": n_tok, "seconds": dt,
+           "tok_per_s": n_tok / dt}
+    if hasattr(engine, "counters"):
+        row.update(engine.counters)
+    if isinstance(engine, (PagedEngine, ContinuousBatchingEngine)):
+        row["kv_bytes_resident"] = engine.kv_bytes_resident()
+    return row
+
+
 def run(arch="stablelm-1.6b", impl="xla", alpha=0.6, n_requests=8,
         slots=4, seed=0, lens=(8, 24, 40), new_lo=8, new_hi=24):
+    """Mixed-length trace: paged vs contiguous vs static-bucket."""
     cfg = reduced_config(arch).replace(
         attn_impl=impl, bitstopper=BitStopperConfig(alpha=alpha))
     params = T.init_model(jax.random.PRNGKey(0), cfg)
     max_len = max(lens) + new_hi + 8
-    scfg = ServeConfig(max_len=max_len, max_slots=slots, prefill_bucket=8)
+    scfg = ServeConfig(max_len=max_len, max_slots=slots, prefill_bucket=8,
+                       page_size=8)
 
     rng = np.random.default_rng(seed)
     trace = make_trace(rng, cfg.vocab, n_requests, lens, new_lo, new_hi)
 
     rows = []
-    n_c, dt_c, eng_c = _timed(
-        ContinuousBatchingEngine(cfg, params, scfg), trace, seed)
-    rows.append({"engine": "continuous", "tokens": n_c, "seconds": dt_c,
-                 "tok_per_s": n_c / dt_c, **eng_c.counters})
-    n_s, dt_s, _ = _timed(
-        StaticBucketEngine(cfg, params, scfg), trace, seed)
-    rows.append({"engine": "static-bucket", "tokens": n_s, "seconds": dt_s,
-                 "tok_per_s": n_s / dt_s})
+    for name, eng in (
+        ("paged", PagedEngine(cfg, params, scfg)),
+        ("continuous", ContinuousBatchingEngine(cfg, params, scfg)),
+        ("static-bucket", StaticBucketEngine(cfg, params, scfg)),
+    ):
+        n, dt, eng = _timed(eng, trace, seed)
+        rows.append(_row(name, eng, n, dt))
     return rows
+
+
+def run_shared_prefix(arch="stablelm-1.6b", impl="xla", alpha=0.6,
+                      n_requests=8, slots=4, seed=0, prefix_len=48,
+                      tail_lens=(4, 12, 20), new_lo=8, new_hi=16):
+    """Shared-prefix trace (common system prompt): tokens/sec and peak KV
+    bytes resident, paged-shared vs paged-unshared vs contiguous."""
+    cfg = reduced_config(arch).replace(
+        attn_impl=impl, bitstopper=BitStopperConfig(alpha=alpha))
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    max_len = prefix_len + max(tail_lens) + new_hi + 8
+    base = dict(max_len=max_len, max_slots=slots, prefill_bucket=8,
+                page_size=8)
+
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab, prefix_len, dtype=np.int32)
+    trace = make_trace(rng, cfg.vocab, n_requests, tail_lens, new_lo,
+                       new_hi, shared_prefix=prefix)
+
+    rows = []
+    for name, eng in (
+        ("paged-shared",
+         PagedEngine(cfg, params, ServeConfig(**base))),
+        ("paged-unshared",
+         PagedEngine(cfg, params,
+                     ServeConfig(**base, prefix_sharing=False))),
+        ("contiguous",
+         ContinuousBatchingEngine(cfg, params, ServeConfig(**base))),
+    ):
+        n, dt, eng = _timed(eng, trace, seed, publish=prefix)
+        rows.append(_row(name, eng, n, dt))
+    return rows
+
+
+def _print_rows(title, rows):
+    print(f"\n[serve_throughput] {title}")
+    for r in rows:
+        extra = ""
+        if "decode_steps" in r:
+            extra += (f"  decode_steps={r['decode_steps']}"
+                      f" prefill_tokens={r['prefill_tokens']}")
+        if "prefix_hit_tokens" in r:
+            extra += f" prefix_hits={r['prefix_hit_tokens']}"
+        if "kv_bytes_resident" in r:
+            extra += f" kv_resident={r['kv_bytes_resident'] / 1024:.1f}KiB"
+        print(f"  {r['engine']:>15}: {r['tokens']:4d} tokens in "
+              f"{r['seconds']:6.2f}s = {r['tok_per_s']:7.1f} tok/s{extra}")
 
 
 def main():
@@ -92,20 +184,36 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefix-len", type=int, default=48,
+                    help="system-prompt length for the shared-prefix trace")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace for CI: fewer/shorter requests")
     args = ap.parse_args()
 
-    rows = run(arch=args.arch, impl=args.impl, alpha=args.alpha,
-               n_requests=args.requests, slots=args.slots, seed=args.seed)
-    print(f"\n[serve_throughput] arch={args.arch} impl={args.impl} "
-          f"requests={args.requests} slots={args.slots}")
-    for r in rows:
-        extra = (f"  (decode_steps={r['decode_steps']}, "
-                 f"prefill_tokens={r['prefill_tokens']})"
-                 if "decode_steps" in r else "")
-        print(f"  {r['engine']:>14}: {r['tokens']:4d} tokens in "
-              f"{r['seconds']:6.2f}s = {r['tok_per_s']:7.1f} tok/s{extra}")
-    speedup = rows[0]["tok_per_s"] / rows[1]["tok_per_s"]
-    print(f"  continuous/static throughput ratio: {speedup:.2f}x")
+    kw = dict(arch=args.arch, impl=args.impl, alpha=args.alpha,
+              n_requests=args.requests, slots=args.slots, seed=args.seed)
+    if args.smoke:
+        kw.update(n_requests=3, slots=2)
+        rows = run(**kw, lens=(5, 9), new_lo=3, new_hi=4)
+        srows = run_shared_prefix(**kw, prefix_len=16, tail_lens=(3, 7),
+                                  new_lo=3, new_hi=4)
+    else:
+        rows = run(**kw)
+        srows = run_shared_prefix(**kw, prefix_len=args.prefix_len)
+
+    _print_rows(f"mixed trace arch={args.arch} impl={args.impl} "
+                f"requests={kw['n_requests']} slots={kw['slots']}", rows)
+    speedup = rows[0]["tok_per_s"] / rows[-1]["tok_per_s"]
+    print(f"  paged/static throughput ratio: {speedup:.2f}x")
+
+    _print_rows(f"shared-prefix trace prefix_len="
+                f"{16 if args.smoke else args.prefix_len}", srows)
+    shared = next(r for r in srows if r["engine"] == "paged-shared")
+    unshared = next(r for r in srows if r["engine"] == "paged-unshared")
+    contig = next(r for r in srows if r["engine"] == "contiguous")
+    print(f"  KV resident: shared {shared['kv_bytes_resident'] / 1024:.1f}KiB"
+          f" vs unshared {unshared['kv_bytes_resident'] / 1024:.1f}KiB"
+          f" vs contiguous {contig['kv_bytes_resident'] / 1024:.1f}KiB")
 
 
 if __name__ == "__main__":

@@ -7,3 +7,13 @@ cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+
+# Serving-benchmark smoke: tiny configs, a handful of steps.  Keeps the
+# paged/contiguous/static throughput harness and the served-traffic
+# accounting runnable — benchmarks can't silently rot.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/serve_throughput.py --smoke
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --requests 2 --slots 2 \
+        --min-prompt 4 --max-prompt 8 --new-tokens 3 --shared-prefix 8 \
+        --page-size 8

@@ -1,10 +1,20 @@
-"""Serving launcher: continuous-batching generation with BitStopper sparse
-attention over a mixed-length request trace.
+"""Serving launcher: paged continuous-batching generation with BitStopper
+sparse attention over a mixed-length request trace.
 
 ``python -m repro.launch.serve --arch stablelm-1.6b --impl bitstopper_xla``
 
-``--engine static`` selects the legacy length-bucketed batcher (the
-baseline ``benchmarks/serve_throughput.py`` measures against).
+Engines:
+
+* ``--engine paged`` (default) — block-pool KV cache with copy-on-write
+  prefix sharing and chunked prefill.  Admission is bounded by pool
+  capacity (``--pool-blocks``) rather than a per-slot ``max_len``; block
+  granularity is ``--page-size`` tokens and prompts prefill
+  ``--prefill-chunk`` tokens per scheduler tick, interleaved with decode.
+* ``--engine continuous`` — the contiguous per-slot cache (each slot
+  reserves ``max_len`` rows); the paged engine is bit-identical to it on
+  the dense path, at a fraction of the resident KV memory.
+* ``--engine static`` — legacy length-bucketed batcher (the baseline
+  ``benchmarks/serve_throughput.py`` measures against).
 """
 
 from __future__ import annotations
@@ -20,37 +30,53 @@ from repro.core.besf import BitStopperConfig
 from repro.models import transformer as T
 from repro.serving import (
     ContinuousBatchingEngine,
+    PagedEngine,
     Request,
     ServeConfig,
     StaticBucketEngine,
 )
 
 
-def make_trace(rng, vocab, n_requests, min_len, max_len, new_tokens):
-    """Mixed-length request trace (what a real frontend would enqueue)."""
-    return [
-        Request(prompt=rng.integers(0, vocab,
-                                    int(rng.integers(min_len, max_len + 1)),
-                                    dtype=np.int32),
-                max_new_tokens=new_tokens)
-        for _ in range(n_requests)
-    ]
+def make_trace(rng, vocab, n_requests, min_len, max_len, new_tokens,
+               shared_prefix=0):
+    """Mixed-length request trace; with ``shared_prefix`` > 0 every request
+    starts with the same system prompt (the prefix-sharing workload)."""
+    prefix = rng.integers(0, vocab, shared_prefix, dtype=np.int32)
+    reqs = []
+    for _ in range(n_requests):
+        tail = rng.integers(0, vocab,
+                            int(rng.integers(min_len, max_len + 1)),
+                            dtype=np.int32)
+        reqs.append(Request(prompt=np.concatenate([prefix, tail]),
+                            max_new_tokens=new_tokens))
+    return reqs
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="stablelm-1.6b")
     ap.add_argument("--impl", default="bitstopper_xla",
                     choices=["xla", "bitstopper_xla"])
-    ap.add_argument("--engine", default="continuous",
-                    choices=["continuous", "static"])
+    ap.add_argument("--engine", default="paged",
+                    choices=["paged", "continuous", "static"])
     ap.add_argument("--alpha", type=float, default=0.6)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--min-prompt", type=int, default=8)
     ap.add_argument("--max-prompt", type=int, default=48)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a common system prompt of this many "
+                         "tokens to every request (prefix-sharing demo)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged engine: tokens per KV block")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="paged engine: physical KV blocks in the pool "
+                         "(default: full capacity for all slots)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="paged engine: prompt tokens prefetched per "
+                         "scheduler tick (multiple of the prefill bucket)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -59,24 +85,34 @@ def main():
         bitstopper=BitStopperConfig(alpha=args.alpha),
     )
     params = T.init_model(jax.random.PRNGKey(0), cfg)
-    scfg = ServeConfig(max_len=args.max_prompt + args.new_tokens + 8,
-                       max_slots=args.slots, temperature=args.temperature)
-    if args.engine == "continuous":
-        engine = ContinuousBatchingEngine(cfg, params, scfg)
-    else:
-        engine = StaticBucketEngine(cfg, params, scfg)
+    scfg = ServeConfig(
+        max_len=args.shared_prefix + args.max_prompt + args.new_tokens + 8,
+        max_slots=args.slots, temperature=args.temperature,
+        page_size=args.page_size, pool_blocks=args.pool_blocks,
+        prefill_chunk=args.prefill_chunk)
+    engine = {"paged": PagedEngine,
+              "continuous": ContinuousBatchingEngine,
+              "static": StaticBucketEngine}[args.engine](cfg, params, scfg)
 
     rng = np.random.default_rng(args.seed)
     reqs = make_trace(rng, cfg.vocab, args.requests,
-                      args.min_prompt, args.max_prompt, args.new_tokens)
+                      args.min_prompt, args.max_prompt, args.new_tokens,
+                      shared_prefix=args.shared_prefix)
     t0 = time.monotonic()
     engine.generate(reqs, seed=args.seed)
     dt = time.monotonic() - t0
     n_tok = sum(len(r.generated) for r in reqs)
     print(f"[serve] {len(reqs)} requests / {n_tok} new tokens in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s, engine={args.engine}, impl={args.impl})")
-    if isinstance(engine, ContinuousBatchingEngine):
+    if isinstance(engine, (PagedEngine, ContinuousBatchingEngine)):
         print(f"[serve] counters: {engine.counters}")
+        if isinstance(engine, PagedEngine):
+            print(f"[serve] kv pool: page_size={engine.layout.page_size} "
+                  f"blocks={engine.layout.pool_blocks} "
+                  f"peak_live={engine.pool.peak_live_blocks} "
+                  f"resident={engine.kv_bytes_resident() / 1024:.1f} KiB "
+                  f"(contiguous would reserve "
+                  f"{engine.kv_bytes_contiguous_equiv() / 1024:.1f} KiB)")
         rep = engine.sparsity_report([r.prompt for r in reqs])
         if rep:
             agg = {k: round(v, 4) for k, v in rep.items()

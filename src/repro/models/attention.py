@@ -257,12 +257,17 @@ def chunked_attention(
 # ---------------------------------------------------------------------------
 
 
-def _divisor_block(n: int, cap: int = 128) -> int:
-    """Largest divisor of n that is <= cap (block sizes must tile exactly)."""
+def attention_block_shape(n: int, cap: int = 128) -> tuple[int, int]:
+    """Public block-size helper for the block-granular BitStopper paths.
+
+    Returns ``(block, pad)``: the tile size is ``min(cap, n)`` and the axis
+    pads up to a multiple of it (padding must be fully masked, so dead tiles
+    never fetch planes and zero pad rows don't move the per-tensor max-abs
+    quant scale).  Padding — rather than shrinking the block to a divisor of
+    ``n`` — keeps awkward (e.g. prime) lengths from degrading to 1-wide
+    tiles."""
     b = min(cap, n)
-    while n % b:
-        b -= 1
-    return b
+    return b, (-n) % b
 
 
 def _expand_gqa(q, k, v, G):
@@ -283,14 +288,8 @@ def _bitstopper_full(q, k, v, cfg: AttnConfig, mask2d):
         Sk = kr.shape[2]
         if mask2d is None and cfg.causal:
             mask2d = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
-        # Pad up to a block multiple (pads fully masked: zero rows don't
-        # move the max-abs quant scale and dead blocks never fetch planes)
-        # rather than shrinking blocks to a divisor — a prime length would
-        # otherwise degrade to 1x1 blocks.
-        bq = min(128, Sq)
-        bk = min(128, Sk)
-        pad_q = (-Sq) % bq
-        pad_k = (-Sk) % bk
+        bq, pad_q = attention_block_shape(Sq)
+        bk, pad_k = attention_block_shape(Sk)
         if pad_q or pad_k:
             if mask2d is None:
                 mask2d = jnp.ones((Sq, Sk), bool)
@@ -316,8 +315,31 @@ def _bitstopper_full(q, k, v, cfg: AttnConfig, mask2d):
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Shape of a paged (block-pool) KV cache.
+
+    ``pool_blocks`` physical blocks of ``page_size`` token slots each are
+    shared by every request; a request addresses them through a
+    ``[batch, max_blocks_per_req]`` *block table* mapping logical block
+    index (position // page_size) to physical block id.  Physical block 0
+    is the **null block**: never written, it backs unused table entries so
+    gathers stay in bounds."""
+    pool_blocks: int
+    page_size: int
+    max_blocks_per_req: int
+
+    def __post_init__(self):
+        if self.pool_blocks < 2:
+            raise ValueError("pool_blocks must be >= 2 (block 0 is the "
+                             f"reserved null block), got {self.pool_blocks}")
+        if self.page_size < 1 or self.max_blocks_per_req < 1:
+            raise ValueError("page_size and max_blocks_per_req must be >= 1")
+
+
 def init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.float32,
-               ring: bool = False, per_slot: bool = False):
+               ring: bool = False, per_slot: bool = False,
+               paged: PagedLayout | None = None):
     """With ``ring=True`` (sliding-window layers) only ``window`` slots are
     allocated and writes wrap — O(window) memory for long_500k decode.
     Ring-ness needs no flag at use time: writes always go to
@@ -327,7 +349,23 @@ def init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.float32,
     an independent *slot*: it carries its own write cursor (``length`` is
     [batch]) and its own slot->position map (``pos`` is [batch, n_slots]),
     so requests of different lengths share one decode batch without
-    re-padding.  ``cache_is_per_slot`` distinguishes the two layouts."""
+    re-padding.  ``cache_is_per_slot`` distinguishes the two layouts.
+
+    With ``paged=PagedLayout(...)`` the K/V storage loses its batch axis
+    entirely: one ``[pool_blocks, page_size, Hkv, D]`` pool is shared by
+    every slot, addressed through a per-slot block ``table`` (refcounted
+    blocks can appear in several tables — copy-on-write prefix sharing).
+    Sliding-window layers fall back to position masking (no ring): the
+    logical index of a token is its absolute position."""
+    if paged is not None:
+        nb, bs = paged.pool_blocks, paged.page_size
+        return {
+            "k": jnp.zeros((nb, bs, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((nb, bs, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "pos": jnp.full((nb, bs), POS_SENTINEL, jnp.int32),
+            "table": jnp.zeros((batch, paged.max_blocks_per_req), jnp.int32),
+            "length": jnp.zeros((batch,), jnp.int32),
+        }
     n_slots = min(max_len, cfg.window) if (ring and cfg.window) else max_len
     if per_slot:
         pos = jnp.full((batch, n_slots), POS_SENTINEL, jnp.int32)
@@ -343,8 +381,12 @@ def init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.float32,
     }
 
 
+def cache_is_paged(cache) -> bool:
+    return "table" in cache
+
+
 def cache_is_per_slot(cache) -> bool:
-    return cache["pos"].ndim == 2
+    return cache_is_paged(cache) or cache["pos"].ndim == 2
 
 
 def _update_cache(cache, k, v, positions):
@@ -365,6 +407,55 @@ def _update_cache(cache, k, v, positions):
     kc = k.astype(cache["k"].dtype)
     vc = v.astype(cache["v"].dtype)
     pc = positions.astype(jnp.int32)
+
+    if cache_is_paged(cache):
+        # Paged layout: the K/V pool has no batch axis — every batch row
+        # (serving slot) scatters through its row of the block table.  A
+        # token at absolute position p lives in logical block p // bs at
+        # offset p % bs; the table maps logical -> physical block id.
+        # Writes never target physical block 0 (the null block backing
+        # unused table entries), and pad-sentinel tokens are routed out of
+        # bounds and dropped — exactly like the contiguous per-slot path.
+        nb, bs = cache["pos"].shape
+        B = kc.shape[0]
+        table = cache["table"]                                # [B, MB]
+        MB = table.shape[1]
+        Tv = MB * bs
+        pc2 = jnp.broadcast_to(pc, (B, S))
+        real = pc2 != POS_SENTINEL
+        p_safe = jnp.where(real, pc2, 0)
+        logical = p_safe // bs
+        phys = jnp.take_along_axis(table, jnp.clip(logical, 0, MB - 1),
+                                   axis=1)                    # [B, S]
+        ok = real & (logical < MB) & (phys > 0)
+        flat_idx = jnp.where(ok, phys * bs + p_safe % bs, nb * bs)
+        kf = cache["k"].reshape((nb * bs,) + cache["k"].shape[2:])
+        vf = cache["v"].reshape((nb * bs,) + cache["v"].shape[2:])
+        pf = cache["pos"].reshape(nb * bs)
+        fi = flat_idx.reshape(-1)
+        kf = kf.at[fi].set(kc.reshape((-1,) + kc.shape[2:]), mode="drop")
+        vf = vf.at[fi].set(vc.reshape((-1,) + vc.shape[2:]), mode="drop")
+        pf = pf.at[fi].set(pc2.reshape(-1), mode="drop")
+        new_len = cache["length"] + real.sum(axis=1, dtype=jnp.int32)
+        new = dict(cache, k=kf.reshape(cache["k"].shape),
+                   v=vf.reshape(cache["v"].shape),
+                   pos=pf.reshape(nb, bs), length=new_len)
+        # Gather each row's logical view [B, MB*bs].  Only the first
+        # length[b] view slots were ever written by (or shared into) row b,
+        # so slots past the fill level are forced invalid and zeroed: a
+        # recycled physical block's stale K/V and positions are
+        # unobservable, and zeroed tails keep the BitStopper per-tensor
+        # max-abs quant scale identical to the contiguous layout.
+        view = (table[..., None] * bs
+                + jnp.arange(bs, dtype=jnp.int32)).reshape(B, Tv)
+        k_view = kf[view]                                     # [B, Tv, H, D]
+        v_view = vf[view]
+        pos_view = pf[view]
+        valid = jnp.arange(Tv, dtype=jnp.int32)[None] < new_len[:, None]
+        pos_view = jnp.where(valid, pos_view, POS_SENTINEL)
+        k_view = jnp.where(valid[..., None, None], k_view, 0)
+        v_view = jnp.where(valid[..., None, None], v_view, 0)
+        return k_view, v_view, pos_view, new
 
     if cache_is_per_slot(cache):
         # Per-slot layout: every batch row has its own cursor.  Writes are a

@@ -87,17 +87,18 @@ def block_forward(p, x, positions, spec: BlockSpec, cfg: ModelConfig,
 
 
 def init_block_cache(spec: BlockSpec, cfg: ModelConfig, batch: int,
-                     max_len: int, dtype=jnp.float32, per_slot: bool = False):
+                     max_len: int, dtype=jnp.float32, per_slot: bool = False,
+                     paged=None):
     if spec.mixer == "attn":
         return init_cache(cfg.attn_config(False), batch, max_len, dtype,
-                          per_slot=per_slot)
+                          per_slot=per_slot, paged=paged)
     if spec.mixer == "local_attn":
         return init_cache(cfg.attn_config(True), batch, max_len, dtype,
-                          ring=True, per_slot=per_slot)
-    if per_slot:
+                          ring=True, per_slot=per_slot, paged=paged)
+    if per_slot or paged is not None:
         raise NotImplementedError(
-            f"per-slot serving cache supports attn/local_attn mixers only, "
-            f"got {spec.mixer!r}")
+            f"per-slot/paged serving caches support attn/local_attn mixers "
+            f"only, got {spec.mixer!r}")
     if spec.mixer == "mla":
         return init_mla_cache(cfg.mla_config(), batch, max_len, dtype)
     if spec.mixer == "ssm":
@@ -231,17 +232,24 @@ def mtp_logits(params, tokens, h, cfg: ModelConfig, positions):
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int,
-                dtype=jnp.float32, per_slot: bool = False):
+                dtype=jnp.float32, per_slot: bool = False, paged=None):
     """Stacked (scan-compatible) cache pytree for decode.
 
     ``per_slot=True`` builds the continuous-batching layout: each batch row
     is an independent serving slot with its own write cursor and
-    slot-position map (see :func:`repro.models.attention.init_cache`)."""
+    slot-position map (see :func:`repro.models.attention.init_cache`).
+
+    ``paged=PagedLayout(...)`` builds the block-pool layout instead: one
+    batch-free K/V pool per layer, addressed through per-slot block tables
+    ([batch, max_blocks_per_req] int32) — the serving engine owns block
+    allocation and rewrites the ``table``/``length`` leaves between
+    forwards."""
     caches: dict[str, Any] = {}
     for si, (unit, reps) in enumerate(cfg.segments):
         def unit_cache(_):
             return {f"b{i}": init_block_cache(unit[i], cfg, batch, max_len,
-                                              dtype, per_slot=per_slot)
+                                              dtype, per_slot=per_slot,
+                                              paged=paged)
                     for i in range(len(unit))}
         if cfg.scan_layers and reps > 1:
             caches[f"seg{si}"] = jax.vmap(unit_cache)(jnp.arange(reps))

@@ -1,9 +1,11 @@
-"""Serving: continuous-batching engine with BitStopper sparse decode."""
+"""Serving: paged continuous-batching engine with BitStopper sparse decode."""
 
 from repro.serving.engine import (  # noqa: F401
     ContinuousBatchingEngine,
+    PagedEngine,
     Request,
     ServeConfig,
     ServingEngine,
     StaticBucketEngine,
 )
+from repro.serving.kv_pool import KVBlockPool  # noqa: F401

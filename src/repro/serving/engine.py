@@ -1,41 +1,43 @@
-"""Continuous-batching serving engine with decode-specialized BitStopper.
+"""Continuous-batching serving engines with decode-specialized BitStopper.
 
-BitStopper is an *inference* accelerator: this engine is where the paper's
-technique is deployed.  The scheduler is a continuous batcher (vLLM-style,
-minus paging of individual blocks):
+BitStopper is an *inference* accelerator: these engines are where the
+paper's technique is deployed.  Two continuous batchers share the
+scheduler surface:
 
-* a FIFO **request queue** with admission into a fixed set of decode
-  **slots** — each slot is one row of a per-slot KV cache
-  (``init_caches(..., per_slot=True)``: per-row write cursors and
-  slot→position maps), so requests of *different* lengths share one decode
-  batch without re-padding;
-* **prefill/decode interleaving**: whenever a slot frees up the next queued
-  request is prefilled (one bucketed-length forward) and its KV inserted
-  into the freed slot, then joins the in-flight decode batch on the very
-  next step;
-* **eviction** on ``max_new_tokens`` or EOS frees the slot immediately.
+* :class:`PagedEngine` (the default ``ServingEngine``) — a vLLM-style
+  **paged** batcher: the KV cache is a refcounted block pool
+  (``serving/kv_pool.py`` + ``init_caches(..., paged=PagedLayout(...))``),
+  admission is bounded by pool capacity rather than ``max_len``, full
+  prompt-prefix blocks are shared copy-on-write across requests, and
+  prompts prefill in fixed-size chunks interleaved with decode steps.
+* :class:`ContinuousBatchingEngine` — the contiguous per-slot cache
+  (``init_caches(..., per_slot=True)``): each slot reserves ``max_len``
+  rows; retained as the bit-identity baseline for the paged engine.
 
-Decode runs the single-query BitStopper fast path
+Both run decode through the single-query BitStopper fast path
 (``besf_attention_decode``): all bit-plane contributions in one fused
 integer contraction, per-round LATS logic reduced to elementwise ops.
 
-Sampling is deterministic under a passed-in PRNG seed: every sampling event
-uses ``fold_in(base_key, tick)`` — no hidden global state, and re-serving
-the same trace with the same seed reproduces every token.
+Sampling is deterministic under a passed-in PRNG seed and
+*schedule-invariant*: token n of request rid draws from
+``fold_in(fold_in(base_key, rid), n)``, so the same trace + seed
+reproduces every token on either engine regardless of slot assignment or
+prefill chunking.
 
 ``sparsity_report()`` returns measured plane-fetch / survivor statistics
 both aggregated and **per request**, feeding the Fig. 12/13 benchmarks
 with served-traffic numbers.
 
-``StaticBucketEngine`` preserves the previous static length-bucketed
-batcher as the baseline that ``benchmarks/serve_throughput.py`` compares
-against.
+``StaticBucketEngine`` preserves the pre-continuous-batching static
+length-bucketed batcher as the baseline that
+``benchmarks/serve_throughput.py`` compares against.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+from functools import partial
 from typing import Any
 
 import jax
@@ -43,18 +45,70 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as T
-from repro.models.attention import POS_SENTINEL
+from repro.models.attention import POS_SENTINEL, PagedLayout
 from repro.models.config import ModelConfig
+from repro.serving.kv_pool import KVBlockPool
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    max_len: int = 512                # KV capacity per slot
+    max_len: int = 512                # contiguous: KV capacity per slot;
+                                      # paged: default sizing for the pool
     max_slots: int = 4                # concurrent decode batch width
     prefill_bucket: int = 16          # prompts pad up to a multiple of this
     temperature: float = 0.0          # 0 = greedy
     cache_dtype: str = "float32"
     eos_id: int | None = None         # optional early stop token
+    # ---- paged engine (PagedEngine) knobs ----
+    page_size: int = 16               # tokens per KV block
+    pool_blocks: int | None = None    # physical blocks incl. the null block
+                                      # (default: full capacity, no paging
+                                      # pressure: 1 + slots*max_blocks)
+    max_blocks_per_req: int | None = None  # block-table width per slot
+                                      # (default: ceil(max_len / page_size))
+    prefill_chunk: int | None = None  # prompt tokens per prefill tick
+                                      # (default: 4*prefill_bucket; must be
+                                      # a multiple of prefill_bucket)
+    prefix_sharing: bool = True       # share full prompt-prefix blocks
+
+    def __post_init__(self):
+        # Fail at construction with a nameable field, not deep inside jit.
+        for name in ("max_len", "max_slots", "prefill_bucket", "page_size"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name} must be >= 1, got "
+                                 f"{getattr(self, name)}")
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got "
+                             f"{self.temperature}")
+        if self.cache_dtype not in ("float32", "bfloat16"):
+            raise ValueError(f"cache_dtype must be float32|bfloat16, got "
+                             f"{self.cache_dtype!r}")
+        if self.pool_blocks is not None and self.pool_blocks < 2:
+            raise ValueError("pool_blocks must be >= 2 (block 0 is the "
+                             f"null block), got {self.pool_blocks}")
+        if self.max_blocks_per_req is not None and self.max_blocks_per_req < 1:
+            raise ValueError(f"max_blocks_per_req must be >= 1, got "
+                             f"{self.max_blocks_per_req}")
+        if self.prefill_chunk is not None:
+            if self.prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, got "
+                                 f"{self.prefill_chunk}")
+            if self.prefill_chunk % self.prefill_bucket:
+                raise ValueError(
+                    f"prefill_chunk ({self.prefill_chunk}) must be a "
+                    f"multiple of prefill_bucket ({self.prefill_bucket}): "
+                    f"chunks are bucket-padded jit shapes")
+
+    # Resolved paged-layout sizes (None fields get max_len-derived defaults).
+    def resolved_max_blocks(self) -> int:
+        return self.max_blocks_per_req or -(-self.max_len // self.page_size)
+
+    def resolved_pool_blocks(self) -> int:
+        return (self.pool_blocks
+                or 1 + self.max_slots * self.resolved_max_blocks())
+
+    def resolved_chunk(self) -> int:
+        return self.prefill_chunk or 4 * self.prefill_bucket
 
 
 @dataclasses.dataclass
@@ -78,7 +132,150 @@ def _supported(cfg: ModelConfig) -> None:
             f"(per-slot KV cache); config has mixers {sorted(bad)}")
 
 
-class ContinuousBatchingEngine:
+@partial(jax.jit, static_argnames=("temperature",))
+def _sample_tokens(base_key, logits, rids, counts, temperature: float):
+    """Per-request deterministic sampling: row i's key is
+    ``fold_in(fold_in(base_key, rid_i), n_generated_i)`` — a pure function
+    of (seed, request, token index), so the sampled trace is independent of
+    scheduling (slot assignment, chunked vs one-shot prefill, interleaving
+    order) and identical across engines."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+
+    def one(row, rid, n):
+        key = jax.random.fold_in(jax.random.fold_in(base_key, rid), n)
+        return jax.random.categorical(key, row / temperature)
+
+    return jax.vmap(one)(logits, rids, counts)
+
+
+def _kv_bytes_per_token(cfg: ModelConfig, dtype) -> int:
+    """KV-cache bytes one cached token costs across all attention layers."""
+    itemsize = jnp.dtype(dtype).itemsize
+    total = 0
+    for unit, reps in cfg.segments:
+        for spec in unit:
+            if spec.mixer in ("attn", "local_attn"):
+                acfg = cfg.attn_config(spec.mixer == "local_attn")
+                total += reps * 2 * acfg.n_kv_heads * acfg.head_dim * itemsize
+    return total
+
+
+def _kv_bytes_contiguous(cfg: ModelConfig, scfg: ServeConfig, dtype) -> int:
+    """Resident bytes of the contiguous per-slot cache: max_len rows per
+    slot per layer, except sliding-window layers whose ring buffers only
+    allocate min(max_len, window) rows."""
+    itemsize = jnp.dtype(dtype).itemsize
+    total = 0
+    for unit, reps in cfg.segments:
+        for spec in unit:
+            if spec.mixer not in ("attn", "local_attn"):
+                continue
+            acfg = cfg.attn_config(spec.mixer == "local_attn")
+            rows = scfg.max_len
+            if spec.mixer == "local_attn" and acfg.window:
+                rows = min(rows, acfg.window)
+            total += (reps * rows * 2 * acfg.n_kv_heads * acfg.head_dim
+                      * itemsize)
+    return total * scfg.max_slots
+
+
+def _attach_tables(caches, table: np.ndarray, length: np.ndarray):
+    """Rebuild a paged cache pytree with the engine's authoritative block
+    table / fill levels attached to every layer (stacked layers broadcast
+    along their leading reps axis).  K/V/pos pool leaves pass through."""
+    t = jnp.asarray(table, jnp.int32)
+    ln = jnp.asarray(length, jnp.int32)
+
+    def rec(c):
+        if isinstance(c, dict):
+            if "table" in c:
+                nt, nl = t, ln
+                if c["table"].ndim == 3:          # scanned: [reps, B, MB]
+                    reps = c["table"].shape[0]
+                    nt = jnp.broadcast_to(t[None], (reps,) + t.shape)
+                    nl = jnp.broadcast_to(ln[None], (reps,) + ln.shape)
+                return dict(c, table=nt, length=nl)
+            return {k: rec(v) for k, v in c.items()}
+        if isinstance(c, list):
+            return [rec(x) for x in c]
+        return c
+
+    return rec(caches)
+
+
+class _EngineCommon:
+    """Shared scheduler-loop + measurement surface of the serving engines."""
+
+    def run(self, seed: int = 0) -> None:
+        """Drain queue + slots to completion, deterministically under seed."""
+        self._base_key = jax.random.PRNGKey(seed)
+        while self.queue or any(r is not None for r in self.slots):
+            self.step()
+
+    def generate(self, requests: list[Request], seed: int = 0):
+        """Serve a list of requests (arbitrary prompt lengths) to
+        completion; returns the same list with ``generated`` filled."""
+        for r in requests:
+            self.submit(r)
+        self.run(seed)
+        return requests
+
+    def _sample_rows(self, logits, rids, counts) -> np.ndarray:
+        toks = _sample_tokens(self._base_key, logits,
+                              jnp.asarray(rids, jnp.int32),
+                              jnp.asarray(counts, jnp.int32),
+                              self.scfg.temperature)
+        return np.asarray(toks, np.int32)
+
+    def _bucketed(self, L: int) -> int:
+        b = self.scfg.prefill_bucket
+        return min(self.scfg.max_len, -(-L // b) * b)
+
+    # ------------------------------------------------------------------
+    # measured-traffic reporting
+    # ------------------------------------------------------------------
+
+    def sparsity_report(self, prompts) -> dict[str, Any]:
+        """Measured BitStopper traffic, per request and aggregated.
+
+        ``prompts``: 2-D int array [B, S] or a list of 1-D int arrays of
+        arbitrary (per-request) lengths.  Each request's prefill attention
+        at the first attention layer is run through the block-granular
+        semantic model; returns mean planes fetched per (q, kv-block),
+        plane fraction vs dense 12-bit, block-level V-fetch fraction and
+        token survivor fraction — aggregated under the legacy keys, plus a
+        ``per_request`` list for served-traffic benchmarks."""
+        if isinstance(prompts, np.ndarray) and prompts.ndim == 2:
+            prompts = list(prompts)
+        per_request = []
+        for p in prompts:
+            rep = _prompt_sparsity(self.cfg, self.params, np.asarray(p))
+            if rep:
+                per_request.append(rep)
+        if not per_request:
+            return {}
+        # Weighted aggregation: a long prompt has many more (q-tile,
+        # kv-block) units and (q, k) pairs than a short one — an
+        # unweighted mean over requests would let short prompts skew the
+        # traffic headline.
+        blocks = np.array([r["n_blocks"] for r in per_request], np.float64)
+        pairs = np.array([r["n_pairs"] for r in per_request], np.float64)
+
+        def wmean(key, w):
+            vals = np.array([r[key] for r in per_request], np.float64)
+            return float((vals * w).sum() / w.sum())
+
+        return {
+            "mean_rounds": wmean("mean_rounds", blocks),
+            "plane_fraction": wmean("plane_fraction", blocks),
+            "block_alive_fraction": wmean("block_alive_fraction", blocks),
+            "survivor_fraction": wmean("survivor_fraction", pairs),
+            "per_request": per_request,
+        }
+
+
+class ContinuousBatchingEngine(_EngineCommon):
     """Request-level continuous batching over a per-slot KV cache."""
 
     def __init__(self, cfg: ModelConfig, params,
@@ -139,11 +336,16 @@ class ContinuousBatchingEngine:
         self.last_token = np.zeros((B,), np.int32)    # next decode input
         self._next_rid = 0
         self._step = 0
-        self._tick = 0                                # sampling-event counter
         self._base_key = jax.random.PRNGKey(0)
         self.counters = {"prefill_tokens": 0, "decode_tokens": 0,
                          "decode_steps": 0, "decode_slot_steps": 0,
                          "requests_finished": 0}
+
+    def kv_bytes_resident(self) -> int:
+        """KV memory the cache keeps resident: contiguous slots reserve
+        their full capacity (ring buffers: the window) no matter the
+        occupancy."""
+        return _kv_bytes_contiguous(self.cfg, self.scfg, self._dtype)
 
     # ------------------------------------------------------------------
     # scheduling
@@ -162,19 +364,6 @@ class ContinuousBatchingEngine:
         self.queue.append(req)
         return req
 
-    def _sample(self, logits: jax.Array) -> jax.Array:
-        """Deterministic sampling: key derived from (base_key, tick)."""
-        if self.scfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)
-        key = jax.random.fold_in(self._base_key, self._tick)
-        self._tick += 1
-        return jax.random.categorical(
-            key, logits / self.scfg.temperature, axis=-1)
-
-    def _bucketed(self, L: int) -> int:
-        b = self.scfg.prefill_bucket
-        return min(self.scfg.max_len, -(-L // b) * b)
-
     def _admit(self) -> None:
         while self.queue and None in self.slots:
             slot = self.slots.index(None)
@@ -192,7 +381,7 @@ class ContinuousBatchingEngine:
             self.caches = self._insert(self.caches, small,
                                        jnp.asarray(slot, jnp.int32))
 
-            tok = int(np.asarray(self._sample(last_logits))[0])
+            tok = int(self._sample_rows(last_logits, [req.rid], [0])[0])
             req.generated.append(tok)
             req.prefill_len = L
             req.admitted_step = self._step
@@ -226,7 +415,10 @@ class ContinuousBatchingEngine:
         positions = jnp.asarray(self.lengths[:, None])
         logits, self.caches = self._decode(
             self.params, tokens, self.caches, positions)
-        toks = np.asarray(self._sample(logits), np.int32)
+        rids = [r.rid if r is not None else 0 for r in self.slots]
+        counts = [len(r.generated) if r is not None else 0
+                  for r in self.slots]
+        toks = self._sample_rows(logits, rids, counts)
         self.counters["decode_steps"] += 1
         self.counters["decode_slot_steps"] += len(self.slots)
         for i in active:
@@ -238,67 +430,313 @@ class ContinuousBatchingEngine:
             self._maybe_evict(i, int(toks[i]))
         return True
 
-    def run(self, seed: int = 0) -> None:
-        """Drain queue + slots to completion, deterministically under seed."""
-        self._base_key = jax.random.PRNGKey(seed)
-        self._tick = 0
-        while self.queue or any(r is not None for r in self.slots):
-            self.step()
 
-    def generate(self, requests: list[Request], seed: int = 0):
-        """Serve a list of requests (arbitrary prompt lengths) to
-        completion; returns the same list with ``generated`` filled."""
-        for r in requests:
-            self.submit(r)
-        self.run(seed)
-        return requests
+# ---------------------------------------------------------------------------
+# Paged engine: block-pool KV cache, prefix sharing, chunked prefill
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _PagedSlot:
+    """Scheduler-side state of one occupied serving slot."""
+    req: Request
+    next_prefill: int          # prompt tokens [0, next_prefill) are cached
+    blocks_reserved: int       # reservation units not yet turned into allocs
+
+    def prefilled(self) -> bool:
+        return self.next_prefill >= len(self.req.prompt)
+
+
+class PagedEngine(_EngineCommon):
+    """Continuous batching over a paged block-pool KV cache.
+
+    Differences from :class:`ContinuousBatchingEngine`:
+
+    * **Paged KV.**  One batch-free K/V pool per layer; slots address it
+      through refcounted block tables (``kv_pool.KVBlockPool`` owns the
+      host-side allocation).  Admission is bounded by *pool capacity*, not
+      ``max_len``: a request may generate past ``max_len`` as long as its
+      block-table width (``max_blocks_per_req``) and the pool allow.
+    * **Prefix sharing.**  Full prompt blocks are published under their
+      token-chain key; a later request with the same prompt prefix maps the
+      shared physical blocks into its table (refcount++), skips recomputing
+      those tokens, and pays near-zero duplicate KV memory — the
+      system-prompt workload.
+    * **Chunked prefill.**  A prompt is prefilled ``prefill_chunk`` tokens
+      per scheduler tick, interleaved with decode steps of in-flight slots,
+      bounding decode-latency jitter from long prompts.
+
+    On the dense (``xla``) score path the served tokens are bit-identical
+    to the contiguous engine: per-query attention sees the same KV set
+    under the same mask, and masked view slots are exact zeros (padding
+    with exact zeros/NEG_INF never perturbs f32 accumulation).  The
+    BitStopper *block* prefill path tiles per chunk, so its logits may
+    differ within LATS tolerance; the Sq=1 BESF decode path is exact."""
+
+    def __init__(self, cfg: ModelConfig, params,
+                 scfg: ServeConfig = ServeConfig()):
+        _supported(cfg)
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self._dtype = (jnp.bfloat16 if scfg.cache_dtype == "bfloat16"
+                       else jnp.float32)
+        self._page = scfg.page_size
+        self._mb = scfg.resolved_max_blocks()
+        self._chunk = scfg.resolved_chunk()
+        self.layout = PagedLayout(scfg.resolved_pool_blocks(), self._page,
+                                  self._mb)
+        self.pool = KVBlockPool(self.layout.pool_blocks, self._page,
+                                prefix_sharing=scfg.prefix_sharing)
+
+        def prefill_fn(params, tokens, caches, positions, last_idx):
+            # tokens/positions [1, Sp]: one chunk of one slot's prompt,
+            # written straight into the shared pool through the slot's
+            # block-table row — no post-hoc cache insert.
+            logits, caches, _ = T.forward(params, tokens, cfg, caches=caches,
+                                          positions=positions)
+            last = jax.lax.dynamic_slice_in_dim(logits, last_idx, 1, axis=1)
+            return last[:, 0], caches
+
+        def decode_fn(params, tokens, caches, positions):
+            logits, caches, _ = T.forward(params, tokens, cfg, caches=caches,
+                                          positions=positions)
+            return logits[:, -1], caches
+
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn)
+
+        B = scfg.max_slots
+        self.caches = T.init_caches(cfg, B, scfg.max_len, self._dtype,
+                                    paged=self.layout)
+        self.slots: list[_PagedSlot | None] = [None] * B
+        self.queue: collections.deque[Request] = collections.deque()
+        self.table = np.zeros((B, self._mb), np.int32)
+        self.lengths = np.zeros((B,), np.int32)
+        self.last_token = np.zeros((B,), np.int32)
+        self._prefill_fifo: collections.deque[int] = collections.deque()
+        self._next_rid = 0
+        self._step = 0
+        self._base_key = jax.random.PRNGKey(0)
+        self.counters = {"prefill_tokens": 0, "prefix_hit_tokens": 0,
+                         "prefill_chunks": 0, "decode_tokens": 0,
+                         "decode_steps": 0, "decode_slot_steps": 0,
+                         "requests_finished": 0}
 
     # ------------------------------------------------------------------
-    # measured-traffic reporting
+    # capacity accounting
     # ------------------------------------------------------------------
 
-    def sparsity_report(self, prompts) -> dict[str, Any]:
-        """Measured BitStopper traffic, per request and aggregated.
+    def _blocks_for(self, req: Request) -> int:
+        """Worst-case block need: the final sampled token is never written
+        back, so at most prompt + max_new_tokens - 1 slots are cached."""
+        tokens = len(req.prompt) + req.max_new_tokens - 1
+        return max(1, -(-tokens // self._page))
 
-        ``prompts``: 2-D int array [B, S] or a list of 1-D int arrays of
-        arbitrary (per-request) lengths.  Each request's prefill attention
-        at the first attention layer is run through the block-granular
-        semantic model; returns mean planes fetched per (q, kv-block),
-        plane fraction vs dense 12-bit, block-level V-fetch fraction and
-        token survivor fraction — aggregated under the legacy keys, plus a
-        ``per_request`` list for served-traffic benchmarks."""
-        if isinstance(prompts, np.ndarray) and prompts.ndim == 2:
-            prompts = list(prompts)
-        per_request = []
-        for p in prompts:
-            rep = _prompt_sparsity(self.cfg, self.params, np.asarray(p))
-            if rep:
-                per_request.append(rep)
-        if not per_request:
-            return {}
-        # Weighted aggregation: a long prompt has many more (q-tile,
-        # kv-block) units and (q, k) pairs than a short one — an
-        # unweighted mean over requests would let short prompts skew the
-        # traffic headline.
-        blocks = np.array([r["n_blocks"] for r in per_request], np.float64)
-        pairs = np.array([r["n_pairs"] for r in per_request], np.float64)
+    def kv_bytes_resident(self, peak: bool = True) -> int:
+        """KV memory actually backed by live blocks (peak over the run by
+        default) — the paged analogue of the contiguous engine's static
+        ``max_slots * max_len`` reservation."""
+        blocks = (self.pool.peak_live_blocks if peak
+                  else self.pool.live_blocks())
+        return blocks * self._page * _kv_bytes_per_token(self.cfg,
+                                                         self._dtype)
 
-        def wmean(key, w):
-            vals = np.array([r[key] for r in per_request], np.float64)
-            return float((vals * w).sum() / w.sum())
+    def kv_bytes_contiguous_equiv(self) -> int:
+        """What a contiguous per-slot cache of the same ServeConfig would
+        keep resident (window layers: ring-buffer rows), for benchmark
+        comparisons."""
+        return _kv_bytes_contiguous(self.cfg, self.scfg, self._dtype)
 
-        agg = {
-            "mean_rounds": wmean("mean_rounds", blocks),
-            "plane_fraction": wmean("plane_fraction", blocks),
-            "block_alive_fraction": wmean("block_alive_fraction", blocks),
-            "survivor_fraction": wmean("survivor_fraction", pairs),
-            "per_request": per_request,
-        }
-        return agg
+    # ------------------------------------------------------------------
+    # scheduling
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> Request:
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        need = self._blocks_for(req)
+        if need > self._mb:
+            raise ValueError(
+                f"request needs {need} KV blocks, block table holds "
+                f"{self._mb} (raise max_blocks_per_req or max_len)")
+        if need > self.pool.capacity:
+            raise ValueError(
+                f"request needs {need} KV blocks, pool has "
+                f"{self.pool.capacity} (raise pool_blocks)")
+        req.rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(req)
+        return req
+
+    def _match_prefix(self, prompt: np.ndarray) -> list[int]:
+        """Longest chain of already-cached full prompt blocks (refs taken).
+        At least one prompt token is always left to prefill — its forward
+        produces the logits that sample the first new token."""
+        bs = self._page
+        matched: list[int] = []
+        for j in range((len(prompt) - 1) // bs):
+            key = tuple(int(t) for t in prompt[:(j + 1) * bs])
+            bid = self.pool.lookup(key)
+            if bid is None:
+                break
+            matched.append(bid)
+        return matched
+
+    def _admit(self) -> None:
+        while self.queue and None in self.slots:
+            req = self.queue[0]
+            L = len(req.prompt)
+            total = self._blocks_for(req)
+            # Cheap pre-check before building O(L^2/page) prefix keys: if
+            # even a full prefix match couldn't fit, the head of line is
+            # blocked — don't churn the registry every tick.
+            if total - (L - 1) // self._page > self.pool.available():
+                break
+            matched = self._match_prefix(req.prompt)
+            need = total - len(matched)
+            if need > self.pool.available():
+                # Head-of-line blocked on capacity: roll the prefix refs
+                # back and wait for evictions to return blocks.
+                for bid in matched:
+                    self.pool.decref(bid)
+                break
+            self.queue.popleft()
+            self.pool.reserve(need)
+            slot = self.slots.index(None)
+            row = np.zeros((self._mb,), np.int32)
+            row[:len(matched)] = matched
+            # Blocks covering the un-shared prompt tail are claimed now;
+            # decode-tail blocks stay reserved and materialize lazily.
+            n_prompt = -(-L // self._page)
+            for j in range(len(matched), n_prompt):
+                row[j] = self.pool.alloc(reserved=True)
+            cached_len = len(matched) * self._page
+            self.table[slot] = row
+            self.lengths[slot] = cached_len
+            self.slots[slot] = _PagedSlot(
+                req, next_prefill=cached_len,
+                blocks_reserved=total - n_prompt)
+            self._prefill_fifo.append(slot)
+            req.prefill_len = L
+            req.admitted_step = self._step
+            self.counters["prefix_hit_tokens"] += cached_len
+
+    def _prefill_tick(self) -> None:
+        """Run ONE bucket-padded chunk of the oldest admitted-but-unprefilled
+        request — long prompts no longer monopolize a scheduler tick."""
+        if not self._prefill_fifo:
+            return
+        slot = self._prefill_fifo[0]
+        st = self.slots[slot]
+        req = st.req
+        L = len(req.prompt)
+        s = st.next_prefill
+        e = min(s + self._chunk, L)
+        n = e - s
+        Sp = min(self._chunk, -(-n // self.scfg.prefill_bucket)
+                 * self.scfg.prefill_bucket)
+        tokens = np.zeros((1, Sp), np.int32)
+        tokens[0, :n] = np.asarray(req.prompt[s:e], np.int32)
+        positions = np.full((1, Sp), POS_SENTINEL, np.int32)
+        positions[0, :n] = np.arange(s, e, dtype=np.int32)
+
+        caches = _attach_tables(self.caches, self.table[slot:slot + 1],
+                                self.lengths[slot:slot + 1])
+        last_logits, self.caches = self._prefill(
+            self.params, jnp.asarray(tokens), caches, jnp.asarray(positions),
+            jnp.asarray(n - 1, jnp.int32))
+        self.lengths[slot] += n
+        st.next_prefill = e
+        self.counters["prefill_tokens"] += n
+        self.counters["prefill_chunks"] += 1
+
+        # Publish newly completed full prompt blocks for prefix sharing
+        # (re-registration of already-shared blocks is a no-op).
+        bs = self._page
+        for j in range(s // bs, e // bs):
+            key = tuple(int(t) for t in req.prompt[:(j + 1) * bs])
+            self.pool.register(key, int(self.table[slot, j]))
+
+        if e == L:
+            self._prefill_fifo.popleft()
+            tok = int(self._sample_rows(last_logits, [req.rid], [0])[0])
+            req.generated.append(tok)
+            self.last_token[slot] = tok
+            self._maybe_evict(slot, tok)
+
+    def _maybe_evict(self, slot: int, tok: int) -> None:
+        st = self.slots[slot]
+        if st is None:
+            return
+        req = st.req
+        done = len(req.generated) >= req.max_new_tokens
+        if self.scfg.eos_id is not None and tok == self.scfg.eos_id:
+            done = True
+        if not done:
+            return
+        req.finished_step = self._step
+        self.counters["requests_finished"] += 1
+        for j in range(self._mb):
+            bid = int(self.table[slot, j])
+            if bid:
+                self.pool.decref(bid)
+        self.pool.cancel_reservation(st.blocks_reserved)
+        self.table[slot] = 0
+        self.lengths[slot] = 0
+        self.last_token[slot] = 0
+        self.slots[slot] = None
+
+    def step(self) -> bool:
+        """One scheduler tick: admit, one prefill chunk, one decode step
+        over every prefilled slot.  Returns False when there is no work."""
+        self._admit()
+        self._prefill_tick()
+        active = [i for i, st in enumerate(self.slots)
+                  if st is not None and st.prefilled()]
+        if not active:
+            return bool(self.queue
+                        or any(st is not None for st in self.slots))
+        self._step += 1
+        # Materialize the block behind each row's next write position; the
+        # admission reservation guarantees one is always claimable.
+        for i in active:
+            j = int(self.lengths[i]) // self._page
+            if self.table[i, j] == 0:
+                st = self.slots[i]
+                if st.blocks_reserved <= 0:
+                    raise RuntimeError(
+                        "paged scheduler invariant violated: slot "
+                        f"{i} needs a decode block but has no reservation")
+                self.table[i, j] = self.pool.alloc(reserved=True)
+                st.blocks_reserved -= 1
+        # Rows still prefilling (or empty) decode at the pad sentinel: their
+        # q/k/v are zeroed and the cache write is dropped.
+        positions = np.full((len(self.slots), 1), POS_SENTINEL, np.int32)
+        for i in active:
+            positions[i, 0] = self.lengths[i]
+        tokens = jnp.asarray(self.last_token[:, None])
+        caches = _attach_tables(self.caches, self.table, self.lengths)
+        logits, self.caches = self._decode(
+            self.params, tokens, caches, jnp.asarray(positions))
+        rids = [st.req.rid if st is not None else 0 for st in self.slots]
+        counts = [len(st.req.generated) if st is not None else 0
+                  for st in self.slots]
+        toks = self._sample_rows(logits, rids, counts)
+        self.counters["decode_steps"] += 1
+        self.counters["decode_slot_steps"] += len(self.slots)
+        for i in active:
+            req = self.slots[i].req
+            req.generated.append(int(toks[i]))
+            self.counters["decode_tokens"] += 1
+            self.lengths[i] += 1
+            self.last_token[i] = toks[i]
+            self._maybe_evict(i, int(toks[i]))
+        return True
 
 
-# Public name: the continuous batcher IS the serving engine.
-ServingEngine = ContinuousBatchingEngine
+# Public name: the paged continuous batcher IS the serving engine.
+ServingEngine = PagedEngine
 
 
 class StaticBucketEngine:
@@ -375,7 +813,7 @@ class StaticBucketEngine:
 def _prompt_sparsity(cfg: ModelConfig, params, prompt: np.ndarray):
     from repro.core.block_adaptation import block_bitstopper_attention
     from repro.models import layers as L
-    from repro.models.attention import _divisor_block
+    from repro.models.attention import attention_block_shape
 
     x = L.embed(params["embed"], jnp.asarray(prompt)[None]).astype(
         cfg.activation_dtype)
@@ -392,23 +830,35 @@ def _prompt_sparsity(cfg: ModelConfig, params, prompt: np.ndarray):
     kr = jnp.repeat(k, G, axis=2).swapaxes(1, 2)
     vr = jnp.repeat(v, G, axis=2).swapaxes(1, 2)
     qt = q.swapaxes(1, 2)
+    S = qt.shape[-2]
     # Small q-tiles: a kv block stops fetching planes only when EVERY
-    # query row in the tile agrees, so tall tiles can't terminate.
+    # query row in the tile agrees, so tall tiles can't terminate.  The
+    # same pad-to-tile-multiple rule as the serving forward path (public
+    # helper) — padding is fully masked, and blocks with no unmasked pair
+    # are excluded from the traffic means rather than counted as free.
+    bq, pad_q = attention_block_shape(S, 8)
+    bk, pad_k = attention_block_shape(S, 16)
+    mask2d = jnp.tril(jnp.ones((S, S), bool))
+    if pad_q or pad_k:
+        mask2d = jnp.pad(mask2d, ((0, pad_q), (0, pad_k)))
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        kr = jnp.pad(kr, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vr = jnp.pad(vr, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
     res = block_bitstopper_attention(
-        qt, kr, vr, cfg=cfg.bitstopper,
-        block_q=_divisor_block(qt.shape[-2], 8),
-        block_k=_divisor_block(kr.shape[-2], 16),
-        causal=True)
+        qt, kr, vr, cfg=cfg.bitstopper, block_q=bq, block_k=bk, mask=mask2d)
     rounds = np.asarray(res.stats.rounds_per_block, np.float64)
     alive = np.asarray(res.stats.block_alive)
-    surv = np.asarray(res.stats.survivors)
+    surv = np.asarray(res.stats.survivors)[..., :S, :S]
+    n_qt, n_kb = rounds.shape[-2], rounds.shape[-1]
+    live = np.asarray(mask2d).reshape(n_qt, bq, n_kb, bk).any((1, 3))
+    live = np.broadcast_to(live, rounds.shape)
     return {
         "prompt_len": int(prompt.shape[0]),
-        "mean_rounds": float(rounds.mean()),
-        "plane_fraction": float(rounds.mean() / cfg.bitstopper.bits),
-        "block_alive_fraction": float(alive.mean()),
+        "mean_rounds": float(rounds[live].mean()),
+        "plane_fraction": float(rounds[live].mean() / cfg.bitstopper.bits),
+        "block_alive_fraction": float(alive[live].mean()),
         "survivor_fraction": float(surv.mean()),
-        "n_blocks": int(rounds.size),
+        "n_blocks": int(live.sum()),
         "n_pairs": int(surv.size),
     }
 

@@ -1,0 +1,169 @@
+"""Paged KV-cache block pool: allocator, refcounts, prefix sharing.
+
+The device side of the paged cache is a batch-free
+``[pool_blocks, page_size, Hkv, D]`` K/V pool per attention layer
+(:func:`repro.models.attention.init_cache` with a ``PagedLayout``).  This
+module is the **host-side** half: which physical block backs which logical
+block of which request.  It is pure Python/bookkeeping — no jax — so the
+scheduler can consult it between device steps at zero dispatch cost.
+
+Design (vLLM-style, sized for this repro):
+
+* **Free-list allocator.**  Physical block 0 is reserved as the *null
+  block* (backs unused table entries; never written, never allocated).
+* **Refcounted blocks.**  A block may appear in several requests' block
+  tables at once — copy-on-write prefix sharing.  Only *full* blocks of
+  prompt tokens are ever shared, and shared blocks are never rewritten
+  (a request's partially-filled tail block is always exclusively owned),
+  so "copy-on-write" never actually needs to copy: a request that would
+  diverge from a shared block simply allocates its own.
+* **Prefix registry.**  Full prompt blocks are registered under the chain
+  key of *all* tokens up to the block's end, so a lookup hit guarantees
+  the entire prefix matches (no hash-collision false sharing — keys are
+  the token tuples themselves).  When the last reference to a registered
+  block drops, the block parks in an LRU *cached* pool instead of the
+  free list: a later request with the same prefix can resurrect it, and
+  allocation pressure evicts the oldest cached block first.
+* **Reservations.**  Admission control reserves the worst-case block count
+  for a request up front (``prompt + max_new_tokens``, minus shared-prefix
+  hits), so mid-decode allocation can never fail and the scheduler needs
+  no preemption path.
+"""
+
+from __future__ import annotations
+
+import collections
+
+
+class KVBlockPool:
+    """Host-side block allocator for the paged serving KV cache."""
+
+    def __init__(self, pool_blocks: int, page_size: int,
+                 prefix_sharing: bool = True):
+        if pool_blocks < 2:
+            raise ValueError("pool_blocks must be >= 2 (block 0 is the "
+                             f"reserved null block), got {pool_blocks}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.pool_blocks = pool_blocks
+        self.page_size = page_size
+        self.prefix_sharing = prefix_sharing
+        self._free: collections.deque[int] = collections.deque(
+            range(1, pool_blocks))
+        self._ref: dict[int, int] = {}            # live block -> refcount
+        self._cached: collections.OrderedDict[tuple, int] = \
+            collections.OrderedDict()             # LRU: key -> parked block
+        self._registry: dict[tuple, int] = {}     # prefix key -> block
+        self._key_of: dict[int, tuple] = {}       # registered block -> key
+        self._reserved = 0
+        self.peak_live_blocks = 0
+        self.alloc_count = 0
+
+    # ------------------------------------------------------------------
+    # capacity accounting
+    # ------------------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable blocks (everything but the null block)."""
+        return self.pool_blocks - 1
+
+    def live_blocks(self) -> int:
+        return len(self._ref)
+
+    def available(self) -> int:
+        """Blocks an admission could still reserve: free + evictable-cached
+        minus outstanding reservations."""
+        return len(self._free) + len(self._cached) - self._reserved
+
+    def reserve(self, n: int) -> None:
+        if n < 0:
+            raise ValueError(f"cannot reserve {n} blocks")
+        if n > self.available():
+            raise RuntimeError(
+                f"reserve({n}): only {self.available()} blocks available")
+        self._reserved += n
+
+    def cancel_reservation(self, n: int) -> None:
+        if n > self._reserved:
+            raise RuntimeError(
+                f"cancel_reservation({n}) exceeds outstanding "
+                f"{self._reserved}")
+        self._reserved -= n
+
+    # ------------------------------------------------------------------
+    # allocation / refcounting
+    # ------------------------------------------------------------------
+
+    def _track_peak(self) -> None:
+        self.peak_live_blocks = max(self.peak_live_blocks, len(self._ref))
+
+    def alloc(self, reserved: bool = False) -> int:
+        """Claim a block (refcount 1).  ``reserved=True`` consumes one unit
+        of a prior :meth:`reserve`."""
+        if self._free:
+            bid = self._free.popleft()
+        elif self._cached:
+            key, bid = self._cached.popitem(last=False)   # evict LRU
+            del self._registry[key]
+            del self._key_of[bid]
+        else:
+            raise RuntimeError("KV block pool exhausted")
+        if reserved:
+            self.cancel_reservation(1)
+        self._ref[bid] = 1
+        self.alloc_count += 1
+        self._track_peak()
+        return bid
+
+    def incref(self, bid: int) -> None:
+        self._ref[bid] += 1
+
+    def decref(self, bid: int) -> None:
+        """Drop one reference; the last drop frees the block — to the LRU
+        cached pool if it is a registered prefix block, else the free
+        list."""
+        n = self._ref[bid] - 1
+        if n > 0:
+            self._ref[bid] = n
+            return
+        del self._ref[bid]
+        key = self._key_of.get(bid)
+        if key is not None and self.prefix_sharing:
+            self._cached[key] = bid               # parked, resurrectable
+            self._cached.move_to_end(key)
+        else:
+            if key is not None:
+                del self._registry[key]
+                del self._key_of[bid]
+            self._free.append(bid)
+
+    # ------------------------------------------------------------------
+    # prefix sharing
+    # ------------------------------------------------------------------
+
+    def register(self, key: tuple, bid: int) -> None:
+        """Publish a fully-written prompt block under its prefix chain key.
+        First writer wins; re-registration under the same key is a no-op
+        (the content is identical by construction)."""
+        if not self.prefix_sharing or key in self._registry:
+            return
+        self._registry[key] = bid
+        self._key_of[bid] = key
+
+    def lookup(self, key: tuple) -> int | None:
+        """Find a block holding exactly this prefix chunk.  A hit takes a
+        reference (resurrecting the block from the cached pool if its last
+        owner already finished) — the caller owns the reference."""
+        if not self.prefix_sharing:
+            return None
+        bid = self._registry.get(key)
+        if bid is None:
+            return None
+        if bid in self._ref:
+            self.incref(bid)
+        else:
+            del self._cached[key]
+            self._ref[bid] = 1
+            self._track_peak()
+        return bid

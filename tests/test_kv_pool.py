@@ -1,0 +1,105 @@
+"""Unit tests for the paged KV-cache block allocator (host-side half of
+the paged serving cache): free-list lifecycle, refcounted sharing, the
+prefix registry with LRU resurrection, and reservation accounting."""
+
+import pytest
+
+from repro.serving.kv_pool import KVBlockPool
+
+
+def test_null_block_reserved():
+    pool = KVBlockPool(4, 8)
+    got = {pool.alloc() for _ in range(3)}
+    assert 0 not in got
+    assert got == {1, 2, 3}
+    with pytest.raises(RuntimeError):
+        pool.alloc()
+
+
+def test_alloc_free_cycle_returns_blocks():
+    pool = KVBlockPool(5, 8)
+    bids = [pool.alloc() for _ in range(4)]
+    assert pool.live_blocks() == 4 and pool.available() == 0
+    for b in bids:
+        pool.decref(b)
+    assert pool.live_blocks() == 0
+    assert pool.available() == pool.capacity == 4
+    # freed blocks are allocatable again
+    again = [pool.alloc() for _ in range(4)]
+    assert sorted(again) == sorted(bids)
+
+
+def test_refcounted_sharing():
+    pool = KVBlockPool(4, 8)
+    b = pool.alloc()
+    pool.register((1, 2), b)
+    assert pool.lookup((1, 2)) == b          # second ref
+    pool.decref(b)
+    assert pool.live_blocks() == 1           # still held by the sharer
+    pool.decref(b)
+    assert pool.live_blocks() == 0
+
+
+def test_lookup_miss_and_disabled():
+    pool = KVBlockPool(4, 8)
+    assert pool.lookup((9,)) is None
+    off = KVBlockPool(4, 8, prefix_sharing=False)
+    b = off.alloc()
+    off.register((1,), b)
+    assert off.lookup((1,)) is None
+
+
+def test_registered_block_parks_and_resurrects():
+    pool = KVBlockPool(4, 8)
+    b = pool.alloc()
+    pool.register((7, 8), b)
+    pool.decref(b)
+    # Parked, not freed: still counted available, resurrectable by key.
+    assert pool.live_blocks() == 0 and pool.available() == 3
+    assert pool.lookup((7, 8)) == b
+    assert pool.live_blocks() == 1
+    pool.decref(b)
+
+
+def test_lru_eviction_of_parked_blocks():
+    pool = KVBlockPool(3, 8)
+    a, b = pool.alloc(), pool.alloc()
+    pool.register(("a",), a)
+    pool.register(("b",), b)
+    pool.decref(a)                           # parked first -> LRU victim
+    pool.decref(b)
+    c = pool.alloc()                         # free list empty: evicts a
+    assert c == a
+    assert pool.lookup(("a",)) is None       # deregistered on eviction
+    assert pool.lookup(("b",)) == b          # survivor still resurrectable
+
+
+def test_reservation_accounting():
+    pool = KVBlockPool(5, 8)
+    pool.reserve(3)
+    assert pool.available() == 1
+    with pytest.raises(RuntimeError):
+        pool.reserve(2)
+    b = pool.alloc(reserved=True)            # consumes one reservation unit
+    assert pool.available() == 1
+    pool.cancel_reservation(2)
+    assert pool.available() == 3
+    with pytest.raises(RuntimeError):
+        pool.cancel_reservation(1)           # nothing outstanding
+    pool.decref(b)
+
+
+def test_peak_tracking():
+    pool = KVBlockPool(6, 8)
+    bids = [pool.alloc() for _ in range(3)]
+    for b in bids:
+        pool.decref(b)
+    pool.alloc()
+    assert pool.peak_live_blocks == 3
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        KVBlockPool(1, 8)
+    with pytest.raises(ValueError):
+        KVBlockPool(4, 0)

@@ -1,6 +1,6 @@
 """Serving-engine tests: continuous batching, decode/prefill parity,
-deterministic sampling, the per-slot KV cache, and the decode-specialized
-BitStopper path."""
+deterministic sampling, the per-slot and paged KV caches, block/slot
+lifecycle, prefix sharing, and the decode-specialized BitStopper path."""
 
 import jax
 import jax.numpy as jnp
@@ -13,6 +13,7 @@ from repro.core.besf import BitStopperConfig, besf_attention, \
 from repro.models import transformer as T
 from repro.serving import (
     ContinuousBatchingEngine,
+    PagedEngine,
     Request,
     ServeConfig,
     StaticBucketEngine,
@@ -162,6 +163,214 @@ def test_prefill_bucket_invariance(model):
         eng.generate([req], seed=0)
         outs.append(req.generated)
     assert outs[0] == outs[1] == outs[2], outs
+
+
+# ---------------------------------------------------------------------------
+# paged engine: parity, block/slot lifecycle, prefix sharing
+# ---------------------------------------------------------------------------
+
+
+def _paged(cfg, params, **kw):
+    scfg = ServeConfig(max_len=kw.pop("max_len", 64),
+                       max_slots=kw.pop("max_slots", 2),
+                       prefill_bucket=kw.pop("prefill_bucket", 8),
+                       page_size=kw.pop("page_size", 8), **kw)
+    return PagedEngine(cfg, params, scfg)
+
+
+def test_paged_matches_contiguous_bitexact_greedy(model):
+    """Acceptance: the paged engine's served tokens are bit-identical to
+    the contiguous ContinuousBatchingEngine on the same trace and seed
+    (dense path: per-query attention sees the same KV set, masked paged
+    view slots are exact zeros)."""
+    cfg, params = model
+    a = _reqs(cfg, (5, 11, 17, 9))
+    _engine(cfg, params).generate(a, seed=0)
+    b = _reqs(cfg, (5, 11, 17, 9))
+    _paged(cfg, params).generate(b, seed=0)
+    assert [r.generated for r in a] == [r.generated for r in b]
+
+
+def test_paged_matches_contiguous_bitexact_sampled(model):
+    """Same trace, seeded sampling: per-request sampling keys are a pure
+    function of (seed, rid, token index), so chunked-prefill scheduling
+    differences cannot shift the sampled trace."""
+    cfg, params = model
+    a = _reqs(cfg, (5, 11, 17), max_new=5)
+    _engine(cfg, params, temperature=1.0).generate(a, seed=7)
+    b = _reqs(cfg, (5, 11, 17), max_new=5)
+    _paged(cfg, params, temperature=1.0).generate(b, seed=7)
+    assert [r.generated for r in a] == [r.generated for r in b]
+
+
+def test_paged_bitstopper_decode_greedy_parity(model):
+    """The sparse path through the paged cache: the Sq=1 BESF decode walks
+    the block-table view and must still follow the dense greedy path."""
+    cfg, params = model
+    cfgb = cfg.replace(attn_impl="bitstopper_xla",
+                       bitstopper=BitStopperConfig(alpha=0.8))
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfgb.vocab, 9, dtype=np.int32)
+    req = Request(prompt=prompt, max_new_tokens=5)
+    _paged(cfgb, params).generate([req], seed=0)
+
+    seq = np.concatenate([prompt, np.asarray(req.generated[:-1], np.int32)])
+    logits, _, _ = T.forward(params, jnp.asarray(seq)[None],
+                             cfg.replace(attn_impl="xla"))
+    greedy = [int(t) for t in
+              np.asarray(jnp.argmax(logits[0], -1))[len(prompt) - 1:]]
+    assert req.generated == greedy
+
+
+def test_paged_chunked_prefill_invariance(model):
+    """Chunk size must not change served tokens on the dense path, and a
+    long prompt must actually take several prefill ticks."""
+    cfg, params = model
+    outs, chunks = [], []
+    for chunk in (8, 16, 32):
+        eng = _paged(cfg, params, prefill_chunk=chunk)
+        req = _reqs(cfg, (37,), max_new=4)[0]
+        eng.generate([req], seed=0)
+        outs.append(req.generated)
+        chunks.append(eng.counters["prefill_chunks"])
+    assert outs[0] == outs[1] == outs[2], outs
+    assert chunks[0] == 5                     # ceil(37 / 8)
+
+
+def test_paged_long_generation_beyond_max_len(model):
+    """Admission is bounded by pool capacity, not max_len: a request whose
+    prompt + max_new_tokens exceed max_len serves once the table/pool
+    allow it (the contiguous engine must still reject it)."""
+    cfg, params = model
+    with pytest.raises(ValueError):
+        _engine(cfg, params, max_len=16).submit(
+            Request(prompt=np.zeros(10, np.int32), max_new_tokens=20))
+
+    eng = _paged(cfg, params, max_len=16, max_blocks_per_req=8,
+                 pool_blocks=17)
+    req = _reqs(cfg, (10,), max_new=20)[0]
+    eng.generate([req], seed=0)
+    assert len(req.generated) == 20
+    # ...but a request that cannot ever fit is rejected up front.
+    with pytest.raises(ValueError):
+        eng.submit(Request(prompt=np.zeros(10, np.int32),
+                           max_new_tokens=200))
+
+
+def test_paged_eviction_returns_all_blocks(model):
+    """EOS/finish eviction drains every table reference and reservation:
+    after the trace completes the pool is back to full capacity."""
+    cfg, params = model
+    eng = _paged(cfg, params, max_slots=2, prefix_sharing=False)
+    eng.generate(_reqs(cfg, (5, 11, 17, 9, 13), max_new=4), seed=0)
+    assert all(s is None for s in eng.slots)
+    assert eng.pool.live_blocks() == 0
+    assert eng.pool.available() == eng.pool.capacity
+    assert (eng.table == 0).all()
+
+
+def test_paged_recycled_blocks_no_stale_kv(model):
+    """A request admitted onto recycled physical blocks must not read the
+    previous owner's KV: output equals a fresh-engine run bit for bit.
+    The pool is sized so the second batch MUST reuse the first's blocks."""
+    cfg, params = model
+    # 2 slots, <=2 blocks per request, null block -> 5-block pool is snug.
+    eng = _paged(cfg, params, max_slots=2, page_size=8, pool_blocks=5,
+                 prefix_sharing=False)
+    eng.generate(_reqs(cfg, (12, 9), max_new=4, seed=3), seed=0)
+    assert eng.pool.alloc_count >= 4
+    reused = _reqs(cfg, (11, 7), max_new=4, seed=4)
+    eng.generate(reused, seed=0)
+
+    fresh = _reqs(cfg, (11, 7), max_new=4, seed=4)
+    _paged(cfg, params, max_slots=2, page_size=8, pool_blocks=5,
+           prefix_sharing=False).generate(fresh, seed=0)
+    assert [r.generated for r in reused] == [r.generated for r in fresh]
+
+
+def test_paged_admission_blocks_on_pool_capacity(model):
+    """A free slot is not enough: the head of line waits until evictions
+    return blocks, then serves — and still matches an uncontended run."""
+    cfg, params = model
+    # Each request needs 2 blocks (12+4-1 tokens, page 8); capacity 3, so
+    # only one request fits at a time even though 2 slots are free.
+    eng = _paged(cfg, params, max_slots=2, page_size=8, pool_blocks=4,
+                 prefix_sharing=False)
+    tight = _reqs(cfg, (12, 12, 12), max_new=4, seed=6)
+    eng.generate(tight, seed=0)
+    assert all(len(r.generated) == 4 for r in tight)
+    assert eng.pool.available() == eng.pool.capacity
+
+    for i in range(3):
+        alone = _reqs(cfg, (12, 12, 12), max_new=4, seed=6)[i]
+        _paged(cfg, params, max_slots=2, page_size=8,
+               prefix_sharing=False).generate([alone], seed=0)
+        assert alone.generated == tight[i].generated, f"request {i} differs"
+
+
+def test_paged_prefix_sharing_bitident_and_saves_blocks(model):
+    """Requests with a common system prompt: shared serving produces
+    bit-identical tokens to unshared serving, actually hits the prefix
+    cache, and keeps fewer blocks live."""
+    cfg, params = model
+    sys_prompt = np.random.default_rng(42).integers(
+        0, cfg.vocab, 24, dtype=np.int32)
+
+    def reqs(seed=1):
+        r = np.random.default_rng(seed)
+        return [Request(prompt=np.concatenate(
+                            [sys_prompt,
+                             r.integers(0, cfg.vocab, L, dtype=np.int32)]),
+                        max_new_tokens=4)
+                for L in (3, 7, 5, 9)]
+
+    es = _paged(cfg, params, max_slots=2)
+    eu = _paged(cfg, params, max_slots=2, prefix_sharing=False)
+    # Publish the system prompt once (steady-state serving), then measure
+    # the batch: every request should map the shared blocks.
+    for eng in (es, eu):
+        eng.generate([Request(prompt=sys_prompt.copy(), max_new_tokens=1)],
+                     seed=0)
+        eng.pool.peak_live_blocks = 0
+    shared = reqs()
+    es.generate(shared, seed=0)
+    unshared = reqs()
+    eu.generate(unshared, seed=0)
+
+    assert [r.generated for r in shared] == [r.generated for r in unshared]
+    assert es.counters["prefix_hit_tokens"] >= 24 * 3
+    assert es.pool.peak_live_blocks < eu.pool.peak_live_blocks
+    assert es.kv_bytes_resident() < eu.kv_bytes_resident()
+    # shared blocks are refcounted back to zero at the end
+    assert es.pool.live_blocks() == 0
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(max_slots=0)
+    with pytest.raises(ValueError):
+        ServeConfig(prefill_bucket=0)
+    with pytest.raises(ValueError):
+        ServeConfig(max_len=-1)
+    with pytest.raises(ValueError):
+        ServeConfig(page_size=0)
+    with pytest.raises(ValueError):
+        ServeConfig(pool_blocks=1)
+    with pytest.raises(ValueError):
+        ServeConfig(max_blocks_per_req=0)
+    with pytest.raises(ValueError):
+        ServeConfig(prefill_chunk=0)
+    with pytest.raises(ValueError):
+        ServeConfig(prefill_bucket=16, prefill_chunk=24)  # not a multiple
+    with pytest.raises(ValueError):
+        ServeConfig(temperature=-0.5)
+    with pytest.raises(ValueError):
+        ServeConfig(cache_dtype="float16")
+    # valid construction resolves defaults
+    scfg = ServeConfig(max_len=64, page_size=16)
+    assert scfg.resolved_max_blocks() == 4
+    assert scfg.resolved_pool_blocks() == 1 + 4 * 4
+    assert scfg.resolved_chunk() % scfg.prefill_bucket == 0
 
 
 # ---------------------------------------------------------------------------
