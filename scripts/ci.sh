@@ -17,3 +17,11 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m repro.launch.serve --requests 2 --slots 2 \
         --min-prompt 4 --max-prompt 8 --new-tokens 3 --shared-prefix 8 \
         --page-size 8
+
+# Fused paged-decode smoke: times gather vs paged vs the Pallas kernel
+# (interpret mode on CPU runners) and asserts the traffic model scales
+# with fill level + the paged path's wall-clock win — the decode kernel
+# can't rot on CPU-only CI.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/decode_microbench.py --smoke --check \
+        --out /tmp/BENCH_decode_smoke.json

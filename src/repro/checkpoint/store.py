@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import json
 import os
+import tempfile
 import threading
 
 import jax
@@ -33,9 +34,17 @@ def _leaf_paths(tree):
 
 def save_checkpoint(tree, directory: str, step: int, n_shards: int = 4):
     paths, leaves = _leaf_paths(tree)
-    tmp = os.path.join(directory, f"step_{step:08d}.tmp")
     final = os.path.join(directory, f"step_{step:08d}")
-    os.makedirs(tmp, exist_ok=True)
+    os.makedirs(directory, exist_ok=True)
+    # Unique tmp dir per save: concurrent writers of the same step (async
+    # saver racing a sync one) must not share a staging directory, or the
+    # loser's os.replace finds its tmp already promoted away.  mkdtemp
+    # creates 0700; restore umask-derived permissions since this inode is
+    # promoted to the final checkpoint dir (shared readers must list it).
+    tmp = tempfile.mkdtemp(dir=directory, prefix=f"step_{step:08d}.tmp.")
+    umask = os.umask(0)
+    os.umask(umask)
+    os.chmod(tmp, 0o777 & ~umask)
     shards: list[dict] = [dict() for _ in range(n_shards)]
     for i, (p, leaf) in enumerate(zip(paths, leaves)):
         shards[i % n_shards][p] = np.asarray(leaf)
@@ -46,10 +55,19 @@ def save_checkpoint(tree, directory: str, step: int, n_shards: int = 4):
     manifest = {"step": step, "n_shards": n_shards, "paths": paths}
     with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
         json.dump(manifest, f)
+    import shutil
     if os.path.exists(final):
-        import shutil
-        shutil.rmtree(final)
-    os.replace(tmp, final)
+        # ignore_errors: a concurrent re-save of the same step may be
+        # removing the same tree; whoever's replace lands next wins.
+        shutil.rmtree(final, ignore_errors=True)
+    try:
+        os.replace(tmp, final)
+    except OSError:
+        if not os.path.isdir(final):
+            raise        # real I/O failure: keep the staging dir, surface it
+        # A concurrent writer promoted the same step between our rmtree and
+        # replace; its checkpoint is equivalent — drop our staging copy.
+        shutil.rmtree(tmp, ignore_errors=True)
     return final
 
 
@@ -81,7 +99,7 @@ def latest_step(directory: str) -> int | None:
         return None
     best = None
     for name in os.listdir(directory):
-        if name.startswith("step_") and not name.endswith(".tmp"):
+        if name.startswith("step_") and ".tmp" not in name:
             if os.path.exists(os.path.join(directory, name, "MANIFEST.json")):
                 s = int(name.split("_")[1])
                 best = s if best is None or s > best else best
@@ -123,10 +141,22 @@ class CheckpointManager:
         return load_checkpoint(tree_like, self.directory, step)
 
     def _gc(self):
+        import shutil
+        import time
         steps = sorted(
             int(n.split("_")[1]) for n in os.listdir(self.directory)
-            if n.startswith("step_") and not n.endswith(".tmp"))
+            if n.startswith("step_") and ".tmp" not in n)
         for s in steps[: -self.keep]:
-            import shutil
             shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
                           ignore_errors=True)
+        # Staging dirs orphaned by a crash (unique mkdtemp names are never
+        # reused) — reclaim them once they are safely older than any
+        # in-flight save could be.
+        for n in os.listdir(self.directory):
+            if n.startswith("step_") and ".tmp" in n:
+                p = os.path.join(self.directory, n)
+                try:
+                    if time.time() - os.path.getmtime(p) > 600:
+                        shutil.rmtree(p, ignore_errors=True)
+                except OSError:
+                    pass

@@ -255,6 +255,205 @@ def besf_attention_decode(
         lambda x: x.reshape(shape + x.shape[1:]), res)
 
 
+class PagedDecodeOutput(NamedTuple):
+    out: jax.Array          # [B, Hq, dv] attention output
+    rounds: jax.Array       # [B, n_blocks] int32 — bit planes fetched per page
+    survivors: jax.Array    # [B, Hq, n_blocks*page_size] bool
+    v_fetched: jax.Array    # [B, n_blocks] bool — V page actually read
+
+
+def paged_decode_prep(q, k_amax, v_amax, n_kv_heads: int,
+                      cfg: BitStopperConfig):
+    """Shared host-side prep of the paged decode paths (oracle AND kernel —
+    both must see bit-identical operands).
+
+    q [B, Hq, d] (one decode query per serving slot, head-major);
+    ``k_amax``/``v_amax`` [Hkv] are the pool-wide running max-abs per KV
+    head maintained by the cache write path.  Returns
+    ``(q_int, m_min, m_max, scale_total, alpha_radius, k_scale, v_scale)``
+    with per-(slot, head) q quantization — identical to the dense decode
+    path — but K/V scales shared by every slot, which is what makes one
+    physical bit-plane pool valid under every block table."""
+    B, Hq, d = q.shape
+    bits = cfg.bits
+    sm_scale = 1.0 / (d ** 0.5)
+    G = Hq // n_kv_heads
+    flat = q.reshape(B * Hq, d)
+    q_scale = qlib.scale_from_amax(jnp.max(jnp.abs(flat), axis=1), bits)
+    q_int = qlib.quantize_with_scale(flat, q_scale[:, None], bits)
+    q_int = q_int.reshape(B, Hq, d)
+    m_min, m_max = margins_lib.bit_margins(q_int, bits)       # [bits, B, Hq]
+    k_scale = qlib.scale_from_amax(k_amax, bits)              # [Hkv]
+    v_scale = qlib.scale_from_amax(v_amax, bits)
+    k_scale_h = jnp.repeat(k_scale, G)                        # [Hq]
+    scale_total = q_scale.reshape(B, Hq) * k_scale_h[None] * sm_scale
+    alpha_radius = cfg.alpha * (cfg.radius / scale_total)
+    return q_int, m_min, m_max, scale_total, alpha_radius, k_scale, v_scale
+
+
+def _paged_decode_row(
+    q_int,                  # [Hq, d] int32
+    m_min, m_max,           # [bits, Hq] f32
+    scale_total,            # [Hq] f32
+    alpha_radius,           # [Hq] f32
+    table,                  # [MB] int32 — logical block -> physical block
+    length,                 # int32 — row fill level (tokens cached)
+    q_pos,                  # int32 — absolute position of the query
+    k_pool,                 # [P, bs, Hkv, d] f32
+    v_pool,                 # [P, bs, Hkv, dv] f32
+    k_scale, v_scale,       # [Hkv] f32
+    cfg: BitStopperConfig,
+    window: int | None,
+):
+    """One slot's paged BESF decode — the semantic model of the fused
+    kernel, walked in the exact same order so every observable matches.
+
+    Pages are processed sequentially (logical block order).  LATS uses the
+    **prefix max lower bound** across the pages seen so far (same
+    conservative superset as the prefill kernel, ``block_adaptation.py``);
+    a page whose every (head, token) candidate is pruned stops consuming
+    planes, and its V page is counted un-fetched unless a token survives
+    all rounds.  The softmax is the flash-style online rescale in page
+    order — mirroring the kernel's epilogue op for op."""
+    Hq, d = q_int.shape
+    P, bs, Hkv, dv = v_pool.shape
+    MB = table.shape[0]
+    bits = cfg.bits
+    G = Hq // Hkv
+
+    w = (2 ** jnp.arange(bits - 1, -1, -1)).astype(jnp.int32)
+    w = w * jnp.where(jnp.arange(bits) == 0, -1, 1)
+    qg = q_int.reshape(Hkv, G, d)
+
+    def block_body(carry, j):
+        t_pos = j * bs + jnp.arange(bs, dtype=jnp.int32)
+        valid = (t_pos <= q_pos) & (t_pos < length)
+        if window is not None:
+            valid &= t_pos > q_pos - window
+        # Runtime page gate (the oracle-side analogue of the kernel's
+        # "no DMA past the fill level"): a page with no valid token costs
+        # nothing — lax.cond stays a real branch because rows are mapped
+        # sequentially (lax.map), not vmapped into a select.
+        return jax.lax.cond(jnp.any(valid), _live_page, _dead_page,
+                            carry, j, valid)
+
+    def _dead_page(carry, j, valid):
+        return carry, (jnp.zeros((), jnp.int32),
+                       jnp.zeros((Hq, bs), bool), jnp.zeros((), bool))
+
+    def _live_page(carry, j, valid):
+        mlow, m_run, l_run, acc = carry
+        phys = table[j]
+        k_int = qlib.quantize_with_scale(
+            k_pool[phys], k_scale[None, :, None], bits)       # [bs, Hkv, d]
+        planes = qlib.to_bitplanes(k_int, bits)               # [bits,bs,Hkv,d]
+        valid_b = jnp.broadcast_to(valid[None], (Hq, bs))
+
+        def round_body(rc, r):
+            partial, tok_alive, blk_live, rounds, mlow_in = rc
+            rounds = rounds + blk_live.astype(jnp.int32)
+            delta = w[r] * jnp.einsum(
+                "kgd,tkd->kgt", qg, planes[r].astype(jnp.int32)
+            ).reshape(Hq, bs)
+            partial = jnp.where(blk_live, partial + delta, partial)
+            lower = partial.astype(jnp.float32) + m_min[r][:, None]
+            upper = partial.astype(jnp.float32) + m_max[r][:, None]
+            low_here = jnp.max(
+                jnp.where(valid_b & tok_alive, lower, NEG_INF), axis=-1)
+            mlow_new = jnp.where(blk_live, jnp.maximum(mlow_in, low_here),
+                                 mlow_in)
+            eta = mlow_new - alpha_radius
+            keep = tok_alive & (upper >= eta[:, None]) & valid_b
+            keep = jnp.where(r < cfg.min_rounds - 1, tok_alive & valid_b,
+                             keep)
+            keep = jnp.where(blk_live, keep, tok_alive)
+            blk_new = jnp.where(blk_live, jnp.any(keep), blk_live)
+            return (partial, keep, blk_new, rounds, mlow_new), None
+
+        init = (jnp.zeros((Hq, bs), jnp.int32), valid_b, jnp.any(valid),
+                jnp.zeros((), jnp.int32), mlow)
+        (partial, tok_alive, _, rounds, mlow), _ = jax.lax.scan(
+            round_body, init, jnp.arange(bits))
+
+        survived = tok_alive & (rounds == bits)
+        any_surv = jnp.any(survived)
+        logits = jnp.where(
+            survived, partial.astype(jnp.float32) * scale_total[:, None],
+            NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+        p = jnp.where(survived, jnp.exp(logits - m_new[:, None]), 0.0)
+        corr = jnp.where(m_run == NEG_INF, 0.0, jnp.exp(m_run - m_new))
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        vblk = v_pool[phys]                                   # [bs, Hkv, dv]
+        if cfg.quantize_v:
+            v_eff = (qlib.quantize_with_scale(
+                vblk, v_scale[None, :, None], bits).astype(jnp.float32)
+                * v_scale[None, :, None])
+        else:
+            v_eff = vblk.astype(jnp.float32)
+        upd = jnp.einsum("kgt,tkd->kgd", p.reshape(Hkv, G, bs), v_eff)
+        acc_new = acc * corr[:, None] + upd.reshape(Hq, dv)
+        # The kernel's whole epilogue (including the V DMA) is predicated
+        # on any_surv; a page with no survivor leaves the state untouched.
+        m_run = jnp.where(any_surv, m_new, m_run)
+        l_run = jnp.where(any_surv, l_new, l_run)
+        acc = jnp.where(any_surv, acc_new, acc)
+        return (mlow, m_run, l_run, acc), (rounds, survived, any_surv)
+
+    init = (
+        jnp.full((Hq,), NEG_INF, jnp.float32),
+        jnp.full((Hq,), NEG_INF, jnp.float32),
+        jnp.zeros((Hq,), jnp.float32),
+        jnp.zeros((Hq, dv), jnp.float32),
+    )
+    (_, _, l_run, acc), (rounds, survived, v_fetched) = jax.lax.scan(
+        block_body, init, jnp.arange(MB))
+    out = acc / jnp.maximum(l_run, 1e-30)[:, None]
+    survivors = jnp.moveaxis(survived, 0, 1).reshape(Hq, MB * bs)
+    return out, rounds, survivors, v_fetched
+
+
+@partial(jax.jit, static_argnames=("cfg", "window"))
+def besf_attention_decode_paged(
+    q: jax.Array,            # [B, Hq, d] — one decode query per slot
+    k_pool: jax.Array,       # [P, page_size, Hkv, d] f32 pool
+    v_pool: jax.Array,       # [P, page_size, Hkv, dv] f32 pool
+    table: jax.Array,        # [B, MB] int32 block tables
+    lengths: jax.Array,      # [B] int32 fill levels
+    q_positions: jax.Array,  # [B] int32 absolute query positions
+    k_amax: jax.Array,       # [Hkv] pool-wide running max|K|
+    v_amax: jax.Array,       # [Hkv] pool-wide running max|V|
+    cfg: BitStopperConfig = BitStopperConfig(),
+    window: int | None = None,
+) -> PagedDecodeOutput:
+    """Paged BESF decode oracle: pure-JAX, gathers physical pages through
+    the block table (this IS the retained gather fallback) while computing
+    the exact page-sequential semantics of the fused Pallas kernel in
+    ``repro/kernels/paged_decode.py`` — survivors, per-page plane counts,
+    V-fetch decisions, and the online-softmax output all match the kernel
+    bit for bit (tested).
+
+    Quantization uses the cache's **pool-wide** running max-abs scales
+    (``k_amax``/``v_amax``), not per-row view scales: a physical page
+    shared by several block tables (prefix sharing) or recycled across
+    requests must mean the same integers to every reader."""
+    Hkv = k_pool.shape[2]
+    prep = paged_decode_prep(q, k_amax, v_amax, Hkv, cfg)
+    q_int, m_min, m_max, scale_total, alpha_radius, k_scale, v_scale = prep
+    # lax.map (sequential over rows), NOT vmap: vmap would batch the
+    # per-page lax.cond into a select that executes the dead-page work
+    # anyway, and the whole point of the paged walk is that per-step cost
+    # scales with each row's actual fill level.
+    out, rounds, survivors, v_fetched = jax.lax.map(
+        lambda xs: _paged_decode_row(
+            xs[0], xs[1], xs[2], xs[3], xs[4], xs[5], xs[6], xs[7],
+            k_pool, v_pool, k_scale, v_scale, cfg, window),
+        (q_int, jnp.moveaxis(m_min, 1, 0), jnp.moveaxis(m_max, 1, 0),
+         scale_total, alpha_radius, table, lengths, q_positions))
+    return PagedDecodeOutput(out=out, rounds=rounds, survivors=survivors,
+                             v_fetched=v_fetched)
+
+
 @partial(jax.jit, static_argnames=("cfg", "causal"))
 def besf_attention(
     q: jax.Array,

@@ -59,6 +59,26 @@ def dequantize(q: jax.Array, params: QuantParams) -> jax.Array:
     return q.astype(jnp.float32) * params.scale
 
 
+def scale_from_amax(amax: jax.Array, bits: int = DEFAULT_BITS) -> jax.Array:
+    """Symmetric quant scale for a given max-abs value (same epsilon floor
+    as :func:`quantize`, so ``quantize_with_scale(x, max|x|)`` is
+    bit-identical to ``quantize(x)``)."""
+    qmax = 2 ** (bits - 1) - 1
+    return jnp.maximum(amax, 1e-12).astype(jnp.float32) / qmax
+
+
+def quantize_with_scale(x: jax.Array, scale: jax.Array,
+                        bits: int = DEFAULT_BITS) -> jax.Array:
+    """Quantize under an externally-maintained scale (broadcast against
+    ``x``).  The paged serving cache uses this with a *pool-wide running*
+    max-abs per KV head: every request quantizes against the same scale, so
+    bit planes stored in the shared block pool are valid for every block
+    table that maps them (per-request scales would make a prefix-shared
+    block's planes wrong for all but one owner)."""
+    qmax = 2 ** (bits - 1) - 1
+    return jnp.clip(jnp.round(x / scale), -(qmax + 1), qmax).astype(jnp.int32)
+
+
 def to_bitplanes(q: jax.Array, bits: int = DEFAULT_BITS) -> jax.Array:
     """Decompose int32 2's-complement values into bit planes.
 
@@ -116,6 +136,28 @@ def unpack_planes_seq(packed: jax.Array) -> jax.Array:
     shifts = jnp.arange(8, dtype=jnp.uint32).reshape(1, 1, 8, 1)
     u = (packed.astype(jnp.uint32)[:, :, None, :] >> shifts) & 1
     return u.reshape(bits, S8 * 8, d).astype(jnp.uint8)
+
+
+def pack_pool_planes(pool: jax.Array, amax: jax.Array,
+                     bits: int = DEFAULT_BITS) -> jax.Array:
+    """Quantize + bit-plane-pack a whole paged K pool in one shot.
+
+    ``pool`` f32 ``[P, page_size, H, D]`` (page_size % 8 == 0), ``amax``
+    ``[H]`` pool-wide running max-abs → ``uint8[P, bits, page_size//8, H,
+    D]`` with token t of a page owning bit ``t % 8`` of byte ``t // 8``
+    (LSB-first, the :func:`pack_planes_seq` layout).  This is the canonical
+    definition the incremental write path, the paged decode kernel, and
+    the benchmarks all share — the rescale-on-demand requant rebuilds the
+    serving plane pool with exactly this function."""
+    P, bs, H, D = pool.shape
+    assert bs % 8 == 0, f"page size {bs} not a multiple of 8"
+    scale = scale_from_amax(amax, bits)
+    q = quantize_with_scale(pool, scale[None, None, :, None], bits)
+    planes = to_bitplanes(q, bits)                  # [bits, P, bs, H, D]
+    pk = planes.reshape(bits, P, bs // 8, 8, H, D).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(8, dtype=jnp.uint32))
+    packed = jnp.sum(pk * weights.reshape(1, 1, 1, 8, 1, 1), axis=3)
+    return packed.astype(jnp.uint8).transpose(1, 0, 2, 3, 4)
 
 
 @partial(jax.jit, static_argnames=("bits",))

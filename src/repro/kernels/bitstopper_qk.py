@@ -44,6 +44,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import margins as margins_lib
 from repro.core import quantization as qlib
 from repro.core.besf import BitStopperConfig
+from repro.kernels.runtime import resolve_interpret
 
 NEG_INF = -1e30
 
@@ -302,14 +303,15 @@ def bitstopper_attention_kernel(
     block_q: int = 128,
     block_k: int = 128,
     causal: bool = False,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> KernelOutput:
     """Quantize + pack + run the fused BitStopper kernel.
 
-    Leading batch/head dims are vmapped.  ``interpret=True`` executes the
-    kernel body on CPU (the validation mode for this repo); on a real TPU
-    pass ``interpret=False``.
+    Leading batch/head dims are vmapped.  ``interpret=None`` auto-resolves:
+    compiled on TPU, interpreted (the CPU validation mode) everywhere else;
+    an explicit bool forces either mode.
     """
+    interpret = resolve_interpret(interpret)
     d = q.shape[-1]
     sm_scale = 1.0 / (d ** 0.5)
     bits = cfg.bits

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -90,8 +92,9 @@ def flash_attention_single(
     sm_scale: float | None = None,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     Sq, d = q.shape
     Sk, dv = v.shape
     block_q = min(block_q, Sq)

@@ -12,8 +12,9 @@
                             This is what serving uses for sparsity stats on
                             CPU and what the dry-run lowers for TPU graphs.
 
-On a real TPU deployment ``interpret=False`` flips the Pallas kernels to
-compiled mode; nothing else changes.
+``interpret=None`` (the default) auto-resolves per backend: the Pallas
+kernels compile on TPU and interpret everywhere else — no flag needed on a
+real deployment, and CPU CI keeps validating the same kernel bodies.
 """
 
 from __future__ import annotations
@@ -40,7 +41,7 @@ def attention(
     cfg: BitStopperConfig | None = None,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Attention output only (stats-carrying variants live in core/)."""
     if impl == "xla":

@@ -1,0 +1,334 @@
+"""Fused paged BESF decode Pallas TPU kernel — serving's per-token hot path.
+
+DESIGN — mapping BitStopper (BESF / LATS / BAP) onto paged-DMA decode
+=====================================================================
+
+The serving KV cache is a batch-free block pool: ``[pool_blocks, ...]``
+physical pages addressed through per-slot block tables.  The old decode
+path gathered each slot's dense logical view ``[B, max_blocks_per_req *
+page_size, H, D]`` per layer per token and re-derived bit planes from
+scratch — O(table width) HBM traffic regardless of how full a row is or
+how early LATS terminates.  This kernel walks the *physical* pages
+directly; no view is ever materialized:
+
+* **Paging via scalar prefetch.**  Block tables and per-row fill levels
+  ride in SMEM (``PrefetchScalarGridSpec``), so the kernel computes every
+  DMA address itself: grid ``(slot, kv_page)`` with the page axis
+  innermost/sequential.  A page past the row's fill level issues **no DMA
+  at all** — per-step traffic scales with actual fill, not with the padded
+  table width.
+* **BESF at page granularity.**  K lives pre-quantized in the incremental
+  bit-plane pool (``uint8[pool_blocks, bits, page_size//8, Hkv, D]``,
+  packed 8 tokens/byte at cache-write time under the pool-wide running
+  per-KV-head scale — see ``models/attention.py:_update_plane_pool``).
+  Planes are DMA'd **manually, one plane per round**, guarded by the LATS
+  liveness predicate: once every (head, token) candidate of a page is
+  pruned, the page's remaining planes are *never fetched*.  This is the
+  paper's bit-serial early termination, enforced at the DMA level — with
+  BlockSpec auto-pipelining the bytes would move regardless of ``pl.when``.
+* **LATS.**  Per query head, the pruning threshold uses the **prefix max
+  lower bound** over the pages seen so far (the same conservative superset
+  of the paper's global max as the prefill kernel, oracle'd by
+  ``core/block_adaptation.py``); margins come from the per-(slot, head)
+  INT12 query, computed host-side and streamed in as LUT rows.
+* **Early-terminated V.**  A page's V is fetched only if at least one
+  token survives all rounds — the V-PU half of the paper's traffic win.
+* **BAP.**  Bit-level asynchronous processing maps to DMA/compute overlap:
+  plane r+1 of a live page is requested (double-buffered plane scratch)
+  before round r's pruning math runs, and the whole epilogue (softmax
+  rescale + V matmul) is predicated off for survivor-free pages.
+
+Numerics are exact: plane matmuls are f32 (every intermediate an integer
+< 2^24) accumulated into an int32 partial-score scratch.  The pure-JAX
+oracle this kernel must match bit for bit is
+``core/besf.py:besf_attention_decode_paged`` — same page order, same
+online-softmax op order, same pool-wide quant scales.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import quantization as qlib
+from repro.core.besf import BitStopperConfig, PagedDecodeOutput, \
+    paged_decode_prep
+from repro.kernels.runtime import resolve_interpret
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(
+    # scalar-prefetch (SMEM)
+    tables_ref,             # [B, MB] int32 — logical -> physical page
+    lengths_ref,            # [B] int32 — per-row fill level
+    qpos_ref,               # [B] int32 — absolute query position
+    # VMEM-blocked operands
+    q_ref,                  # [1, Hq, D] int32 — quantized query
+    mmin_ref,               # [bits, 1, Hq] f32 — LATS margin LUT (min)
+    mmax_ref,               # [bits, 1, Hq] f32 — LATS margin LUT (max)
+    st_ref,                 # [1, Hq] f32 — scale_total per head
+    ar_ref,                 # [1, Hq] f32 — alpha * radius_int per head
+    vs_ref,                 # [1, Hkv] f32 — V quant scale per KV head
+    # HBM (manually DMA'd) pools
+    kq_hbm,                 # [P, bits, bs8, Hkv, D] uint8 bit-plane pool
+    v_hbm,                  # [P, bs, Hkv, Dv] V pool
+    # outputs
+    out_ref,                # [1, Hq, Dv]
+    rounds_ref,             # [1, 1] int32
+    surv_ref,               # [1, Hq, bs] int8
+    # scratch
+    plane_ref,              # [2, bs8, Hkv, D] uint8 (double buffer)
+    v_ref,                  # [bs, Hkv, Dv]
+    partial_ref,            # [Hq, bs] int32
+    mlow_ref,               # [Hq] f32 — LATS prefix max lower bound
+    m_ref, l_ref, acc_ref,  # online softmax state
+    plane_sem, v_sem,       # DMA semaphores
+    *,
+    bits: int,
+    page_size: int,
+    n_kv_heads: int,
+    min_rounds: int,
+    quantize_v: bool,
+    window: int | None,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+    bs = page_size
+    bs8 = bs // 8
+    Hq = q_ref.shape[1]
+    D = q_ref.shape[2]
+    G = Hq // n_kv_heads
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        mlow_ref[...] = jnp.full_like(mlow_ref, NEG_INF)
+
+    partial_ref[...] = jnp.zeros_like(partial_ref)
+
+    phys = tables_ref[b, j]
+    length = lengths_ref[b]
+    q_pos = qpos_ref[b]
+
+    t_pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (bs,), 0)
+    valid = (t_pos <= q_pos) & (t_pos < length)
+    if window is not None:
+        valid &= t_pos > q_pos - window
+    valid_b = jnp.broadcast_to(valid[None], (Hq, bs))
+    blk0 = jnp.any(valid)
+
+    alpha_radius = ar_ref[0]                                  # [Hq]
+    qg = q_ref[0].astype(jnp.float32).reshape(n_kv_heads, G, D)
+
+    def plane_weight(r):
+        mag = jax.lax.shift_left(jnp.int32(1), (bits - 1 - r).astype(jnp.int32))
+        return jnp.where(r == 0, -mag, mag)
+
+    def start_plane_copy(r, slot):
+        pltpu.make_async_copy(
+            kq_hbm.at[phys, r], plane_ref.at[slot], plane_sem.at[slot],
+        ).start()
+
+    def wait_plane_copy(slot):
+        pltpu.make_async_copy(
+            kq_hbm.at[0, 0],                       # shape donor only
+            plane_ref.at[slot], plane_sem.at[slot],
+        ).wait()
+
+    # BAP prefetch: plane 0 of a reachable page is requested up front.
+    @pl.when(blk0)
+    def _prefetch_first():
+        start_plane_copy(0, 0)
+
+    def round_body(r, carry):
+        tok_alive, blk_live, rounds, mlow = carry
+        slot = jax.lax.rem(r, 2)
+        rounds_new = rounds + blk_live.astype(jnp.int32)
+
+        @pl.when(blk_live)
+        def _consume_plane():
+            wait_plane_copy(slot)
+            packed = plane_ref[slot].astype(jnp.int32)        # [bs8, Hkv, D]
+            shifts = jax.lax.broadcasted_iota(
+                jnp.int32, (bs8, 8, n_kv_heads, D), 1)
+            unpacked = (packed[:, None] >> shifts) & 1
+            plane = unpacked.reshape(bs, n_kv_heads, D).astype(jnp.float32)
+            # f32 dot is exact: every partial product is an integer bounded
+            # by 2048 * D < 2^24.  Same einsum as the oracle, op for op.
+            delta = jnp.einsum("kgd,tkd->kgt", qg, plane,
+                               preferred_element_type=jnp.float32)
+            partial_ref[...] += (delta.astype(jnp.int32)
+                                 * plane_weight(r)).reshape(Hq, bs)
+
+        partial = partial_ref[...].astype(jnp.float32)
+        lower = partial + mmin_ref[r, 0][:, None]
+        upper = partial + mmax_ref[r, 0][:, None]
+        low_here = jnp.max(jnp.where(valid_b & tok_alive, lower, NEG_INF),
+                           axis=-1)
+        mlow_new = jnp.where(blk_live, jnp.maximum(mlow, low_here), mlow)
+        eta = mlow_new - alpha_radius
+        keep = tok_alive & (upper >= eta[:, None]) & valid_b
+        keep = jnp.where(r < min_rounds - 1, tok_alive & valid_b, keep)
+        keep = jnp.where(blk_live, keep, tok_alive)
+        blk_new = jnp.where(blk_live, jnp.any(keep), blk_live)
+
+        # BAP: the next plane's DMA is issued as soon as the liveness
+        # verdict exists, overlapping with the next round's LATS math.
+        @pl.when(blk_new & (r + 1 < bits))
+        def _prefetch_next():
+            start_plane_copy(r + 1, 1 - slot)
+
+        return keep, blk_new, rounds_new, mlow_new
+
+    tok_alive, _, rounds, mlow = jax.lax.fori_loop(
+        0, bits, round_body,
+        (valid_b, blk0, jnp.zeros((), jnp.int32), mlow_ref[...]),
+    )
+    mlow_ref[...] = mlow
+    rounds_ref[0, 0] = rounds
+
+    survived = tok_alive & (rounds == bits)
+    surv_ref[...] = survived[None].astype(jnp.int8)
+
+    @pl.when(jnp.any(survived))
+    def _epilogue():
+        logits = jnp.where(
+            survived,
+            partial_ref[...].astype(jnp.float32) * st_ref[0][:, None],
+            NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+        p = jnp.where(survived, jnp.exp(logits - m_new[:, None]), 0.0)
+        corr = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        # V page fetched only when at least one token survived all rounds.
+        cp = pltpu.make_async_copy(v_hbm.at[phys], v_ref, v_sem)
+        cp.start()
+        cp.wait()
+        v = v_ref[...].astype(jnp.float32)
+        if quantize_v:
+            vs = vs_ref[0][None, :, None]
+            v_eff = (qlib.quantize_with_scale(v, vs, bits)
+                     .astype(jnp.float32) * vs)
+        else:
+            v_eff = v
+        upd = jnp.einsum("kgt,tkd->kgd",
+                         p.reshape(n_kv_heads, G, bs), v_eff,
+                         preferred_element_type=jnp.float32)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + upd.reshape(Hq, v_eff.shape[-1]))
+        m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        out_ref[...] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        )[None].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "window", "interpret", "stats"))
+def paged_bitstopper_decode(
+    q: jax.Array,            # [B, Hq, D] — one decode query per slot
+    kq_pool: jax.Array,      # [P, bits, bs//8, Hkv, D] uint8 plane pool
+    v_pool: jax.Array,       # [P, bs, Hkv, Dv] V pool
+    table: jax.Array,        # [B, MB] int32 block tables
+    lengths: jax.Array,      # [B] int32 fill levels
+    q_positions: jax.Array,  # [B] int32 absolute query positions
+    k_amax: jax.Array,       # [Hkv] pool-wide running max|K|
+    v_amax: jax.Array,       # [Hkv] pool-wide running max|V|
+    cfg: BitStopperConfig = BitStopperConfig(),
+    window: int | None = None,
+    interpret: bool | None = None,
+    stats: bool = True,
+) -> PagedDecodeOutput:
+    """Run the fused paged BESF decode kernel over every serving slot.
+
+    Bit-identical observables to ``besf_attention_decode_paged`` (the
+    pure-JAX gather fallback): per-page plane counts, token survivors,
+    V-fetch decisions, and the attention output.  ``interpret=None``
+    auto-resolves per backend (compiled on TPU, interpreted elsewhere).
+
+    ``stats=False`` (the serving hot path) shrinks the survivors output
+    to a single page-wide tile per slot — every grid step overwrites the
+    same block, so the per-step HBM store drops from ``B*Hq*MB*page``
+    bytes to ``B*Hq*page`` — and returns ``survivors``/``v_fetched`` as
+    None.  Tests and the traffic model use ``stats=True``."""
+    interpret = resolve_interpret(interpret)
+    B, Hq, D = q.shape
+    P, bits, bs8, Hkv, _ = kq_pool.shape
+    bs = bs8 * 8
+    MB = table.shape[1]
+    Dv = v_pool.shape[-1]
+    assert bits == cfg.bits and v_pool.shape[1] == bs
+
+    prep = paged_decode_prep(q, k_amax, v_amax, Hkv, cfg)
+    q_int, m_min, m_max, scale_total, alpha_radius, _, v_scale = prep
+
+    kernel = functools.partial(
+        _paged_decode_kernel,
+        bits=bits, page_size=bs, n_kv_heads=Hkv,
+        min_rounds=cfg.min_rounds, quantize_v=cfg.quantize_v,
+        window=window,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                    # tables, lengths, q_pos
+        grid=(B, MB),
+        in_specs=[
+            pl.BlockSpec((1, Hq, D), lambda b, j, *_: (b, 0, 0)),     # q_int
+            pl.BlockSpec((bits, 1, Hq), lambda b, j, *_: (0, b, 0)),  # m_min
+            pl.BlockSpec((bits, 1, Hq), lambda b, j, *_: (0, b, 0)),  # m_max
+            pl.BlockSpec((1, Hq), lambda b, j, *_: (b, 0)),      # scale_total
+            pl.BlockSpec((1, Hq), lambda b, j, *_: (b, 0)),      # alpha*radius
+            pl.BlockSpec((1, Hkv), lambda b, j, *_: (0, 0)),     # v_scale
+            pl.BlockSpec(memory_space=pl.ANY),                   # kq pool
+            pl.BlockSpec(memory_space=pl.ANY),                   # v pool
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Hq, Dv), lambda b, j, *_: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j, *_: (b, j)),
+            pl.BlockSpec((1, Hq, bs),
+                         (lambda b, j, *_: (b, 0, j)) if stats else
+                         (lambda b, j, *_: (b, 0, 0))),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, bs8, Hkv, D), jnp.uint8),   # plane double buffer
+            pltpu.VMEM((bs, Hkv, Dv), v_pool.dtype),   # v page
+            pltpu.VMEM((Hq, bs), jnp.int32),           # partial scores
+            pltpu.VMEM((Hq,), jnp.float32),            # LATS prefix max
+            pltpu.VMEM((Hq,), jnp.float32),            # m
+            pltpu.VMEM((Hq,), jnp.float32),            # l
+            pltpu.VMEM((Hq, Dv), jnp.float32),         # acc
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    out, rounds, surv = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, Dv), jnp.float32),
+            jax.ShapeDtypeStruct((B, MB), jnp.int32),
+            jax.ShapeDtypeStruct((B, Hq, (MB if stats else 1) * bs),
+                                 jnp.int8),
+        ],
+        interpret=interpret,
+    )(table.astype(jnp.int32), lengths.astype(jnp.int32),
+      q_positions.astype(jnp.int32),
+      q_int, m_min, m_max, scale_total, alpha_radius, v_scale[None],
+      kq_pool, v_pool)
+    if not stats:
+        return PagedDecodeOutput(out=out, rounds=rounds, survivors=None,
+                                 v_fetched=None)
+    survivors = surv.astype(bool)
+    v_fetched = survivors.reshape(B, Hq, MB, bs).any(axis=(1, 3))
+    return PagedDecodeOutput(out=out, rounds=rounds, survivors=survivors,
+                             v_fetched=v_fetched)

@@ -1,0 +1,18 @@
+"""Kernel runtime policy helpers shared by every Pallas entry point."""
+
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve the tri-state ``interpret`` kernel argument.
+
+    ``None`` means *auto*: compile the kernel iff the default JAX backend is
+    a TPU, interpret everywhere else (the CPU containers this repo tests on
+    cannot lower Pallas TPU kernels).  Passing an explicit bool always wins —
+    e.g. forcing ``interpret=True`` on TPU to debug a kernel.
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret

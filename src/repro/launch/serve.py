@@ -77,6 +77,11 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="paged engine: prompt tokens prefetched per "
                          "scheduler tick (multiple of the prefill bucket)")
+    ap.add_argument("--fused-decode", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="paged BitStopper decode through the fused Pallas "
+                         "kernel (on), the pure-JAX gather fallback (off), "
+                         "or kernel iff on TPU (auto)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -89,7 +94,9 @@ def main():
         max_len=args.shared_prefix + args.max_prompt + args.new_tokens + 8,
         max_slots=args.slots, temperature=args.temperature,
         page_size=args.page_size, pool_blocks=args.pool_blocks,
-        prefill_chunk=args.prefill_chunk)
+        prefill_chunk=args.prefill_chunk,
+        fused_decode={"auto": None, "on": True, "off": False}[
+            args.fused_decode])
     engine = {"paged": PagedEngine,
               "continuous": ContinuousBatchingEngine,
               "static": StaticBucketEngine}[args.engine](cfg, params, scfg)

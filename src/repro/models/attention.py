@@ -28,7 +28,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.besf import BitStopperConfig
+from repro.core import quantization as qlib
+from repro.core.besf import BitStopperConfig, besf_attention_decode_paged
 from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.sharding.api import constrain
@@ -51,6 +52,10 @@ class AttnConfig:
     bitstopper: BitStopperConfig = BitStopperConfig()
     chunk_q: int = 512
     chunk_k: int = 512
+    # Paged serving decode: walk physical KV pages with the fused Pallas
+    # kernel (kernels/paged_decode.py) instead of the pure-JAX gather
+    # fallback.  Only consulted when the cache carries a bit-plane pool.
+    fused_decode: bool = False
 
 
 def init_attention(key, cfg: AttnConfig, dtype=jnp.float32):
@@ -356,16 +361,40 @@ def init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.float32,
     every slot, addressed through a per-slot block ``table`` (refcounted
     blocks can appear in several tables — copy-on-write prefix sharing).
     Sliding-window layers fall back to position masking (no ring): the
-    logical index of a token is its absolute position."""
+    logical index of a token is its absolute position.
+
+    BitStopper layers additionally carry ``k_amax``/``v_amax`` — the
+    monotone running max-abs per KV head defining the pool-wide quant
+    scales both paged decode paths share — and, when ``cfg.fused_decode``,
+    an **incremental bit-plane pool**: ``kq`` holds every page's K rows
+    pre-quantized (INT-``bits``) and bit-packed 8 tokens/byte along the
+    page axis — ``uint8[pool_blocks, bits, page_size//8, Hkv, D]`` —
+    written at cache write time so the fused kernel never re-derives
+    planes from the f32 pool (see ``_update_plane_pool`` for the
+    rescale-on-demand rule)."""
     if paged is not None:
         nb, bs = paged.pool_blocks, paged.page_size
-        return {
+        cache = {
             "k": jnp.zeros((nb, bs, cfg.n_kv_heads, cfg.head_dim), dtype),
             "v": jnp.zeros((nb, bs, cfg.n_kv_heads, cfg.head_dim), dtype),
             "pos": jnp.full((nb, bs), POS_SENTINEL, jnp.int32),
             "table": jnp.zeros((batch, paged.max_blocks_per_req), jnp.int32),
             "length": jnp.zeros((batch,), jnp.int32),
         }
+        if cfg.impl in ("bitstopper", "bitstopper_xla") and bs % 8 == 0:
+            # Pool-wide running quant scales: needed by BOTH paged decode
+            # paths (the kernel and the pure-JAX fallback oracle).
+            cache["k_amax"] = jnp.zeros((cfg.n_kv_heads,), jnp.float32)
+            cache["v_amax"] = jnp.zeros((cfg.n_kv_heads,), jnp.float32)
+            if cfg.fused_decode:
+                # The packed plane pool is read only by the fused kernel;
+                # the fallback re-derives planes from the f32 pool, so
+                # don't pay write-time packing/requants it won't use.
+                bits = cfg.bitstopper.bits
+                cache["kq"] = jnp.zeros(
+                    (nb, bits, bs // 8, cfg.n_kv_heads, cfg.head_dim),
+                    jnp.uint8)
+        return cache
     n_slots = min(max_len, cfg.window) if (ring and cfg.window) else max_len
     if per_slot:
         pos = jnp.full((batch, n_slots), POS_SENTINEL, jnp.int32)
@@ -407,55 +436,6 @@ def _update_cache(cache, k, v, positions):
     kc = k.astype(cache["k"].dtype)
     vc = v.astype(cache["v"].dtype)
     pc = positions.astype(jnp.int32)
-
-    if cache_is_paged(cache):
-        # Paged layout: the K/V pool has no batch axis — every batch row
-        # (serving slot) scatters through its row of the block table.  A
-        # token at absolute position p lives in logical block p // bs at
-        # offset p % bs; the table maps logical -> physical block id.
-        # Writes never target physical block 0 (the null block backing
-        # unused table entries), and pad-sentinel tokens are routed out of
-        # bounds and dropped — exactly like the contiguous per-slot path.
-        nb, bs = cache["pos"].shape
-        B = kc.shape[0]
-        table = cache["table"]                                # [B, MB]
-        MB = table.shape[1]
-        Tv = MB * bs
-        pc2 = jnp.broadcast_to(pc, (B, S))
-        real = pc2 != POS_SENTINEL
-        p_safe = jnp.where(real, pc2, 0)
-        logical = p_safe // bs
-        phys = jnp.take_along_axis(table, jnp.clip(logical, 0, MB - 1),
-                                   axis=1)                    # [B, S]
-        ok = real & (logical < MB) & (phys > 0)
-        flat_idx = jnp.where(ok, phys * bs + p_safe % bs, nb * bs)
-        kf = cache["k"].reshape((nb * bs,) + cache["k"].shape[2:])
-        vf = cache["v"].reshape((nb * bs,) + cache["v"].shape[2:])
-        pf = cache["pos"].reshape(nb * bs)
-        fi = flat_idx.reshape(-1)
-        kf = kf.at[fi].set(kc.reshape((-1,) + kc.shape[2:]), mode="drop")
-        vf = vf.at[fi].set(vc.reshape((-1,) + vc.shape[2:]), mode="drop")
-        pf = pf.at[fi].set(pc2.reshape(-1), mode="drop")
-        new_len = cache["length"] + real.sum(axis=1, dtype=jnp.int32)
-        new = dict(cache, k=kf.reshape(cache["k"].shape),
-                   v=vf.reshape(cache["v"].shape),
-                   pos=pf.reshape(nb, bs), length=new_len)
-        # Gather each row's logical view [B, MB*bs].  Only the first
-        # length[b] view slots were ever written by (or shared into) row b,
-        # so slots past the fill level are forced invalid and zeroed: a
-        # recycled physical block's stale K/V and positions are
-        # unobservable, and zeroed tails keep the BitStopper per-tensor
-        # max-abs quant scale identical to the contiguous layout.
-        view = (table[..., None] * bs
-                + jnp.arange(bs, dtype=jnp.int32)).reshape(B, Tv)
-        k_view = kf[view]                                     # [B, Tv, H, D]
-        v_view = vf[view]
-        pos_view = pf[view]
-        valid = jnp.arange(Tv, dtype=jnp.int32)[None] < new_len[:, None]
-        pos_view = jnp.where(valid, pos_view, POS_SENTINEL)
-        k_view = jnp.where(valid[..., None, None], k_view, 0)
-        v_view = jnp.where(valid[..., None, None], v_view, 0)
-        return k_view, v_view, pos_view, new
 
     if cache_is_per_slot(cache):
         # Per-slot layout: every batch row has its own cursor.  Writes are a
@@ -522,6 +502,189 @@ def _update_cache(cache, k, v, positions):
           widx[None])
     new = dict(cache, k=ck, v=cv, pos=cpos, length=cache["length"] + S)
     return ck, cv, cpos, new
+
+
+def _update_plane_pool(cache, kc, vc, real, phys, p_safe, ok, k_pool_new):
+    """Maintain the pool-wide quant scales — and, when the fused kernel is
+    in play (``kq`` present), the incremental bit-plane pool — at cache
+    write time.
+
+    Scale policy (**rescale-on-demand**): ``k_amax``/``v_amax`` are the
+    monotone running max-abs per KV head over every token ever written.
+    While the max is stable, only the newly written tokens are quantized
+    and their bits scattered into the packed pool (one byte column per
+    token — O(written) traffic).  When a new token *grows* the max, every
+    stored plane encodes integers under a stale scale, so the whole pool
+    is requantized from the f32 K pool under the new scale — a rare,
+    amortized event (max-abs growth is logarithmic in tokens served).
+
+    Packing invariant: token at page offset ``t`` owns bit ``t % 8`` of
+    byte ``t // 8`` (LSB-first, matching ``qlib.pack_planes_seq``).  Pages
+    fill strictly front to back (allocator + append-only cursor), so a
+    write to bit position ``b`` may clobber bits above ``b`` (never yet
+    written, unreadable through the fill-level mask) but must preserve
+    bits below ``b`` (earlier tokens) — hence the low-mask merge.
+    """
+    k_amax, v_amax = cache["k_amax"], cache["v_amax"]
+    realm = real[..., None, None]
+    kabs = jnp.abs(kc.astype(jnp.float32)) * realm
+    vabs = jnp.abs(vc.astype(jnp.float32)) * realm
+    k_amax_new = jnp.maximum(k_amax, jnp.max(kabs, axis=(0, 1, 3)))
+    v_amax_new = jnp.maximum(v_amax, jnp.max(vabs, axis=(0, 1, 3)))
+    if "kq" not in cache:      # fallback decode: scales only, no packing
+        return dict(k_amax=k_amax_new, v_amax=v_amax_new)
+    kq = cache["kq"]
+    nb, bits, bs8, H, D = kq.shape
+    bs = bs8 * 8
+    grew = jnp.any(k_amax_new > k_amax)
+    k_scale = qlib.scale_from_amax(k_amax_new, bits)          # [H]
+
+    def requant(kq):
+        return qlib.pack_pool_planes(k_pool_new, k_amax_new, bits)
+
+    def incremental(kq):
+        S = real.shape[1]
+        k_int = qlib.quantize_with_scale(
+            kc, k_scale[None, None, :, None], bits)           # [B,S,H,D]
+        u = jnp.where(k_int < 0, k_int + (1 << bits), k_int).astype(jnp.uint32)
+        shifts = jnp.arange(bits - 1, -1, -1,
+                            dtype=jnp.uint32).reshape(1, bits, 1, 1)
+
+        def write_one(s, kq):
+            us = u[:, s]                                      # [B, H, D]
+            tokbits = ((us[:, None] >> shifts) & 1).astype(jnp.int32)
+            off = p_safe[:, s] % bs
+            byte, bitpos = off // 8, off % 8                  # [B]
+            row = jnp.where(ok[:, s], phys[:, s], nb)         # OOB => dropped
+            old = kq.at[row, :, byte].get(
+                mode="fill", fill_value=0).astype(jnp.int32)  # [B,bits,H,D]
+            lowmask = ((1 << bitpos) - 1)[:, None, None, None]
+            newbyte = ((old & lowmask)
+                       | (tokbits << bitpos[:, None, None, None]))
+            return kq.at[row, :, byte].set(newbyte.astype(jnp.uint8),
+                                           mode="drop")
+
+        return jax.lax.fori_loop(0, S, write_one, kq)
+
+    kq_new = jax.lax.cond(grew, requant, incremental, kq)
+    return dict(kq=kq_new, k_amax=k_amax_new, v_amax=v_amax_new)
+
+
+def _update_paged_cache(cache, k, v, positions):
+    """Write new token(s) into the paged block-pool cache; returns ONLY the
+    new cache — no logical view is materialized (callers that still need a
+    dense gather ask :func:`gather_paged_view` explicitly).
+
+    The K/V pool has no batch axis — every batch row (serving slot)
+    scatters through its row of the block table.  A token at absolute
+    position p lives in logical block p // bs at offset p % bs; the table
+    maps logical -> physical block id.  Writes never target physical block
+    0 (the null block backing unused table entries), and pad-sentinel
+    tokens are routed out of bounds and dropped — exactly like the
+    contiguous per-slot path."""
+    nb, bs = cache["pos"].shape
+    S = k.shape[1]
+    kc = k.astype(cache["k"].dtype)
+    vc = v.astype(cache["v"].dtype)
+    pc = positions.astype(jnp.int32)
+    B = kc.shape[0]
+    table = cache["table"]                                    # [B, MB]
+    MB = table.shape[1]
+    pc2 = jnp.broadcast_to(pc, (B, S))
+    real = pc2 != POS_SENTINEL
+    p_safe = jnp.where(real, pc2, 0)
+    logical = p_safe // bs
+    phys = jnp.take_along_axis(table, jnp.clip(logical, 0, MB - 1),
+                               axis=1)                        # [B, S]
+    ok = real & (logical < MB) & (phys > 0)
+    flat_idx = jnp.where(ok, phys * bs + p_safe % bs, nb * bs)
+    kf = cache["k"].reshape((nb * bs,) + cache["k"].shape[2:])
+    vf = cache["v"].reshape((nb * bs,) + cache["v"].shape[2:])
+    pf = cache["pos"].reshape(nb * bs)
+    fi = flat_idx.reshape(-1)
+    kf = kf.at[fi].set(kc.reshape((-1,) + kc.shape[2:]), mode="drop")
+    vf = vf.at[fi].set(vc.reshape((-1,) + vc.shape[2:]), mode="drop")
+    pf = pf.at[fi].set(pc2.reshape(-1), mode="drop")
+    new_len = cache["length"] + real.sum(axis=1, dtype=jnp.int32)
+    new = dict(cache, k=kf.reshape(cache["k"].shape),
+               v=vf.reshape(cache["v"].shape),
+               pos=pf.reshape(nb, bs), length=new_len)
+    if "k_amax" in cache:
+        new.update(_update_plane_pool(cache, kc, vc, real, phys, p_safe, ok,
+                                      new["k"]))
+    return new
+
+
+def gather_paged_view(cache, active=None):
+    """Gather each row's dense logical view ``[B, MB*bs]`` from the pool.
+
+    Only the first length[b] view slots were ever written by (or shared
+    into) row b, so slots past the fill level are forced invalid and
+    zeroed: a recycled physical block's stale K/V and positions are
+    unobservable, and zeroed tails keep the BitStopper per-tensor max-abs
+    quant scale identical to the contiguous layout.
+
+    ``active`` ([B] bool) gates the gather to rows that actually attend
+    this step: an inactive row's table is swapped for the null block, so
+    its gather touches a single hot page instead of pulling
+    ``max_blocks_per_req`` cold pages per layer.  (The fused decode path
+    skips this gather entirely — it walks physical pages in the kernel.)
+    """
+    nb, bs = cache["pos"].shape
+    table = cache["table"]
+    if active is not None:
+        table = jnp.where(active[:, None], table, 0)
+    B, MB = table.shape
+    Tv = MB * bs
+    kf = cache["k"].reshape((nb * bs,) + cache["k"].shape[2:])
+    vf = cache["v"].reshape((nb * bs,) + cache["v"].shape[2:])
+    pf = cache["pos"].reshape(nb * bs)
+    view = (table[..., None] * bs
+            + jnp.arange(bs, dtype=jnp.int32)).reshape(B, Tv)
+    k_view = kf[view]                                         # [B, Tv, H, D]
+    v_view = vf[view]
+    pos_view = pf[view]
+    valid = jnp.arange(Tv, dtype=jnp.int32)[None] < cache["length"][:, None]
+    pos_view = jnp.where(valid, pos_view, POS_SENTINEL)
+    k_view = jnp.where(valid[..., None, None], k_view, 0)
+    v_view = jnp.where(valid[..., None, None], v_view, 0)
+    return k_view, v_view, pos_view
+
+
+def _paged_cached_attention(q, cache, positions, cfg: AttnConfig):
+    """Attention against the (already updated) paged cache.
+
+    The Sq == 1 BitStopper decode goes straight at the pool handles
+    (block table + fill levels + bit-plane pool): the fused Pallas kernel
+    when ``cfg.fused_decode``, else the pure-JAX paged oracle — the
+    retained gather fallback with identical page-sequential semantics.
+    Everything else (dense impl, prefill chunks, planeless pools) gathers
+    the logical view, gated to active rows."""
+    B, S = q.shape[:2]
+    active = (positions != POS_SENTINEL).any(axis=1)
+    if (cfg.impl in ("bitstopper", "bitstopper_xla") and S == 1
+            and "k_amax" in cache):
+        qt = q[:, 0]                                          # [B, Hq, D]
+        q_pos = positions[:, 0]
+        # Gate to active rows: a slot still prefilling decodes at the pad
+        # sentinel (its output is discarded by the engine) — zeroing its
+        # fill level makes every page unreachable, so the kernel issues
+        # ZERO DMAs for it instead of walking its blocks per layer.
+        lengths = jnp.where(active, cache["length"], 0)
+        if cfg.fused_decode:
+            from repro.kernels.paged_decode import paged_bitstopper_decode
+            res = paged_bitstopper_decode(
+                qt, cache["kq"], cache["v"], cache["table"], lengths,
+                q_pos, cache["k_amax"], cache["v_amax"],
+                cfg=cfg.bitstopper, window=cfg.window, stats=False)
+        else:
+            res = besf_attention_decode_paged(
+                qt, cache["k"], cache["v"], cache["table"], lengths,
+                q_pos, cache["k_amax"], cache["v_amax"],
+                cfg=cfg.bitstopper, window=cfg.window)
+        return res.out[:, None].astype(q.dtype)               # [B,1,Hq,Dv]
+    k_view, v_view, pos_view = gather_paged_view(cache, active)
+    return _cached_attention(q, k_view, v_view, positions, pos_view, cfg)
 
 
 def _cached_attention(q, k_all, v_all, q_positions, k_positions,
@@ -642,6 +805,9 @@ def attention(
                 chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k,
             )
         new_cache = None
+    elif cache_is_paged(cache):
+        new_cache = _update_paged_cache(cache, k, v, positions)
+        out = _paged_cached_attention(q, new_cache, positions, cfg)
     else:
         k_all, v_all, k_pos, new_cache = _update_cache(cache, k, v, positions)
         out = _cached_attention(q, k_all, v_all, positions, k_pos, cfg)

@@ -68,6 +68,7 @@ class ModelConfig:
     # runtime
     attn_impl: str = "xla"
     bitstopper: BitStopperConfig = BitStopperConfig()
+    fused_decode: bool = False    # paged serving: Pallas paged-decode kernel
     dtype: str = "float32"        # activation dtype
     param_dtype: str = "float32"
     remat: str = "none"           # none | full | dots
@@ -100,6 +101,7 @@ class ModelConfig:
             window=self.window if local else None,
             impl=self.attn_impl, bitstopper=self.bitstopper,
             chunk_q=self.attn_chunk, chunk_k=self.attn_chunk,
+            fused_decode=self.fused_decode,
         )
 
     def mla_config(self):

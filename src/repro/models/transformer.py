@@ -243,7 +243,10 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
     batch-free K/V pool per layer, addressed through per-slot block tables
     ([batch, max_blocks_per_req] int32) — the serving engine owns block
     allocation and rewrites the ``table``/``length`` leaves between
-    forwards."""
+    forwards.  BitStopper layers additionally carry the incremental
+    bit-plane pool (``kq`` + ``k_amax``/``v_amax`` leaves) that the fused
+    paged decode kernel consumes; those leaves are maintained by the cache
+    write path and pass through the engine's table attachment untouched."""
     caches: dict[str, Any] = {}
     for si, (unit, reps) in enumerate(cfg.segments):
         def unit_cache(_):

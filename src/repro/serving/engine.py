@@ -70,6 +70,10 @@ class ServeConfig:
                                       # (default: 4*prefill_bucket; must be
                                       # a multiple of prefill_bucket)
     prefix_sharing: bool = True       # share full prompt-prefix blocks
+    fused_decode: bool | None = None  # BitStopper decode through the fused
+                                      # paged Pallas kernel (True), the
+                                      # pure-JAX gather fallback (False), or
+                                      # auto: kernel iff running on TPU
 
     def __post_init__(self):
         # Fail at construction with a nameable field, not deep inside jit.
@@ -98,6 +102,11 @@ class ServeConfig:
                     f"prefill_chunk ({self.prefill_chunk}) must be a "
                     f"multiple of prefill_bucket ({self.prefill_bucket}): "
                     f"chunks are bucket-padded jit shapes")
+        if self.fused_decode and self.page_size % 8:
+            raise ValueError(
+                f"fused_decode needs page_size % 8 == 0 (bit planes pack 8 "
+                f"tokens/byte along the page axis), got page_size="
+                f"{self.page_size}")
 
     # Resolved paged-layout sizes (None fields get max_len-derived defaults).
     def resolved_max_blocks(self) -> int:
@@ -470,13 +479,35 @@ class PagedEngine(_EngineCommon):
     to the contiguous engine: per-query attention sees the same KV set
     under the same mask, and masked view slots are exact zeros (padding
     with exact zeros/NEG_INF never perturbs f32 accumulation).  The
-    BitStopper *block* prefill path tiles per chunk, so its logits may
-    differ within LATS tolerance; the Sq=1 BESF decode path is exact."""
+    BitStopper paths track the contiguous engine within LATS/quantization
+    tolerance, not bit-for-bit: block prefill tiles per chunk, and paged
+    decode quantizes K/V under the pool-wide running scales (a shared
+    physical page must mean the same integers to every table mapping it)
+    where the contiguous engine re-derives per-row view scales.
+
+    **Fused paged decode.**  With a BitStopper impl (and ``page_size``
+    divisible by 8) the cache additionally maintains an incremental
+    bit-plane pool at write time, and the decode tick never gathers the
+    dense per-row KV view: it hands the pool + block tables + fill levels
+    straight to the paged BESF decode — the fused Pallas kernel
+    (``kernels/paged_decode.py``) when ``fused_decode`` resolves True,
+    else the pure-JAX paged oracle (``besf_attention_decode_paged``, the
+    retained gather fallback).  The two are bit-identical (tested), so
+    flipping the switch never changes served tokens."""
 
     def __init__(self, cfg: ModelConfig, params,
                  scfg: ServeConfig = ServeConfig()):
         _supported(cfg)
-        self.cfg = cfg
+        # Resolve the decode-kernel choice once: the fused paged Pallas
+        # kernel wants compiled Pallas (TPU); everywhere else the pure-JAX
+        # paged oracle (the gather fallback) is the fast interpreter-free
+        # path.  An explicit ServeConfig.fused_decode bool always wins —
+        # fused_decode=True off-TPU runs the kernel in interpret mode,
+        # which is how CI validates it.
+        fused = scfg.fused_decode
+        if fused is None:
+            fused = jax.default_backend() == "tpu" and scfg.page_size % 8 == 0
+        cfg = self.cfg = cfg.replace(fused_decode=bool(fused))
         self.params = params
         self.scfg = scfg
         self._dtype = (jnp.bfloat16 if scfg.cache_dtype == "bfloat16"
