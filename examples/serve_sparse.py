@@ -90,6 +90,41 @@ def main():
           f"V-blocks {rep['block_alive_fraction']*100:.1f}%, "
           f"survivors {rep['survivor_fraction']*100:.1f}%")
 
+    # ---- speculative decoding (--speculative ngram on the launcher) ----
+    # The n-gram prompt-lookup drafter proposes continuations of repeated
+    # patterns in the request's own context; one Sq=k+1 BitStopper verify
+    # forward scores the whole draft block (each query bit-identical to
+    # the Sq=1 decode at its position) and rejected tails roll back as a
+    # block-table operation.  Lossless: same tokens, fewer forwards — the
+    # win scales with how repetitive the text is, so the demo trace below
+    # repeats a motif.
+    motif = rng.integers(0, cfg.vocab, 6, dtype=np.int32)
+    rep_prompt = np.tile(motif, 6)
+    spec_reqs = [Request(prompt=rep_prompt.copy(), max_new_tokens=18)
+                 for _ in range(2)]
+    spec_engine = PagedEngine(
+        cfg, params, ServeConfig(max_len=96, max_slots=2, prefill_bucket=8,
+                                 page_size=8, prefill_chunk=16,
+                                 speculative="ngram", draft_k=4))
+    plain_reqs = [Request(prompt=rep_prompt.copy(), max_new_tokens=18)
+                  for _ in range(2)]
+    plain_engine = PagedEngine(
+        cfg, params, ServeConfig(max_len=96, max_slots=2, prefill_bucket=8,
+                                 page_size=8, prefill_chunk=16))
+    plain_engine.generate(plain_reqs, seed=0)
+    spec_engine.generate(spec_reqs, seed=0)
+    c, pc = spec_engine.counters, plain_engine.counters
+    acc = c["spec_accepted"] / max(1, c["spec_proposed"])
+    assert [r.generated for r in spec_reqs] == \
+        [r.generated for r in plain_reqs], "speculative must be lossless"
+    print(f"\nspeculative n-gram serving (repetitive trace): "
+          f"{c['decode_tokens']} tokens in {c['decode_steps']} ticks "
+          f"({c['decode_tokens']/max(1,c['decode_steps']):.2f} tokens/tick "
+          f"vs {pc['decode_tokens']/max(1,pc['decode_steps']):.2f} plain), "
+          f"acceptance {acc:.0%}, "
+          f"{c['spec_bailouts']} scale-growth bailouts "
+          f"— tokens identical to plain decode")
+
 
 if __name__ == "__main__":
     main()

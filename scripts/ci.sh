@@ -21,7 +21,27 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 # Fused paged-decode smoke: times gather vs paged vs the Pallas kernel
 # (interpret mode on CPU runners) and asserts the traffic model scales
 # with fill level + the paged path's wall-clock win — the decode kernel
-# can't rot on CPU-only CI.
+# can't rot on CPU-only CI.  (Timing asserts get one serial re-measure
+# before failing; CPU runners jitter under contention.)
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/decode_microbench.py --smoke --check \
         --out /tmp/BENCH_decode_smoke.json
+
+# Speculative-serve smoke: the n-gram drafter through BOTH verify paths
+# (fused Sq-tiled kernel in interpret mode, then the pure-JAX fallback) —
+# the draft-verify-rollback loop can't rot on CPU-only CI.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --requests 2 --slots 2 \
+        --min-prompt 4 --max-prompt 8 --new-tokens 3 --page-size 8 \
+        --speculative ngram --draft-k 3 --fused-decode on
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --requests 2 --slots 2 \
+        --min-prompt 4 --max-prompt 8 --new-tokens 3 --page-size 8 \
+        --speculative ngram --draft-k 3 --fused-decode off
+
+# Speculative-decode bench smoke: repetitive-text trace through the
+# trained bench LM; asserts losslessness, real n-gram acceptance, and an
+# acceptance-weighted tokens/sec + modeled-traffic win over plain decode.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/spec_decode_bench.py --smoke --check \
+        --out /tmp/BENCH_spec_smoke.json

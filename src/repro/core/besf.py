@@ -454,6 +454,70 @@ def besf_attention_decode_paged(
                              v_fetched=v_fetched)
 
 
+class PagedVerifyOutput(NamedTuple):
+    out: jax.Array          # [B, Sq, Hq, dv] attention output per draft query
+    rounds: jax.Array       # [B, Sq, n_blocks] int32 planes fetched per page
+    survivors: jax.Array    # [B, Sq, Hq, n_blocks*page_size] bool
+    v_fetched: jax.Array    # [B, Sq, n_blocks] bool — V page read per query
+
+
+@partial(jax.jit, static_argnames=("cfg", "window"))
+def besf_attention_verify_paged(
+    q: jax.Array,            # [B, Sq, Hq, d] — the draft block per slot
+    k_pool: jax.Array,       # [P, page_size, Hkv, d] f32 pool
+    v_pool: jax.Array,       # [P, page_size, Hkv, dv] f32 pool
+    table: jax.Array,        # [B, MB] int32 block tables (shared by queries)
+    lengths: jax.Array,      # [B, Sq] int32 per-QUERY fill levels
+    q_positions: jax.Array,  # [B, Sq] int32 absolute query positions
+    k_amax: jax.Array,       # [Hkv] pool-wide running max|K|
+    v_amax: jax.Array,       # [Hkv] pool-wide running max|V|
+    cfg: BitStopperConfig = BitStopperConfig(),
+    window: int | None = None,
+) -> PagedVerifyOutput:
+    """Multi-query paged BESF verify oracle (speculative decoding).
+
+    Scores an Sq-token draft block against a slot's paged KV in one pass.
+    Every (slot, query) pair is treated as an independent row of the Sq=1
+    paged decode: its own absolute position, its own fill level (causal
+    intra-draft masking — query i at position p sees cached tokens
+    ``t_pos <= p``, i.e. earlier draft tokens but not later ones), its own
+    per-(query, head) INT quantization and LATS thresholds.  The rows are
+    literally routed through :func:`_paged_decode_row`, so a real draft
+    query is **bit-identical** to the Sq=1 decode the non-speculative
+    engine would have run at that position — this is what makes
+    speculative acceptance lossless.
+
+    ``lengths`` is per query (normally ``q_positions + 1``); a padding
+    query (slot proposed fewer than Sq drafts) is disabled with length 0 —
+    every page is dead for it, it fetches nothing and costs nothing.
+
+    This oracle is the gather fallback AND the semantic model of the fused
+    Sq-tiled kernel ``repro/kernels/paged_verify.py``, which amortizes
+    each page's plane DMAs across the whole draft block (fetched once if
+    ANY query still needs them) while keeping per-query liveness for every
+    observable."""
+    B, Sq, Hq, d = q.shape
+    Hkv = k_pool.shape[2]
+    MB = table.shape[1]
+    flat_q = q.reshape(B * Sq, Hq, d)
+    prep = paged_decode_prep(flat_q, k_amax, v_amax, Hkv, cfg)
+    q_int, m_min, m_max, scale_total, alpha_radius, k_scale, v_scale = prep
+    # Each query row addresses the pool through its slot's table.
+    flat_table = jnp.broadcast_to(table[:, None], (B, Sq, MB))
+    out, rounds, survivors, v_fetched = jax.lax.map(
+        lambda xs: _paged_decode_row(
+            xs[0], xs[1], xs[2], xs[3], xs[4], xs[5], xs[6], xs[7],
+            k_pool, v_pool, k_scale, v_scale, cfg, window),
+        (q_int, jnp.moveaxis(m_min, 1, 0), jnp.moveaxis(m_max, 1, 0),
+         scale_total, alpha_radius, flat_table.reshape(B * Sq, MB),
+         lengths.reshape(B * Sq), q_positions.reshape(B * Sq)))
+    return PagedVerifyOutput(
+        out=out.reshape(B, Sq, Hq, -1),
+        rounds=rounds.reshape(B, Sq, MB),
+        survivors=survivors.reshape(B, Sq, Hq, -1),
+        v_fetched=v_fetched.reshape(B, Sq, MB))
+
+
 @partial(jax.jit, static_argnames=("cfg", "causal"))
 def besf_attention(
     q: jax.Array,

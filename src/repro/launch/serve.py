@@ -82,6 +82,15 @@ def main():
                     help="paged BitStopper decode through the fused Pallas "
                          "kernel (on), the pure-JAX gather fallback (off), "
                          "or kernel iff on TPU (auto)")
+    ap.add_argument("--speculative", default="off",
+                    choices=["off", "ngram", "draft"],
+                    help="paged engine: speculative decoding with the "
+                         "n-gram prompt-lookup self-drafter (ngram) or a "
+                         "draft transformer (draft; self-drafts with the "
+                         "target model).  Lossless: served tokens never "
+                         "change, only how many verify forwards they take")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="draft tokens proposed per speculative tick")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -96,7 +105,11 @@ def main():
         page_size=args.page_size, pool_blocks=args.pool_blocks,
         prefill_chunk=args.prefill_chunk,
         fused_decode={"auto": None, "on": True, "off": False}[
-            args.fused_decode])
+            args.fused_decode],
+        speculative=args.speculative, draft_k=args.draft_k)
+    if args.speculative != "off" and args.engine != "paged":
+        ap.error("--speculative requires --engine paged "
+                 "(block-table rollback)")
     engine = {"paged": PagedEngine,
               "continuous": ContinuousBatchingEngine,
               "static": StaticBucketEngine}[args.engine](cfg, params, scfg)
@@ -113,6 +126,16 @@ def main():
           f"({n_tok / dt:.1f} tok/s, engine={args.engine}, impl={args.impl})")
     if isinstance(engine, (PagedEngine, ContinuousBatchingEngine)):
         print(f"[serve] counters: {engine.counters}")
+        if isinstance(engine, PagedEngine) and args.speculative != "off":
+            c = engine.counters
+            acc = (c["spec_accepted"] / c["spec_proposed"]
+                   if c["spec_proposed"] else 0.0)
+            print(f"[serve] speculative({args.speculative}, k={args.draft_k}):"
+                  f" {c['spec_ticks']} verify ticks, "
+                  f"{c['spec_accepted']}/{c['spec_proposed']} drafts "
+                  f"accepted ({acc:.0%}), {c['spec_bailouts']} "
+                  f"scale-growth bailouts, "
+                  f"{c['decode_tokens']}/{c['decode_steps']} tokens/tick")
         if isinstance(engine, PagedEngine):
             print(f"[serve] kv pool: page_size={engine.layout.page_size} "
                   f"blocks={engine.layout.pool_blocks} "

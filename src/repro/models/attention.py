@@ -29,13 +29,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quantization as qlib
-from repro.core.besf import BitStopperConfig, besf_attention_decode_paged
+from repro.core.besf import BitStopperConfig, besf_attention_decode_paged, \
+    besf_attention_verify_paged
 from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.sharding.api import constrain
 
 NEG_INF = -1e30
 POS_SENTINEL = 2 ** 30
+
+# When a cache write grows a pool-wide running max-abs, overshoot the new
+# max by this factor.  An exact running max creeps for the whole serve
+# (P(new max per token) ~ 1/n), and every growth event is expensive: a
+# whole-pool plane requant on the fused path, and a lossless-but-wasted
+# bailout tick for speculative decoding.  With headroom, per-head growth
+# events are O(log_headroom(dynamic range)) over the entire serve, at the
+# cost of <= 25% coarser INT quantization right after a growth (still
+# ~11.7 effective bits of the 12).
+AMAX_HEADROOM = 1.25
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +67,11 @@ class AttnConfig:
     # kernel (kernels/paged_decode.py) instead of the pure-JAX gather
     # fallback.  Only consulted when the cache carries a bit-plane pool.
     fused_decode: bool = False
+    # Speculative serving: this forward is a draft-block VERIFY — multi-
+    # query BitStopper attention goes through the paged verify path (each
+    # query bit-identical to the Sq=1 decode at its position) instead of
+    # the block-prefill reference.
+    spec_verify: bool = False
 
 
 def init_attention(key, cfg: AttnConfig, dtype=jnp.float32):
@@ -529,8 +545,13 @@ def _update_plane_pool(cache, kc, vc, real, phys, p_safe, ok, k_pool_new):
     realm = real[..., None, None]
     kabs = jnp.abs(kc.astype(jnp.float32)) * realm
     vabs = jnp.abs(vc.astype(jnp.float32)) * realm
-    k_amax_new = jnp.maximum(k_amax, jnp.max(kabs, axis=(0, 1, 3)))
-    v_amax_new = jnp.maximum(v_amax, jnp.max(vabs, axis=(0, 1, 3)))
+    k_hi = jnp.max(kabs, axis=(0, 1, 3))
+    v_hi = jnp.max(vabs, axis=(0, 1, 3))
+    # Growth overshoots by AMAX_HEADROOM so the running max settles after
+    # a handful of events instead of creeping per token (each growth is a
+    # whole-pool requant and/or a speculative bailout — see the constant).
+    k_amax_new = jnp.where(k_hi > k_amax, k_hi * AMAX_HEADROOM, k_amax)
+    v_amax_new = jnp.where(v_hi > v_amax, v_hi * AMAX_HEADROOM, v_amax)
     if "kq" not in cache:      # fallback decode: scales only, no packing
         return dict(k_amax=k_amax_new, v_amax=v_amax_new)
     kq = cache["kq"]
@@ -662,6 +683,30 @@ def _paged_cached_attention(q, cache, positions, cfg: AttnConfig):
     the logical view, gated to active rows."""
     B, S = q.shape[:2]
     active = (positions != POS_SENTINEL).any(axis=1)
+    if (cfg.spec_verify and cfg.impl in ("bitstopper", "bitstopper_xla")
+            and "k_amax" in cache):
+        # Speculative verify: score the whole draft block in one paged
+        # multi-query BESF pass.  Every real query runs with its own fill
+        # level (its position + 1 — the batched cache write has already
+        # scattered the draft tokens, so query i sees exactly the KV set
+        # the Sq=1 decode at that position would see: causal intra-draft
+        # masking for free).  Padding queries (slot proposed fewer drafts,
+        # or a row still prefilling) get fill level 0 and touch no pages.
+        real = positions != POS_SENTINEL                      # [B, S]
+        q_pos = jnp.where(real, positions, 0)
+        lengths = jnp.where(real, q_pos + 1, 0)
+        if cfg.fused_decode:
+            from repro.kernels.paged_verify import paged_bitstopper_verify
+            res = paged_bitstopper_verify(
+                q, cache["kq"], cache["v"], cache["table"], lengths,
+                q_pos, cache["k_amax"], cache["v_amax"],
+                cfg=cfg.bitstopper, window=cfg.window, stats=False)
+        else:
+            res = besf_attention_verify_paged(
+                q, cache["k"], cache["v"], cache["table"], lengths,
+                q_pos, cache["k_amax"], cache["v_amax"],
+                cfg=cfg.bitstopper, window=cfg.window)
+        return res.out.astype(q.dtype)                        # [B,S,Hq,Dv]
     if (cfg.impl in ("bitstopper", "bitstopper_xla") and S == 1
             and "k_amax" in cache):
         qt = q[:, 0]                                          # [B, Hq, D]

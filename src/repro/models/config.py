@@ -69,6 +69,9 @@ class ModelConfig:
     attn_impl: str = "xla"
     bitstopper: BitStopperConfig = BitStopperConfig()
     fused_decode: bool = False    # paged serving: Pallas paged-decode kernel
+    spec_verify: bool = False     # speculative serving: route multi-query
+                                  # forwards through the paged BESF verify
+                                  # (draft-block scoring), not block prefill
     dtype: str = "float32"        # activation dtype
     param_dtype: str = "float32"
     remat: str = "none"           # none | full | dots
@@ -101,7 +104,7 @@ class ModelConfig:
             window=self.window if local else None,
             impl=self.attn_impl, bitstopper=self.bitstopper,
             chunk_q=self.attn_chunk, chunk_k=self.attn_chunk,
-            fused_decode=self.fused_decode,
+            fused_decode=self.fused_decode, spec_verify=self.spec_verify,
         )
 
     def mla_config(self):

@@ -9,3 +9,9 @@ from repro.serving.engine import (  # noqa: F401
     StaticBucketEngine,
 )
 from repro.serving.kv_pool import KVBlockPool  # noqa: F401
+from repro.serving.speculative import (  # noqa: F401
+    Drafter,
+    DraftModelDrafter,
+    NGramDrafter,
+    make_drafter,
+)

@@ -74,6 +74,11 @@ class ServeConfig:
                                       # paged Pallas kernel (True), the
                                       # pure-JAX gather fallback (False), or
                                       # auto: kernel iff running on TPU
+    # ---- speculative decoding (PagedEngine) ----
+    speculative: str = "off"          # "off" | "ngram" (prompt-lookup
+                                      # self-drafter) | "draft" (draft
+                                      # transformer; defaults to self-draft)
+    draft_k: int = 4                  # draft tokens proposed per tick
 
     def __post_init__(self):
         # Fail at construction with a nameable field, not deep inside jit.
@@ -107,6 +112,12 @@ class ServeConfig:
                 f"fused_decode needs page_size % 8 == 0 (bit planes pack 8 "
                 f"tokens/byte along the page axis), got page_size="
                 f"{self.page_size}")
+        if self.speculative not in ("off", "ngram", "draft"):
+            raise ValueError(
+                f"speculative must be off|ngram|draft, got "
+                f"{self.speculative!r}")
+        if self.draft_k < 1:
+            raise ValueError(f"draft_k must be >= 1, got {self.draft_k}")
 
     # Resolved paged-layout sizes (None fields get max_len-derived defaults).
     def resolved_max_blocks(self) -> int:
@@ -170,6 +181,38 @@ def _kv_bytes_per_token(cfg: ModelConfig, dtype) -> int:
     return total
 
 
+def _plane_bytes_per_token(cfg: ModelConfig) -> int:
+    """Bit-plane-pool bytes one cached token costs across BitStopper
+    layers when the fused decode kernel maintains the packed ``kq`` pool:
+    ``bits`` planes x 1 bit x Hkv x D per token."""
+    total = 0
+    for unit, reps in cfg.segments:
+        for spec in unit:
+            if spec.mixer not in ("attn", "local_attn"):
+                continue
+            acfg = cfg.attn_config(spec.mixer == "local_attn")
+            if (acfg.impl in ("bitstopper", "bitstopper_xla")
+                    and acfg.fused_decode):
+                total += (reps * acfg.bitstopper.bits
+                          * acfg.n_kv_heads * acfg.head_dim) // 8
+    return total
+
+
+def _amax_static_bytes(cfg: ModelConfig) -> int:
+    """Pool-wide running quant-scale state (``k_amax``/``v_amax``, f32 per
+    KV head) carried by every BitStopper layer's paged cache — static in
+    the pool size but part of the honest resident footprint."""
+    total = 0
+    for unit, reps in cfg.segments:
+        for spec in unit:
+            if spec.mixer not in ("attn", "local_attn"):
+                continue
+            acfg = cfg.attn_config(spec.mixer == "local_attn")
+            if acfg.impl in ("bitstopper", "bitstopper_xla"):
+                total += reps * 2 * acfg.n_kv_heads * 4
+    return total
+
+
 def _kv_bytes_contiguous(cfg: ModelConfig, scfg: ServeConfig, dtype) -> int:
     """Resident bytes of the contiguous per-slot cache: max_len rows per
     slot per layer, except sliding-window layers whose ring buffers only
@@ -187,6 +230,23 @@ def _kv_bytes_contiguous(cfg: ModelConfig, scfg: ServeConfig, dtype) -> int:
             total += (reps * rows * 2 * acfg.n_kv_heads * acfg.head_dim
                       * itemsize)
     return total * scfg.max_slots
+
+
+def _amax_leaves(caches) -> list:
+    """Every ``k_amax``/``v_amax`` leaf of a paged cache pytree, in a
+    deterministic traversal order (used to detect pool-wide quant-scale
+    growth across a speculative draft-block write)."""
+    out = []
+    if isinstance(caches, dict):
+        for key in sorted(caches):
+            if key in ("k_amax", "v_amax"):
+                out.append(caches[key])
+            else:
+                out.extend(_amax_leaves(caches[key]))
+    elif isinstance(caches, (list, tuple)):
+        for c in caches:
+            out.extend(_amax_leaves(c))
+    return out
 
 
 def _attach_tables(caches, table: np.ndarray, length: np.ndarray):
@@ -290,6 +350,10 @@ class ContinuousBatchingEngine(_EngineCommon):
     def __init__(self, cfg: ModelConfig, params,
                  scfg: ServeConfig = ServeConfig()):
         _supported(cfg)
+        if scfg.speculative != "off":
+            raise ValueError(
+                "speculative decoding needs the paged engine (block-table "
+                "rollback); use PagedEngine")
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
@@ -493,10 +557,33 @@ class PagedEngine(_EngineCommon):
     (``kernels/paged_decode.py``) when ``fused_decode`` resolves True,
     else the pure-JAX paged oracle (``besf_attention_decode_paged``, the
     retained gather fallback).  The two are bit-identical (tested), so
-    flipping the switch never changes served tokens."""
+    flipping the switch never changes served tokens.
+
+    **Speculative decoding** (``ServeConfig.speculative``).  Each decode
+    tick a drafter proposes up to ``draft_k`` tokens per slot
+    (``serving/speculative.py``); the tick then runs ONE Sq=k+1 verify
+    forward — [last sampled token, draft 1..k] written into the paged
+    cache in a batched scatter, BitStopper attention through the
+    multi-query paged verify (each query bit-identical to the Sq=1 decode
+    at its position; fused Sq-tiled kernel or oracle per ``fused_decode``)
+    — and accepts the longest draft prefix matching the target's own
+    greedy/seeded samples.  Acceptance is **lossless**: token n is always
+    sampled from logits bit-identical to non-speculative decode under the
+    same ``fold_in(fold_in(seed, rid), n)`` key, so traces never change,
+    only how many forwards they take.  The rejected tail is a *rollback*,
+    not a rewrite: fill levels retreat (stale pool slots are unobservable
+    behind the fill-level masks) and draft-tail blocks return to the pool
+    with their reservation units restored (``KVBlockPool.rollback``) —
+    never past the prompt/shared-prefix boundary, which lives below the
+    decode region by construction.  A write that grows the pool-wide quant
+    scale mid-draft-block would make earlier queries see a "future" scale;
+    the engine detects scale growth on the device, discards the whole
+    speculative step (immutable-cache snapshot restore) and replays it as
+    a plain decode tick — rare after warmup, and the replay is the
+    non-speculative path itself, so losslessness is unconditional."""
 
     def __init__(self, cfg: ModelConfig, params,
-                 scfg: ServeConfig = ServeConfig()):
+                 scfg: ServeConfig = ServeConfig(), drafter=None):
         _supported(cfg)
         # Resolve the decode-kernel choice once: the fused paged Pallas
         # kernel wants compiled Pallas (TPU); everywhere else the pure-JAX
@@ -537,6 +624,42 @@ class PagedEngine(_EngineCommon):
         self._prefill = jax.jit(prefill_fn)
         self._decode = jax.jit(decode_fn)
 
+        # Speculative decoding: drafter + the Sq=k+1 verify forward.  The
+        # verify closes over spec_verify=True so multi-query BitStopper
+        # attention routes through the paged verify (NOT block prefill).
+        self._drafter = None
+        self._spec_k = scfg.draft_k
+        if scfg.speculative != "off":
+            if (cfg.attn_impl in ("bitstopper", "bitstopper_xla")
+                    and scfg.page_size % 8):
+                raise ValueError(
+                    "speculative BitStopper serving needs page_size % 8 == "
+                    "0 (the paged verify shares the pool-wide quant state; "
+                    f"got page_size={scfg.page_size})")
+            from repro.serving.speculative import make_drafter
+            self._drafter = drafter if drafter is not None else \
+                make_drafter(scfg.speculative, cfg, params)
+            cfg_v = cfg.replace(spec_verify=True)
+
+            def verify_fn(params, tokens, caches, positions):
+                logits, new_caches, _ = T.forward(
+                    params, tokens, cfg_v, caches=caches,
+                    positions=positions)
+                # Scale-growth probe: did this draft-block write grow any
+                # layer's pool-wide running max-abs?  (Non-BitStopper
+                # impls carry no amax leaves: grew is constant False.)
+                old_amax = _amax_leaves(caches)
+                new_amax = _amax_leaves(new_caches)
+                grew = jnp.zeros((), bool)
+                for o, n in zip(old_amax, new_amax):
+                    grew |= jnp.any(n > o)
+                return logits, new_caches, grew
+
+            self._verify = jax.jit(verify_fn)
+        elif drafter is not None:
+            raise ValueError(
+                "drafter passed but ServeConfig.speculative == 'off'")
+
         B = scfg.max_slots
         self.caches = T.init_caches(cfg, B, scfg.max_len, self._dtype,
                                     paged=self.layout)
@@ -552,7 +675,9 @@ class PagedEngine(_EngineCommon):
         self.counters = {"prefill_tokens": 0, "prefix_hit_tokens": 0,
                          "prefill_chunks": 0, "decode_tokens": 0,
                          "decode_steps": 0, "decode_slot_steps": 0,
-                         "requests_finished": 0}
+                         "decode_kv_tokens": 0, "requests_finished": 0,
+                         "spec_ticks": 0, "spec_proposed": 0,
+                         "spec_accepted": 0, "spec_bailouts": 0}
 
     # ------------------------------------------------------------------
     # capacity accounting
@@ -567,11 +692,21 @@ class PagedEngine(_EngineCommon):
     def kv_bytes_resident(self, peak: bool = True) -> int:
         """KV memory actually backed by live blocks (peak over the run by
         default) — the paged analogue of the contiguous engine's static
-        ``max_slots * max_len`` reservation."""
+        ``max_slots * max_len`` reservation.
+
+        BitStopper caches are charged for everything a live block really
+        carries: the f32 K/V rows AND, when the fused decode kernel is on,
+        the packed bit-plane pool (``kq``: bits x Hkv x D bits per token —
+        the plane-pool overhead the fused path trades for its traffic
+        win), plus the tiny static ``k_amax``/``v_amax`` scale state."""
         blocks = (self.pool.peak_live_blocks if peak
                   else self.pool.live_blocks())
-        return blocks * self._page * _kv_bytes_per_token(self.cfg,
-                                                         self._dtype)
+        per_tok = _kv_bytes_per_token(self.cfg, self._dtype)
+        extra = 0
+        if self._page % 8 == 0:
+            per_tok += _plane_bytes_per_token(self.cfg)
+            extra = _amax_static_bytes(self.cfg)
+        return blocks * self._page * per_tok + extra
 
     def kv_bytes_contiguous_equiv(self) -> int:
         """What a contiguous per-slot cache of the same ServeConfig would
@@ -720,7 +855,8 @@ class PagedEngine(_EngineCommon):
 
     def step(self) -> bool:
         """One scheduler tick: admit, one prefill chunk, one decode step
-        over every prefilled slot.  Returns False when there is no work."""
+        (plain or speculative) over every prefilled slot.  Returns False
+        when there is no work."""
         self._admit()
         self._prefill_tick()
         active = [i for i, st in enumerate(self.slots)
@@ -729,18 +865,33 @@ class PagedEngine(_EngineCommon):
             return bool(self.queue
                         or any(st is not None for st in self.slots))
         self._step += 1
+        if self._drafter is not None:
+            self._spec_decode_tick(active)
+        else:
+            self._plain_decode_tick(active)
+        return True
+
+    def _claim_block(self, slot: int, j: int) -> int:
+        """Materialize the physical block behind table entry j out of the
+        slot's admission reservation (guaranteed claimable)."""
+        st = self.slots[slot]
+        if st.blocks_reserved <= 0:
+            raise RuntimeError(
+                "paged scheduler invariant violated: slot "
+                f"{slot} needs a decode block but has no reservation")
+        bid = self.pool.alloc(reserved=True)
+        st.blocks_reserved -= 1
+        self.table[slot, j] = bid
+        return bid
+
+    def _plain_decode_tick(self, active: list[int]) -> None:
+        """One non-speculative decode step over every prefilled slot."""
         # Materialize the block behind each row's next write position; the
         # admission reservation guarantees one is always claimable.
         for i in active:
             j = int(self.lengths[i]) // self._page
             if self.table[i, j] == 0:
-                st = self.slots[i]
-                if st.blocks_reserved <= 0:
-                    raise RuntimeError(
-                        "paged scheduler invariant violated: slot "
-                        f"{i} needs a decode block but has no reservation")
-                self.table[i, j] = self.pool.alloc(reserved=True)
-                st.blocks_reserved -= 1
+                self._claim_block(i, j)
         # Rows still prefilling (or empty) decode at the pad sentinel: their
         # q/k/v are zeroed and the cache write is dropped.
         positions = np.full((len(self.slots), 1), POS_SENTINEL, np.int32)
@@ -756,6 +907,8 @@ class PagedEngine(_EngineCommon):
         toks = self._sample_rows(logits, rids, counts)
         self.counters["decode_steps"] += 1
         self.counters["decode_slot_steps"] += len(self.slots)
+        self.counters["decode_kv_tokens"] += sum(
+            int(self.lengths[i]) + 1 for i in active)
         for i in active:
             req = self.slots[i].req
             req.generated.append(int(toks[i]))
@@ -763,7 +916,134 @@ class PagedEngine(_EngineCommon):
             self.lengths[i] += 1
             self.last_token[i] = toks[i]
             self._maybe_evict(i, int(toks[i]))
-        return True
+
+    # ------------------------------------------------------------------
+    # speculative decode: propose -> one Sq=k+1 verify -> accept/rollback
+    # ------------------------------------------------------------------
+
+    def _spec_decode_tick(self, active: list[int]) -> None:
+        """One speculative decode step: draft, verify, accept, roll back.
+
+        Losslessness argument, in scheduler terms: query i of slot b runs
+        at absolute position ``lengths[b] + i`` against exactly the KV set
+        (and quant scales — see the growth bailout) the non-speculative
+        engine would have at that point, and its token is sampled under
+        the same (seed, rid, token-index) key.  Token i+1 is only kept if
+        draft i+1 *equals* the token the target just sampled, i.e. iff the
+        non-speculative engine would have fed the same input — so the
+        first divergence truncates acceptance and everything after it is
+        rolled back untouched."""
+        k = self._spec_k
+        drafts: dict[int, list[int]] = {}
+        for i in active:
+            req = self.slots[i].req
+            # A draft beyond the request's remaining budget could out-run
+            # the admission reservation; cap so written positions stay
+            # within the non-speculative worst case.
+            cap = min(k, req.max_new_tokens - len(req.generated) - 1)
+            if cap <= 0:
+                drafts[i] = []
+                continue
+            ctx = np.concatenate([np.asarray(req.prompt, np.int32),
+                                  np.asarray(req.generated, np.int32)])
+            drafts[i] = [int(t) for t in self._drafter.propose(ctx, cap)][:cap]
+        if not any(drafts[i] for i in active):
+            # Nothing proposed anywhere (cold n-gram cache, budget tails):
+            # a verify pass would just be a slow plain tick.
+            self._plain_decode_tick(active)
+            return
+        self.counters["spec_ticks"] += 1
+
+        # Snapshot for the growth bailout: jax caches are immutable, so
+        # keeping the references IS the device-state snapshot; the host
+        # table is copied before speculative block materialization.
+        caches_snap = self.caches
+        table_snap = self.table.copy()
+
+        Sq = k + 1
+        B = len(self.slots)
+        tokens = np.zeros((B, Sq), np.int32)
+        positions = np.full((B, Sq), POS_SENTINEL, np.int32)
+        new_blocks: dict[int, list[tuple[int, int]]] = {}
+        for i in active:
+            row = [int(self.last_token[i])] + drafts[i]
+            base = int(self.lengths[i])
+            tokens[i, :len(row)] = row
+            positions[i, :len(row)] = base + np.arange(len(row))
+            new_blocks[i] = []
+            for j in range(base // self._page,
+                           (base + len(row) - 1) // self._page + 1):
+                if self.table[i, j] == 0:
+                    new_blocks[i].append((j, self._claim_block(i, j)))
+
+        caches = _attach_tables(self.caches, self.table, self.lengths)
+        logits, new_caches, grew = self._verify(
+            self.params, jnp.asarray(tokens), caches,
+            jnp.asarray(positions))
+
+        if bool(grew):
+            # A draft-block token grew a pool-wide quant scale: earlier
+            # queries were scored under a scale the non-speculative engine
+            # would not have had yet.  Discard the whole speculative step
+            # and replay it plain (which handles growth natively).
+            self.caches = caches_snap
+            self.table = table_snap
+            for i in active:
+                if new_blocks[i]:
+                    self.pool.rollback([bid for _, bid in new_blocks[i]])
+                    self.slots[i].blocks_reserved += len(new_blocks[i])
+            self.counters["spec_bailouts"] += 1
+            self._plain_decode_tick(active)
+            return
+
+        self.caches = new_caches
+        # Sample every query position under its non-speculative key:
+        # row (i, x) uses token index len(generated_i) + x.
+        rids = np.zeros((B, Sq), np.int32)
+        counts = np.zeros((B, Sq), np.int32)
+        for i in active:
+            rids[i, :] = self.slots[i].req.rid
+            counts[i, :] = len(self.slots[i].req.generated) + np.arange(Sq)
+        toks = self._sample_rows(logits.reshape(B * Sq, -1),
+                                 rids.reshape(-1),
+                                 counts.reshape(-1)).reshape(B, Sq)
+        self.counters["decode_steps"] += 1
+        self.counters["decode_slot_steps"] += len(self.slots)
+        self.counters["decode_kv_tokens"] += sum(
+            int(self.lengths[i]) + 1 + len(drafts[i]) for i in active)
+
+        for i in active:
+            st = self.slots[i]
+            req = st.req
+            d = drafts[i]
+            t = toks[i]
+            a = 0
+            while a < len(d) and d[a] == int(t[a]):
+                a += 1
+            emitted = [int(t[x]) for x in range(a + 1)]
+            if self.scfg.eos_id is not None and self.scfg.eos_id in emitted:
+                emitted = emitted[:emitted.index(self.scfg.eos_id) + 1]
+            emitted = emitted[:req.max_new_tokens - len(req.generated)]
+            req.generated.extend(emitted)
+            self.counters["decode_tokens"] += len(emitted)
+            self.counters["spec_proposed"] += len(d)
+            self.counters["spec_accepted"] += a
+            self.lengths[i] += len(emitted)
+            self.last_token[i] = emitted[-1]
+            # Roll back the rejected tail: blocks whose every slot is past
+            # the new fill level hold no live token — return them to the
+            # pool and restore the reservation they were claimed from.
+            # Only this tick's allocations can sit past the fill level,
+            # so prompt/prefix-shared blocks are structurally out of reach
+            # (kv_pool.rollback additionally enforces it).
+            last_j = (int(self.lengths[i]) - 1) // self._page
+            stale = [(j, bid) for j, bid in new_blocks[i] if j > last_j]
+            if stale:
+                for j, _ in stale:
+                    self.table[i, j] = 0
+                self.pool.rollback([bid for _, bid in stale])
+                st.blocks_reserved += len(stale)
+            self._maybe_evict(i, emitted[-1])
 
 
 # Public name: the paged continuous batcher IS the serving engine.

@@ -138,6 +138,42 @@ class KVBlockPool:
                 del self._key_of[bid]
             self._free.append(bid)
 
+    def rollback(self, bids: list[int]) -> None:
+        """Return speculative tail blocks to the pool, atomically restoring
+        the reservation they were claimed from.
+
+        Speculative decoding materializes blocks for draft-token positions
+        out of the request's admission reservation; when the drafts are
+        rejected, those blocks hold no live token and must come back — with
+        the reservation units re-created so the request's worst-case
+        guarantee (mid-decode allocation can never fail) still holds.
+
+        Rolled-back blocks must be **exclusively owned, unregistered**
+        scratch: a refcount > 1 block is mapped by another request's table
+        and a registered block is a published prompt prefix — rolling
+        either back would yank KV out from under a reader (the engine never
+        rolls past the prompt/shared boundary; this guards the invariant).
+        """
+        # Validate every bid BEFORE mutating anything: a guard firing
+        # mid-loop must not leave the pool half-rolled-back (freed blocks
+        # whose reservation units were never restored).
+        for bid in bids:
+            if self._ref.get(bid) != 1:
+                raise RuntimeError(
+                    f"rollback of block {bid} with refcount "
+                    f"{self._ref.get(bid)}: only exclusively-owned "
+                    f"speculative tail blocks may roll back")
+            if bid in self._key_of:
+                raise RuntimeError(
+                    f"rollback of registered prefix block {bid}: "
+                    f"shared-prefix blocks never roll back")
+        for bid in bids:
+            del self._ref[bid]
+            self._free.append(bid)
+        # Freed blocks are available again by construction, so re-reserving
+        # them cannot fail.
+        self._reserved += len(bids)
+
     # ------------------------------------------------------------------
     # prefix sharing
     # ------------------------------------------------------------------

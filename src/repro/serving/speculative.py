@@ -1,0 +1,138 @@
+"""Speculative-decoding drafters: who proposes the draft tokens.
+
+The verify half lives in :class:`repro.serving.engine.PagedEngine` (one
+Sq=k+1 BitStopper verify forward per scheduler tick, longest-matching-
+prefix acceptance, paged block-table rollback of the rejected tail) and is
+**lossless**: served traces are bit-identical to non-speculative serving
+under the same seed no matter which drafter runs or how bad its guesses
+are.  Drafters therefore only trade proposal *quality* (acceptance rate)
+against proposal *cost*:
+
+* :class:`NGramDrafter` — prompt-lookup / self-speculation: continue the
+  longest recent n-gram match found earlier in the request's own context
+  (prompt + generated so far).  Needs no extra weights and costs a host-
+  side scan; it shines on repetitive text (code, templated prose, long
+  copies) where acceptance approaches 100%.
+* :class:`DraftModelDrafter` — a small draft transformer sharing the
+  target's tokenizer/vocab greedily proposes k tokens.  This repro keeps
+  it a semantic model: cache-free bucket-padded forwards per draft token
+  (no draft KV cache), so it is the *acceptance-rate* reference, not a
+  latency win on its own.  Passing the target model itself ("self-draft")
+  gives acceptance 1.0 under greedy sampling — the degenerate case the
+  verify-loop tests pin down.
+
+A drafter is anything with ``propose(context, k) -> list[int]`` returning
+at most k token ids; returning fewer (or none) is always safe — the engine
+pads the draft block and, with zero drafts across the batch, falls back to
+a plain decode tick.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@runtime_checkable
+class Drafter(Protocol):
+    def propose(self, context: np.ndarray, k: int) -> list[int]:
+        """Given the request's full context (prompt + generated, the last
+        entry being the token about to be fed to the target), return up to
+        ``k`` proposed continuation tokens."""
+        ...
+
+
+class NGramDrafter:
+    """Prompt-lookup self-drafter (no weights).
+
+    Finds the longest suffix n-gram of the context (n from ``max_n`` down
+    to ``min_n``) that occurred earlier in the context, and proposes the
+    tokens that followed its most recent earlier occurrence.
+    """
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        if not 1 <= min_n <= max_n:
+            raise ValueError(f"need 1 <= min_n <= max_n, got "
+                             f"({min_n}, {max_n})")
+        self.max_n = max_n
+        self.min_n = min_n
+
+    def propose(self, context: np.ndarray, k: int) -> list[int]:
+        ctx = np.asarray(context)
+        L = len(ctx)
+        for n in range(min(self.max_n, L - 1), self.min_n - 1, -1):
+            pat = ctx[L - n:]
+            # Most recent earlier occurrence with at least one follower
+            # (the suffix itself, ending at L, is excluded by the range).
+            for s in range(L - n - 1, -1, -1):
+                if np.array_equal(ctx[s:s + n], pat):
+                    return [int(t) for t in ctx[s + n:s + n + k]]
+        return []
+
+
+class DraftModelDrafter:
+    """Greedy draft-transformer proposals (vocab shared with the target).
+
+    Runs the draft model cache-free over the (bucket-padded) context once
+    per proposed token — a deliberate semantic model that keeps the
+    drafter stateless across the engine's admission/eviction/rollback
+    machinery.  ``max_context`` truncates very long contexts so proposal
+    cost stays bounded; bucketing keeps the jit cache small.
+    """
+
+    def __init__(self, cfg, params, max_context: int = 256,
+                 bucket: int = 32):
+        from repro.models import transformer as T
+        self.cfg = cfg
+        self.params = params
+        self.max_context = max_context
+        self.bucket = bucket
+
+        def fwd(params, tokens, last_idx):
+            logits, _, _ = T.forward(params, tokens, cfg)
+            last = jax.lax.dynamic_slice_in_dim(logits, last_idx, 1, axis=1)
+            return jnp.argmax(last[0, 0], axis=-1)
+
+        self._fwd = jax.jit(fwd)
+
+    def propose(self, context: np.ndarray, k: int) -> list[int]:
+        toks = [int(t) for t in np.asarray(context)[-self.max_context:]]
+        out: list[int] = []
+        for _ in range(k):
+            L = len(toks)
+            Sp = -(-L // self.bucket) * self.bucket
+            padded = np.zeros((1, Sp), np.int32)
+            padded[0, :L] = toks
+            # Trailing zero-pad is causally invisible to position L-1.
+            t = int(self._fwd(self.params, jnp.asarray(padded),
+                              jnp.asarray(L - 1, jnp.int32)))
+            out.append(t)
+            toks.append(t)
+            if len(toks) > self.max_context:
+                toks = toks[-self.max_context:]
+        return out
+
+
+def make_drafter(kind: str, cfg, params, draft_cfg=None, draft_params=None):
+    """Resolve ``ServeConfig.speculative`` to a drafter instance.
+
+    ``"ngram"`` needs no weights.  ``"draft"`` uses the provided draft
+    model, falling back to self-drafting with the target model (always
+    available, acceptance 1.0 under greedy — the plumbing-proof default).
+    """
+    if kind == "ngram":
+        return NGramDrafter()
+    if kind == "draft":
+        if (draft_cfg is None) != (draft_params is None):
+            raise ValueError("draft_cfg and draft_params come together")
+        if draft_cfg is None:
+            draft_cfg, draft_params = cfg, params
+        if draft_cfg.vocab != cfg.vocab:
+            raise ValueError(
+                f"draft model must share the target vocab "
+                f"({draft_cfg.vocab} != {cfg.vocab})")
+        return DraftModelDrafter(draft_cfg, draft_params)
+    raise ValueError(f"unknown drafter kind {kind!r} (ngram|draft)")

@@ -98,6 +98,66 @@ def test_peak_tracking():
     assert pool.peak_live_blocks == 3
 
 
+def test_rollback_returns_blocks_and_restores_reservation():
+    """Speculative tail rollback: blocks return to the free list, their
+    refcount entries vanish, and the reservation units they were claimed
+    from are re-created atomically."""
+    pool = KVBlockPool(4, 8)                 # capacity 3, fully reserved
+    pool.reserve(3)
+    spec = [pool.alloc(reserved=True) for _ in range(3)]
+    assert pool.available() == 0 and pool.live_blocks() == 3
+    pool.rollback(spec[1:])
+    # two blocks free again, two reservation units back outstanding
+    assert pool.live_blocks() == 1
+    assert pool.available() == 0             # freed capacity re-reserved
+    # rolled-back blocks are allocatable again under the reservation
+    again = [pool.alloc(reserved=True) for _ in range(2)]
+    assert set(again) == set(spec[1:])
+    for b in [spec[0]] + again:
+        pool.decref(b)
+    assert pool.available() == pool.capacity
+
+
+def test_rollback_refuses_shared_blocks():
+    """A refcount > 1 block is mapped by another table; a registered block
+    is a published prompt prefix — rolling either back would cross the
+    prefix-shared boundary, so the pool refuses."""
+    pool = KVBlockPool(5, 8)
+    shared = pool.alloc()
+    pool.incref(shared)
+    with pytest.raises(RuntimeError):
+        pool.rollback([shared])
+    reg = pool.alloc()
+    pool.register((1, 2), reg)
+    with pytest.raises(RuntimeError):
+        pool.rollback([reg])
+    # both untouched
+    assert pool.live_blocks() == 2
+    assert pool.lookup((1, 2)) == reg
+    pool.decref(reg)                         # drop the lookup ref
+    # Atomicity: a mixed list with one bad bid mutates NOTHING — the good
+    # scratch block stays live and no reservation unit appears.
+    scratch = pool.alloc()
+    avail = pool.available()
+    with pytest.raises(RuntimeError):
+        pool.rollback([scratch, shared])
+    assert pool._ref[scratch] == 1
+    assert pool.available() == avail
+
+
+def test_rollback_then_realloc_is_clean():
+    """A rolled-back block re-enters circulation like any freed block:
+    fresh refcount 1, no registry residue."""
+    pool = KVBlockPool(2, 8)                 # single allocatable block
+    pool.reserve(1)
+    b = pool.alloc(reserved=True)
+    pool.rollback([b])
+    c = pool.alloc(reserved=True)
+    assert c == b
+    pool.decref(c)
+    assert pool.available() == pool.capacity
+
+
 def test_constructor_validation():
     with pytest.raises(ValueError):
         KVBlockPool(1, 8)

@@ -406,6 +406,41 @@ def test_fused_decode_matches_fallback_shared_prefix_and_recycled(model):
         assert len(toks) == 4
 
 
+def test_kv_bytes_resident_counts_plane_pool(model):
+    """Honest memory accounting: with the fused kernel on, every live
+    block also carries its packed bit-plane pool (bits x Hkv x D bits per
+    token) plus the static amax scale state — resident bytes must reflect
+    it, not just the f32 K/V rows."""
+    cfg, params = model
+    cfgb = cfg.replace(attn_impl="bitstopper_xla",
+                       bitstopper=BitStopperConfig(alpha=0.8))
+    engines = {}
+    for fused in (True, False):
+        eng = _paged(cfgb, params, fused_decode=fused)
+        reqs = _reqs(cfgb, (9, 14), max_new=4)
+        eng.generate(reqs, seed=0)
+        engines[fused] = eng
+    assert (engines[True].pool.peak_live_blocks
+            == engines[False].pool.peak_live_blocks)
+    with_planes = engines[True].kv_bytes_resident()
+    without = engines[False].kv_bytes_resident()
+    assert with_planes > without
+    # the gap is exactly the plane pool: bits/8 bytes per (token, kv-head,
+    # dim) per BitStopper layer, over peak live tokens
+    acfg = cfgb.attn_config(False)
+    per_tok_planes = (cfgb.n_layers * acfg.bitstopper.bits
+                      * acfg.n_kv_heads * acfg.head_dim) // 8
+    blocks = engines[True].pool.peak_live_blocks
+    page = engines[True].scfg.page_size
+    assert with_planes - without == blocks * page * per_tok_planes
+    # amax scale state is charged on both bitstopper engines
+    dense = _paged(cfg, params)
+    dense.generate(_reqs(cfg, (9, 14), max_new=4), seed=0)
+    assert dense.pool.peak_live_blocks == blocks
+    amax_bytes = cfgb.n_layers * 2 * acfg.n_kv_heads * 4
+    assert without - dense.kv_bytes_resident() == amax_bytes
+
+
 def test_fused_decode_page_size_validation():
     with pytest.raises(ValueError):
         ServeConfig(fused_decode=True, page_size=12)
