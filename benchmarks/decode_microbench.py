@@ -23,7 +23,8 @@ benchmark quantifies both effects:
     PYTHONPATH=src python benchmarks/decode_microbench.py
     PYTHONPATH=src python benchmarks/decode_microbench.py --smoke --check
 
-Writes ``results/BENCH_decode.json``.
+Writes ``results/BENCH_decode.json`` — field-by-field reference (and what
+the ``--smoke --check`` CI gate asserts): ``docs/benchmarks.md``.
 """
 
 from __future__ import annotations

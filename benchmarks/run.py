@@ -2,6 +2,8 @@
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only fig12
+
+Artifact/field reference for every results/ output: ``docs/benchmarks.md``.
 """
 
 from __future__ import annotations

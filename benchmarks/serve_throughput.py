@@ -1,7 +1,7 @@
 """Serving throughput: paged vs contiguous continuous batching vs static
-length bucketing.
+length bucketing, plus oversubscribed admission vs worst-case reservation.
 
-Two traces:
+Three traces (field-by-field output reference: ``docs/benchmarks.md``):
 
 * **mixed** — prompt lengths cycle, generation lengths vary: the workload
   where static bucketing loses (it pads every batch to the bucket length,
@@ -11,15 +11,32 @@ Two traces:
   table (refcount++, prefill skipped) so the common prefix is resident
   ONCE; the report includes peak KV bytes resident next to tokens/sec,
   paged-shared vs paged-unshared vs the contiguous reservation.
+* **long-tail oversubscribed** — mixed ``max_new_tokens`` with a heavy
+  tail, served through a pool too small for the worst-case reservations
+  of all admitted requests.  Worst-case admission (``reserved``)
+  serializes the queue and idles the pool; ``oversubscribed`` admission
+  reserves prompt-sized budgets, preempts a victim when the pool runs dry
+  mid-decode, and resumes it losslessly — same tokens (asserted against
+  an ample-pool ``uncontended`` run), fewer scheduler ticks, higher
+  utilization.
+
+``--check`` turns the claims into assertions (the CI gate): the
+oversubscribed arm must observe >= 1 preemption, emit token streams
+bit-identical to the uncontended run, and spend fewer decode ticks than
+worst-case reservation — all scheduling-level counters, deterministic on
+any host.  ``--out`` writes every trace's rows to
+``results/BENCH_serve.json``.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py
     PYTHONPATH=src python benchmarks/serve_throughput.py --impl bitstopper_xla
-    PYTHONPATH=src python benchmarks/serve_throughput.py --smoke
+    PYTHONPATH=src python benchmarks/serve_throughput.py --smoke --check
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -57,12 +74,17 @@ def make_trace(rng, vocab, n_requests, lens, new_lo, new_hi,
     return reqs
 
 
-def _timed(engine, trace, seed, publish=None):
+def _timed(engine, trace, seed, publish=None, warm_full=False):
     # Warm-up on a full same-shaped copy of the trace (short generations):
     # every jit shape the engine will hit — per-bucket prefill and decode
     # batch shapes included — compiles outside the timed region.  The jit
     # caches live on the engine instance, so the SAME instance is measured.
-    warm = [Request(prompt=r.prompt.copy(), max_new_tokens=2)
+    # ``warm_full`` replays the trace's real generation lengths instead:
+    # an oversubscribed engine only hits its preemption-resume prefill
+    # shapes when the pool actually runs dry, which short warm generations
+    # never trigger.
+    warm = [Request(prompt=r.prompt.copy(),
+                    max_new_tokens=r.max_new_tokens if warm_full else 2)
             for r in trace]
     engine.generate(warm, seed=seed)
     if hasattr(engine, "pool"):
@@ -91,7 +113,7 @@ def _timed(engine, trace, seed, publish=None):
     engine.generate(reqs, seed=seed)
     dt = time.monotonic() - t0
     n_tok = sum(len(r.generated) for r in reqs)
-    return n_tok, dt, engine
+    return n_tok, dt, engine, reqs
 
 
 def _row(name, engine, n_tok, dt):
@@ -123,7 +145,7 @@ def run(arch="stablelm-1.6b", impl="xla", alpha=0.6, n_requests=8,
         ("continuous", ContinuousBatchingEngine(cfg, params, scfg)),
         ("static-bucket", StaticBucketEngine(cfg, params, scfg)),
     ):
-        n, dt, eng = _timed(eng, trace, seed)
+        n, dt, eng, _ = _timed(eng, trace, seed)
         rows.append(_row(name, eng, n, dt))
     return rows
 
@@ -155,8 +177,81 @@ def run_shared_prefix(arch="stablelm-1.6b", impl="xla", alpha=0.6,
         ("contiguous",
          ContinuousBatchingEngine(cfg, params, ServeConfig(**base))),
     ):
-        n, dt, eng = _timed(eng, trace, seed, publish=prefix)
+        n, dt, eng, _ = _timed(eng, trace, seed, publish=prefix)
         rows.append(_row(name, eng, n, dt))
+    return rows
+
+
+def run_oversubscribed(arch="stablelm-1.6b", impl="xla", alpha=0.6,
+                       n_requests=8, slots=4, seed=0, lens=(8, 16, 12),
+                       new_short=8, new_long=48, long_every=3,
+                       pool_blocks=None, check=False):
+    """Long-tail oversubscribed trace: most requests generate a few
+    tokens' worth of ``max_new_tokens`` budget, every ``long_every``-th
+    carries a worst case ``new_long`` budget — and every request runs its
+    budget to the end, so the *reservation* gap (not an eos lottery) is
+    what the arms differ on.  The pool is sized for roughly the actual
+    long-tail footprint: far below the sum of worst-case reservations.
+
+    Arms: ``reserved`` (worst-case admission, same small pool: the head
+    of line blocks until capacity frees — utilization idles),
+    ``oversubscribed`` (prompt-sized reservations + victim preemption),
+    and ``uncontended`` (ample pool — the losslessness reference)."""
+    cfg = reduced_config(arch).replace(
+        attn_impl=impl, bitstopper=BitStopperConfig(alpha=alpha))
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    page = 8
+    max_len = max(lens) + new_long + 8
+    rng = np.random.default_rng(seed)
+    trace = make_trace(rng, cfg.vocab, n_requests, lens, new_short,
+                       new_short)
+    for i in range(0, n_requests, long_every):
+        trace[i].max_new_tokens = new_long
+    if pool_blocks is None:
+        # Roughly the long-tail working set: every request's prompt + the
+        # SHORT generation budget, plus one long tail — far below the
+        # worst case `sum(prompt + new_long)` a reserved admission needs
+        # to run all slots concurrently.
+        need = sum(-(-(len(r.prompt) + new_short) // page) for r in trace)
+        pool_blocks = 1 + max(need // 2, -(-(max(lens) + new_long) // page) + 2)
+    base = dict(max_len=max_len, max_slots=slots, prefill_bucket=8,
+                page_size=page, prefix_sharing=False)
+
+    rows, outs = [], {}
+    for name, scfg in (
+        ("uncontended", ServeConfig(**base)),
+        ("reserved", ServeConfig(**base, pool_blocks=pool_blocks)),
+        ("oversubscribed", ServeConfig(**base, pool_blocks=pool_blocks,
+                                       oversubscribe=True)),
+    ):
+        n, dt, eng, reqs = _timed(PagedEngine(cfg, params, scfg), trace,
+                                  seed, warm_full=True)
+        row = _row(name, eng, n, dt)
+        row["pool_blocks"] = eng.layout.pool_blocks
+        row["peak_live_blocks"] = eng.pool.peak_live_blocks
+        # What a worst-case-reserved pool would need to admit the same
+        # peak concurrency this arm reached — the residency the
+        # oversubscribed scheduler stops paying for.
+        row["worst_case_blocks"] = sum(
+            -(-(len(r.prompt) + r.max_new_tokens - 1) // page)
+            for r in trace)
+        rows.append(row)
+        outs[name] = [r.generated for r in reqs]
+
+    if check:
+        over = next(r for r in rows if r["engine"] == "oversubscribed")
+        res = next(r for r in rows if r["engine"] == "reserved")
+        unc = next(r for r in rows if r["engine"] == "uncontended")
+        assert over["preemptions"] >= 1, \
+            f"oversubscribed trace saw no preemption ({over})"
+        assert outs["oversubscribed"] == outs["uncontended"], \
+            "oversubscribed tokens diverged from the uncontended run"
+        assert outs["reserved"] == outs["uncontended"], \
+            "reserved tokens diverged from the uncontended run"
+        assert over["decode_steps"] < res["decode_steps"], \
+            (f"oversubscription should serve the trace in fewer ticks: "
+             f"{over['decode_steps']} vs {res['decode_steps']}")
+        assert unc["preemptions"] == 0 and res["preemptions"] == 0
     return rows
 
 
@@ -188,6 +283,14 @@ def main():
                     help="system-prompt length for the shared-prefix trace")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace for CI: fewer/shorter requests")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the oversubscription gate: >=1 "
+                         "preemption, tokens bit-identical to the "
+                         "uncontended run, fewer decode ticks than "
+                         "worst-case reservation")
+    ap.add_argument("--out", default=None,
+                    help="write all trace rows to this JSON path "
+                         "(default: results/BENCH_serve.json)")
     args = ap.parse_args()
 
     kw = dict(arch=args.arch, impl=args.impl, alpha=args.alpha,
@@ -197,9 +300,14 @@ def main():
         rows = run(**kw, lens=(5, 9), new_lo=3, new_hi=4)
         srows = run_shared_prefix(**kw, prefix_len=16, tail_lens=(3, 7),
                                   new_lo=3, new_hi=4)
+        orows = run_oversubscribed(**dict(kw, n_requests=3, slots=3),
+                                   lens=(10, 7, 9), new_short=4,
+                                   new_long=16, long_every=1,
+                                   pool_blocks=10, check=args.check)
     else:
         rows = run(**kw)
         srows = run_shared_prefix(**kw, prefix_len=args.prefix_len)
+        orows = run_oversubscribed(**kw, check=args.check)
 
     _print_rows(f"mixed trace arch={args.arch} impl={args.impl} "
                 f"requests={kw['n_requests']} slots={kw['slots']}", rows)
@@ -214,6 +322,37 @@ def main():
     print(f"  KV resident: shared {shared['kv_bytes_resident'] / 1024:.1f}KiB"
           f" vs unshared {unshared['kv_bytes_resident'] / 1024:.1f}KiB"
           f" vs contiguous {contig['kv_bytes_resident'] / 1024:.1f}KiB")
+
+    _print_rows("long-tail oversubscribed trace", orows)
+    over = next(r for r in orows if r["engine"] == "oversubscribed")
+    res = next(r for r in orows if r["engine"] == "reserved")
+    print(f"  pool: {over['pool_blocks']} blocks vs "
+          f"{over['worst_case_blocks']} worst-case-reserved; "
+          f"oversubscribed served in {over['decode_steps']} decode ticks "
+          f"({over['preemptions']} preemptions) vs {res['decode_steps']} "
+          f"reserved — "
+          f"{res['decode_steps'] / max(over['decode_steps'], 1):.2f}x "
+          f"fewer ticks, peak {over['peak_live_blocks']} live blocks")
+    if args.check:
+        print("[serve_throughput] oversubscription gate OK: preemption "
+              "observed, tokens lossless, fewer ticks than worst-case "
+              "reservation")
+
+    out = args.out or os.path.join(os.path.dirname(__file__), "..",
+                                   "results", "BENCH_serve.json")
+    payload = {
+        "config": {"arch": args.arch, "impl": args.impl,
+                   "alpha": args.alpha, "smoke": args.smoke,
+                   "seed": args.seed},
+        "mixed": rows,
+        "shared_prefix": srows,
+        "oversubscribed": orows,
+    }
+    if os.path.dirname(out):
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"[serve_throughput] wrote {out}")
 
 
 if __name__ == "__main__":

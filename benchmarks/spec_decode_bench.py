@@ -26,7 +26,8 @@ Reported per arm:
     PYTHONPATH=src python benchmarks/spec_decode_bench.py
     PYTHONPATH=src python benchmarks/spec_decode_bench.py --smoke --check
 
-Writes ``results/BENCH_spec.json``.
+Writes ``results/BENCH_spec.json`` — field-by-field reference (and what
+the ``--smoke --check`` CI gate asserts): ``docs/benchmarks.md``.
 """
 
 from __future__ import annotations

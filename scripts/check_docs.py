@@ -1,0 +1,107 @@
+#!/usr/bin/env python
+"""Docs link/reference checker — the CI gate that keeps docs honest.
+
+Scans ``README.md`` and every ``docs/*.md`` for
+
+* markdown links ``[text](target)`` with relative targets, and
+* inline-code file references like ``src/repro/serving/engine.py`` or
+  ``results/bench_lm/`` (anything backticked that contains a path
+  separator and a known file extension, or ends with ``/``),
+
+and fails (exit 1) listing every reference that does not resolve against
+the repository root or the referencing file's directory.  Optional
+``path:anchor`` suffixes (``file.py:123``, ``file.md#section``) are
+stripped before resolution; external (``http``/``mailto``) and
+wildcard/code-expression backticks are ignored.
+
+    python scripts/check_docs.py
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Extensions a backticked token must end with to count as a file reference.
+EXTS = (".py", ".md", ".sh", ".yml", ".yaml", ".json", ".toml", ".csv",
+        ".txt", ".cfg", ".ini")
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_SPAN = re.compile(r"`([^`\n]+)`")
+# A path-looking token: portable filename characters only (no spaces,
+# parens, wildcards, shell operators — those are code, not paths).
+PATHY = re.compile(r"^[A-Za-z0-9_.\-/]+$")
+
+
+def _strip_anchor(ref: str) -> str:
+    ref = ref.split("#", 1)[0]
+    # file.py:123 / file.py:symbol anchors
+    if ":" in ref:
+        head, _ = ref.split(":", 1)
+        if head.endswith(EXTS):
+            ref = head
+    return ref
+
+
+def _resolves(ref: str, base_dir: str) -> bool:
+    for root in (base_dir, ROOT):
+        p = os.path.normpath(os.path.join(root, ref))
+        if ref.endswith("/"):
+            if os.path.isdir(p):
+                return True
+        elif os.path.exists(p):
+            return True
+    return False
+
+
+def _refs_in(path: str):
+    text = open(path, encoding="utf-8").read()
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        yield m.group(0), _strip_anchor(target)
+    for m in CODE_SPAN.finditer(text):
+        tok = m.group(1)
+        if not PATHY.match(tok.rstrip("/") if tok.endswith("/") else tok):
+            continue
+        is_dir = tok.endswith("/") and "/" in tok.rstrip("/")
+        is_file = tok.endswith(EXTS) and ("/" in tok or tok.startswith("."))
+        if not (is_dir or is_file):
+            continue
+        yield f"`{tok}`", _strip_anchor(tok)
+
+
+def main() -> int:
+    doc_files = [os.path.join(ROOT, "README.md")]
+    docs_dir = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs_dir):
+        doc_files += sorted(
+            os.path.join(docs_dir, f) for f in os.listdir(docs_dir)
+            if f.endswith(".md"))
+    stale = []
+    n_refs = 0
+    for path in doc_files:
+        if not os.path.exists(path):
+            stale.append((path, "(missing doc file)", ""))
+            continue
+        base = os.path.dirname(path)
+        for shown, ref in _refs_in(path):
+            n_refs += 1
+            if not _resolves(ref, base):
+                stale.append((os.path.relpath(path, ROOT), shown, ref))
+    if stale:
+        print(f"[check_docs] {len(stale)} stale reference(s):")
+        for doc, shown, ref in stale:
+            print(f"  {doc}: {shown} -> {ref or shown} does not resolve")
+        return 1
+    print(f"[check_docs] OK: {n_refs} references across "
+          f"{len(doc_files)} docs all resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

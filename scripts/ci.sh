@@ -8,15 +8,30 @@ cd "$(dirname "$0")/.."
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 
+# Docs gate: every internal link / file reference in README.md and
+# docs/*.md must resolve — stale docs fail the build.
+python scripts/check_docs.py
+
 # Serving-benchmark smoke: tiny configs, a handful of steps.  Keeps the
 # paged/contiguous/static throughput harness and the served-traffic
-# accounting runnable — benchmarks can't silently rot.
+# accounting runnable — benchmarks can't silently rot.  --check asserts
+# the oversubscription gate: >= 1 preemption on the long-tail trace,
+# tokens bit-identical to the uncontended run, fewer decode ticks than
+# worst-case reservation (all deterministic counters, no wall clock).
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-    python benchmarks/serve_throughput.py --smoke
+    python benchmarks/serve_throughput.py --smoke --check \
+        --out /tmp/BENCH_serve_smoke.json
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m repro.launch.serve --requests 2 --slots 2 \
         --min-prompt 4 --max-prompt 8 --new-tokens 3 --shared-prefix 8 \
         --page-size 8
+
+# Oversubscribed-serve smoke: admission on prompt-sized reservations with
+# victim preemption + lossless resume, end to end through the launcher.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --requests 4 --slots 3 \
+        --min-prompt 6 --max-prompt 12 --new-tokens 16 --page-size 8 \
+        --pool-blocks 10 --oversubscribe
 
 # Fused paged-decode smoke: times gather vs paged vs the Pallas kernel
 # (interpret mode on CPU runners) and asserts the traffic model scales

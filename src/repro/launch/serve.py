@@ -10,6 +10,10 @@ Engines:
   capacity (``--pool-blocks``) rather than a per-slot ``max_len``; block
   granularity is ``--page-size`` tokens and prompts prefill
   ``--prefill-chunk`` tokens per scheduler tick, interleaved with decode.
+  With ``--oversubscribe`` admission reserves prompt-sized block budgets
+  instead of worst-case ``max_new_tokens`` and mid-decode exhaustion
+  preempts a victim (``--preempt-policy``), which later resumes
+  losslessly — see ``docs/serving.md`` for the full request lifecycle.
 * ``--engine continuous`` — the contiguous per-slot cache (each slot
   reserves ``max_len`` rows); the paged engine is bit-identical to it on
   the dense path, at a fraction of the resident KV memory.
@@ -77,6 +81,17 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="paged engine: prompt tokens prefetched per "
                          "scheduler tick (multiple of the prefill bucket)")
+    ap.add_argument("--oversubscribe", action="store_true",
+                    help="paged engine: admit against prompt-sized "
+                         "reservations instead of worst-case "
+                         "max-new-tokens; mid-decode pool exhaustion "
+                         "preempts a victim (freed + requeued; resume is "
+                         "lossless, tokens never change)")
+    ap.add_argument("--preempt-policy", default="fewest_tokens",
+                    choices=["fewest_tokens", "lifo"],
+                    help="victim choice under --oversubscribe: least "
+                         "generated output (cheapest recompute) or newest "
+                         "admission")
     ap.add_argument("--fused-decode", default="auto",
                     choices=["auto", "on", "off"],
                     help="paged BitStopper decode through the fused Pallas "
@@ -106,10 +121,15 @@ def main():
         prefill_chunk=args.prefill_chunk,
         fused_decode={"auto": None, "on": True, "off": False}[
             args.fused_decode],
-        speculative=args.speculative, draft_k=args.draft_k)
+        speculative=args.speculative, draft_k=args.draft_k,
+        oversubscribe=args.oversubscribe,
+        preempt_policy=args.preempt_policy)
     if args.speculative != "off" and args.engine != "paged":
         ap.error("--speculative requires --engine paged "
                  "(block-table rollback)")
+    if args.oversubscribe and args.engine != "paged":
+        ap.error("--oversubscribe requires --engine paged "
+                 "(block-pool preemption)")
     engine = {"paged": PagedEngine,
               "continuous": ContinuousBatchingEngine,
               "static": StaticBucketEngine}[args.engine](cfg, params, scfg)
@@ -136,6 +156,14 @@ def main():
                   f"accepted ({acc:.0%}), {c['spec_bailouts']} "
                   f"scale-growth bailouts, "
                   f"{c['decode_tokens']}/{c['decode_steps']} tokens/tick")
+        if isinstance(engine, PagedEngine) and args.oversubscribe:
+            c = engine.counters
+            print(f"[serve] oversubscribed({args.preempt_policy}): "
+                  f"{c['preemptions']} preemptions, "
+                  f"{c['preempt_freed_blocks']} blocks reclaimed, "
+                  f"{c['preempt_dropped_tokens']} cached tokens dropped "
+                  f"(resume re-maps registered blocks, recomputes the "
+                  f"unshared tail)")
         if isinstance(engine, PagedEngine):
             print(f"[serve] kv pool: page_size={engine.layout.page_size} "
                   f"blocks={engine.layout.pool_blocks} "

@@ -5,6 +5,13 @@ unit** of blocks (so hybrids like RecurrentGemma's (rglru, rglru, local)
 and DeepSeek's (3 dense then 58 MoE layers) scan cleanly over homogeneous
 stacks).  Block mixers: attn | local_attn | mla | ssm | rglru.
 FFN kinds: dense | moe | none.
+
+The serving-facing runtime switches (``attn_impl``, ``fused_decode``,
+``spec_verify``) select the BitStopper score path and its paged decode /
+speculative-verify kernels; scheduler-level policy (pool sizing, prefix
+sharing, oversubscription/preemption) lives in ``ServeConfig``
+(``repro.serving.engine``), not here — see ``docs/architecture.md`` and
+``docs/serving.md`` for the split.
 """
 
 from __future__ import annotations

@@ -70,6 +70,15 @@ class ServeConfig:
                                       # (default: 4*prefill_bucket; must be
                                       # a multiple of prefill_bucket)
     prefix_sharing: bool = True       # share full prompt-prefix blocks
+    oversubscribe: bool = False       # paged: admit against prompt-sized
+                                      # reservations instead of worst case;
+                                      # mid-decode exhaustion preempts a
+                                      # victim (freed + requeued, lossless
+                                      # resume via chunked-prefill recompute)
+    preempt_policy: str = "fewest_tokens"  # victim choice under
+                                      # oversubscription: "fewest_tokens"
+                                      # (least generated -> cheapest
+                                      # recompute) | "lifo" (newest admitted)
     fused_decode: bool | None = None  # BitStopper decode through the fused
                                       # paged Pallas kernel (True), the
                                       # pure-JAX gather fallback (False), or
@@ -112,6 +121,10 @@ class ServeConfig:
                 f"fused_decode needs page_size % 8 == 0 (bit planes pack 8 "
                 f"tokens/byte along the page axis), got page_size="
                 f"{self.page_size}")
+        if self.preempt_policy not in ("fewest_tokens", "lifo"):
+            raise ValueError(
+                f"preempt_policy must be fewest_tokens|lifo, got "
+                f"{self.preempt_policy!r}")
         if self.speculative not in ("off", "ngram", "draft"):
             raise ValueError(
                 f"speculative must be off|ngram|draft, got "
@@ -141,6 +154,7 @@ class Request:
     prefill_len: int = 0
     admitted_step: int = -1
     finished_step: int = -1
+    preemptions: int = 0              # times this request was victimized
 
 
 def _supported(cfg: ModelConfig) -> None:
@@ -354,6 +368,10 @@ class ContinuousBatchingEngine(_EngineCommon):
             raise ValueError(
                 "speculative decoding needs the paged engine (block-table "
                 "rollback); use PagedEngine")
+        if scfg.oversubscribe:
+            raise ValueError(
+                "oversubscription needs the paged engine (block-pool "
+                "preemption); use PagedEngine")
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
@@ -513,11 +531,19 @@ class ContinuousBatchingEngine(_EngineCommon):
 class _PagedSlot:
     """Scheduler-side state of one occupied serving slot."""
     req: Request
-    next_prefill: int          # prompt tokens [0, next_prefill) are cached
+    next_prefill: int          # ctx tokens [0, next_prefill) are cached
     blocks_reserved: int       # reservation units not yet turned into allocs
+    ctx: np.ndarray            # prefill token sequence: the prompt, or —
+                               # resuming a preempted request — the prompt
+                               # plus every generated token already cached
+                               # (all but the last, which is the next
+                               # decode input, never written back yet)
+    resumed: bool = False      # resuming after preemption: the tail of
+                               # ``generated`` is replayed, not re-sampled
+    seq: int = 0               # admission order (LIFO victim policy)
 
     def prefilled(self) -> bool:
-        return self.next_prefill >= len(self.req.prompt)
+        return self.next_prefill >= len(self.ctx)
 
 
 class PagedEngine(_EngineCommon):
@@ -538,6 +564,23 @@ class PagedEngine(_EngineCommon):
     * **Chunked prefill.**  A prompt is prefilled ``prefill_chunk`` tokens
       per scheduler tick, interleaved with decode steps of in-flight slots,
       bounding decode-latency jitter from long prompts.
+    * **Oversubscription** (``ServeConfig.oversubscribe``).  Admission
+      reserves only the context blocks plus one decode block instead of
+      the worst case — a pool sized for realistic traffic admits more
+      concurrency than worst-case ``max_new_tokens`` would allow.  When a
+      mid-decode block claim then finds the pool dry, the scheduler
+      preempts a victim (``preempt_policy``: fewest tokens generated, or
+      newest admission): its exclusively-owned blocks free outright,
+      shared/registered prefix blocks drop a reference (staying mapped or
+      parking resurrectable in the LRU), and the request requeues at the
+      head of the line.  Resume is **lossless**: the victim re-admits with
+      its context (prompt + generated tokens), re-maps still-registered
+      prefix blocks for free, recomputes the unshared tail through the
+      ordinary chunked prefill, and continues decoding from its last
+      sampled token — sampling keys are a pure function of (seed, rid,
+      token index), so the served trace is bit-identical to an uncontended
+      run (on the dense path; see ``docs/serving.md`` for the BitStopper
+      quant-scale caveat).
 
     On the dense (``xla``) score path the served tokens are bit-identical
     to the contiguous engine: per-query attention sees the same KV set
@@ -670,6 +713,7 @@ class PagedEngine(_EngineCommon):
         self.last_token = np.zeros((B,), np.int32)
         self._prefill_fifo: collections.deque[int] = collections.deque()
         self._next_rid = 0
+        self._admit_seq = 0
         self._step = 0
         self._base_key = jax.random.PRNGKey(0)
         self.counters = {"prefill_tokens": 0, "prefix_hit_tokens": 0,
@@ -677,7 +721,9 @@ class PagedEngine(_EngineCommon):
                          "decode_steps": 0, "decode_slot_steps": 0,
                          "decode_kv_tokens": 0, "requests_finished": 0,
                          "spec_ticks": 0, "spec_proposed": 0,
-                         "spec_accepted": 0, "spec_bailouts": 0}
+                         "spec_accepted": 0, "spec_bailouts": 0,
+                         "preemptions": 0, "preempt_freed_blocks": 0,
+                         "preempt_dropped_tokens": 0}
 
     # ------------------------------------------------------------------
     # capacity accounting
@@ -735,32 +781,56 @@ class PagedEngine(_EngineCommon):
         self.queue.append(req)
         return req
 
-    def _match_prefix(self, prompt: np.ndarray) -> list[int]:
-        """Longest chain of already-cached full prompt blocks (refs taken).
-        At least one prompt token is always left to prefill — its forward
-        produces the logits that sample the first new token."""
+    def _match_prefix(self, tokens: np.ndarray,
+                      keep_last: bool = True) -> list[int]:
+        """Longest chain of already-cached full blocks of ``tokens`` (refs
+        taken).  With ``keep_last`` at least one token is always left to
+        prefill — its forward produces the logits that sample the first new
+        token.  A resumed request passes ``keep_last=False``: its next
+        input token is already known (``generated[-1]``), so a fully-cached
+        context needs no prefill forward at all."""
         bs = self._page
         matched: list[int] = []
-        for j in range((len(prompt) - 1) // bs):
-            key = tuple(int(t) for t in prompt[:(j + 1) * bs])
+        for j in range((len(tokens) - (1 if keep_last else 0)) // bs):
+            key = tuple(int(t) for t in tokens[:(j + 1) * bs])
             bid = self.pool.lookup(key)
             if bid is None:
                 break
             matched.append(bid)
         return matched
 
+    def _reserve_goal(self, total: int, n_ctx: int) -> int:
+        """Blocks admission must secure.  Default: the worst case, so
+        mid-decode allocation can never fail.  Oversubscribed: just the
+        context blocks plus one decode block — enough to prefill and make
+        decode progress; further blocks are claimed unreserved and may
+        preempt a victim when the pool runs dry."""
+        if not self.scfg.oversubscribe:
+            return total
+        return min(total, n_ctx + 1)
+
     def _admit(self) -> None:
         while self.queue and None in self.slots:
             req = self.queue[0]
-            L = len(req.prompt)
+            resumed = len(req.generated) > 0
+            # Resume context: everything already cached at preemption time
+            # — the prompt plus all generated tokens but the last (which is
+            # the next decode input, never written back yet).
+            ctx = (np.concatenate([np.asarray(req.prompt, np.int32),
+                                   np.asarray(req.generated[:-1], np.int32)])
+                   if resumed else np.asarray(req.prompt, np.int32))
+            Lc = len(ctx)
             total = self._blocks_for(req)
+            n_ctx = -(-Lc // self._page)
+            goal = self._reserve_goal(total, n_ctx)
             # Cheap pre-check before building O(L^2/page) prefix keys: if
             # even a full prefix match couldn't fit, the head of line is
             # blocked — don't churn the registry every tick.
-            if total - (L - 1) // self._page > self.pool.available():
+            max_match = (Lc - (0 if resumed else 1)) // self._page
+            if goal - max_match > self.pool.available():
                 break
-            matched = self._match_prefix(req.prompt)
-            need = total - len(matched)
+            matched = self._match_prefix(ctx, keep_last=not resumed)
+            need = goal - len(matched)
             if need > self.pool.available():
                 # Head-of-line blocked on capacity: roll the prefix refs
                 # back and wait for evictions to return blocks.
@@ -772,38 +842,50 @@ class PagedEngine(_EngineCommon):
             slot = self.slots.index(None)
             row = np.zeros((self._mb,), np.int32)
             row[:len(matched)] = matched
-            # Blocks covering the un-shared prompt tail are claimed now;
-            # decode-tail blocks stay reserved and materialize lazily.
-            n_prompt = -(-L // self._page)
-            for j in range(len(matched), n_prompt):
+            # Blocks covering the un-shared context tail are claimed now;
+            # decode-tail blocks stay reserved (or, oversubscribed, unmet)
+            # and materialize lazily.
+            for j in range(len(matched), n_ctx):
                 row[j] = self.pool.alloc(reserved=True)
             cached_len = len(matched) * self._page
             self.table[slot] = row
             self.lengths[slot] = cached_len
             self.slots[slot] = _PagedSlot(
                 req, next_prefill=cached_len,
-                blocks_reserved=total - n_prompt)
-            self._prefill_fifo.append(slot)
-            req.prefill_len = L
-            req.admitted_step = self._step
+                blocks_reserved=goal - n_ctx,
+                ctx=ctx, resumed=resumed, seq=self._admit_seq)
+            self._admit_seq += 1
+            if cached_len < Lc:
+                self._prefill_fifo.append(slot)
+            else:
+                # Fully-cached resume (every ctx block resurrected from the
+                # registry): no prefill forward needed — decode continues
+                # from the already-sampled last token.
+                self.last_token[slot] = int(req.generated[-1])
+            if not resumed:
+                req.prefill_len = Lc
+                req.admitted_step = self._step
             self.counters["prefix_hit_tokens"] += cached_len
 
     def _prefill_tick(self) -> None:
         """Run ONE bucket-padded chunk of the oldest admitted-but-unprefilled
-        request — long prompts no longer monopolize a scheduler tick."""
+        request — long prompts no longer monopolize a scheduler tick.  A
+        resumed (previously preempted) request prefills its *context* —
+        prompt plus already-generated tokens — through the identical path:
+        recompute of the unshared tail is just more chunked prefill."""
         if not self._prefill_fifo:
             return
         slot = self._prefill_fifo[0]
         st = self.slots[slot]
         req = st.req
-        L = len(req.prompt)
+        L = len(st.ctx)
         s = st.next_prefill
         e = min(s + self._chunk, L)
         n = e - s
         Sp = min(self._chunk, -(-n // self.scfg.prefill_bucket)
                  * self.scfg.prefill_bucket)
         tokens = np.zeros((1, Sp), np.int32)
-        tokens[0, :n] = np.asarray(req.prompt[s:e], np.int32)
+        tokens[0, :n] = np.asarray(st.ctx[s:e], np.int32)
         positions = np.full((1, Sp), POS_SENTINEL, np.int32)
         positions[0, :n] = np.arange(s, e, dtype=np.int32)
 
@@ -817,19 +899,29 @@ class PagedEngine(_EngineCommon):
         self.counters["prefill_tokens"] += n
         self.counters["prefill_chunks"] += 1
 
-        # Publish newly completed full prompt blocks for prefix sharing
-        # (re-registration of already-shared blocks is a no-op).
+        # Publish newly completed full context blocks for prefix sharing
+        # (re-registration of already-shared blocks is a no-op).  Keys are
+        # the full token chain, so generated-region blocks of a resumed
+        # request share exactly like prompt blocks — a second preemption
+        # resumes them for free.
         bs = self._page
         for j in range(s // bs, e // bs):
-            key = tuple(int(t) for t in req.prompt[:(j + 1) * bs])
+            key = tuple(int(t) for t in st.ctx[:(j + 1) * bs])
             self.pool.register(key, int(self.table[slot, j]))
 
         if e == L:
             self._prefill_fifo.popleft()
-            tok = int(self._sample_rows(last_logits, [req.rid], [0])[0])
-            req.generated.append(tok)
-            self.last_token[slot] = tok
-            self._maybe_evict(slot, tok)
+            if st.resumed:
+                # The context's successor token was already sampled before
+                # the preemption — replay it as the next decode input
+                # instead of re-sampling (the logits are not consumed, so
+                # the resumed trace stays bit-identical).
+                self.last_token[slot] = int(req.generated[-1])
+            else:
+                tok = int(self._sample_rows(last_logits, [req.rid], [0])[0])
+                req.generated.append(tok)
+                self.last_token[slot] = tok
+                self._maybe_evict(slot, tok)
 
     def _maybe_evict(self, slot: int, tok: int) -> None:
         st = self.slots[slot]
@@ -865,33 +957,151 @@ class PagedEngine(_EngineCommon):
             return bool(self.queue
                         or any(st is not None for st in self.slots))
         self._step += 1
+        # Materialize the block behind each decoding row's next write
+        # position up front: under oversubscription this claim may preempt
+        # a victim — possibly one of this tick's own rows, which then drops
+        # out of `active` (it is requeued, not lost).  Mandatory claims
+        # happen here, before any speculative drafting, so a spec tick
+        # never preempts for optional draft blocks.
+        for i in active:
+            st = self.slots[i]
+            if st is None or not st.prefilled():
+                continue                      # preempted by an earlier claim
+            j = int(self.lengths[i]) // self._page
+            if self.table[i, j] == 0:
+                self._claim_block(i, j)
+        active = [i for i in active if self.slots[i] is not None
+                  and self.slots[i].prefilled()]
+        if not active:
+            return True
         if self._drafter is not None:
             self._spec_decode_tick(active)
         else:
             self._plain_decode_tick(active)
         return True
 
-    def _claim_block(self, slot: int, j: int) -> int:
-        """Materialize the physical block behind table entry j out of the
-        slot's admission reservation (guaranteed claimable)."""
+    # ------------------------------------------------------------------
+    # oversubscription: victim preemption + lossless requeue
+    # ------------------------------------------------------------------
+
+    def _freeable_blocks(self, slot: int) -> int:
+        """Pool capacity preempting this slot would release: exclusively-
+        held table entries (refcount-1 blocks free outright or park in the
+        evictable LRU) plus its un-materialized reservation units.  Entries
+        another table also maps (refcount > 1) only drop a reference."""
         st = self.slots[slot]
-        if st.blocks_reserved <= 0:
-            raise RuntimeError(
-                "paged scheduler invariant violated: slot "
-                f"{slot} needs a decode block but has no reservation")
-        bid = self.pool.alloc(reserved=True)
-        st.blocks_reserved -= 1
+        n = st.blocks_reserved
+        for j in range(self._mb):
+            bid = int(self.table[slot, j])
+            if bid and self.pool.refcount(bid) == 1:
+                n += 1
+        return n
+
+    def _select_victim(self, needy: int) -> int | None:
+        """Pick the slot to preempt so ``needy`` can claim a block.
+        ``fewest_tokens`` victimizes the request with the least generated
+        output (cheapest recompute, closest to vLLM's default); ``lifo``
+        victimizes the newest admission (oldest requests never starve).
+        Slots whose preemption would free nothing are never chosen."""
+        cands = [i for i, st in enumerate(self.slots)
+                 if st is not None and i != needy
+                 and self._freeable_blocks(i) > 0]
+        if not cands:
+            return None
+        if self.scfg.preempt_policy == "lifo":
+            return max(cands, key=lambda i: self.slots[i].seq)
+        return min(cands, key=lambda i: (len(self.slots[i].req.generated),
+                                         -self.slots[i].seq))
+
+    def _preempt(self, slot: int) -> None:
+        """Evict a running request to reclaim its blocks, requeueing it for
+        a lossless resume.  Exclusively-owned blocks free outright
+        (``KVBlockPool.preempt``); shared/registered prefix blocks drop one
+        reference — they stay live under other tables or park resurrectable
+        in the LRU, so the resume re-maps them for free and recomputes only
+        the unshared tail via chunked prefill.  The request's ``generated``
+        tokens are kept: sampling keys are a pure function of (seed, rid,
+        token index), so the resumed continuation is bit-identical to an
+        uncontended run."""
+        st = self.slots[slot]
+        req = st.req
+        L = int(self.lengths[slot])
+        exclusive, shared, dropped = [], [], 0
+        for j in range(self._mb):
+            bid = int(self.table[slot, j])
+            if not bid:
+                continue
+            if (self.pool.refcount(bid) == 1
+                    and not self.pool.is_registered(bid)):
+                exclusive.append(bid)
+                # Only tokens in forcibly-freed blocks are dropped from
+                # cache; tokens in shared/registered blocks stay resident
+                # (or parked) and re-map for free on resume.
+                dropped += max(0, min(L - j * self._page, self._page))
+            else:
+                shared.append(bid)
+        self.pool.preempt(exclusive)
+        for bid in shared:
+            self.pool.decref(bid)
+        self.pool.cancel_reservation(st.blocks_reserved)
+        self.table[slot] = 0
+        self.counters["preempt_dropped_tokens"] += dropped
+        self.lengths[slot] = 0
+        self.last_token[slot] = 0
+        self.slots[slot] = None
+        if slot in self._prefill_fifo:
+            self._prefill_fifo.remove(slot)
+        req.preemptions += 1
+        self.counters["preemptions"] += 1
+        self.counters["preempt_freed_blocks"] += len(exclusive)
+        # Preempted requests resume ahead of never-admitted arrivals (they
+        # were admitted first), ordered by submission among themselves —
+        # a later-preempted request must not jump an earlier one already
+        # waiting at the head.
+        pos = 0
+        for r in self.queue:
+            if r.preemptions > 0 and r.rid < req.rid:
+                pos += 1
+            else:
+                break
+        self.queue.insert(pos, req)
+
+    def _claim_block(self, slot: int, j: int) -> int:
+        """Materialize the physical block behind table entry j — out of the
+        slot's admission reservation when one remains, else (oversubscribed
+        admission only) from the pool's spare capacity, preempting victims
+        until a block is claimable."""
+        st = self.slots[slot]
+        if st.blocks_reserved > 0:
+            bid = self.pool.alloc(reserved=True)
+            st.blocks_reserved -= 1
+        else:
+            if not self.scfg.oversubscribe:
+                raise RuntimeError(
+                    "paged scheduler invariant violated: slot "
+                    f"{slot} needs a decode block but has no reservation")
+            while self.pool.available() < 1:
+                victim = self._select_victim(needy=slot)
+                if victim is None:
+                    raise RuntimeError(
+                        "oversubscribed pool wedged: no preemptable victim "
+                        f"can free a block for slot {slot}")
+                self._preempt(victim)
+            bid = self.pool.alloc()
         self.table[slot, j] = bid
         return bid
 
     def _plain_decode_tick(self, active: list[int]) -> None:
-        """One non-speculative decode step over every prefilled slot."""
-        # Materialize the block behind each row's next write position; the
-        # admission reservation guarantees one is always claimable.
+        """One non-speculative decode step over every prefilled slot.
+
+        Precondition: every active row's next-write block was already
+        materialized by ``step()`` (also true on the speculative bailout
+        replay — the mandatory claims precede the table snapshot and only
+        optional draft blocks roll back).  Claiming here instead could
+        preempt mid-tick, which the spec path must never do."""
         for i in active:
-            j = int(self.lengths[i]) // self._page
-            if self.table[i, j] == 0:
-                self._claim_block(i, j)
+            assert self.table[i, int(self.lengths[i]) // self._page] != 0, \
+                f"slot {i} reached decode without its next-write block"
         # Rows still prefilling (or empty) decode at the pad sentinel: their
         # q/k/v are zeroed and the cache write is dropped.
         positions = np.full((len(self.slots), 1), POS_SENTINEL, np.int32)
@@ -916,6 +1126,22 @@ class PagedEngine(_EngineCommon):
             self.lengths[i] += 1
             self.last_token[i] = toks[i]
             self._maybe_evict(i, int(toks[i]))
+
+    def _return_draft_blocks(self, slot: int,
+                             blocks: list[tuple[int, int, bool]]) -> None:
+        """Return unused speculative blocks to the pool the way they came:
+        a block claimed from the slot's admission reservation rolls back
+        WITH its reservation unit restored (and re-credited to the slot);
+        a block claimed from oversubscribed *spare* capacity frees outright
+        — re-reserving it would earmark shared spare capacity to this slot
+        and push other slots into needless preemptions."""
+        reserved = [bid for _, bid, r in blocks if r]
+        spare = [bid for _, bid, r in blocks if not r]
+        if reserved:
+            self.pool.rollback(reserved)
+            self.slots[slot].blocks_reserved += len(reserved)
+        if spare:
+            self.pool.rollback(spare, reserve=False)
 
     # ------------------------------------------------------------------
     # speculative decode: propose -> one Sq=k+1 verify -> accept/rollback
@@ -964,17 +1190,36 @@ class PagedEngine(_EngineCommon):
         B = len(self.slots)
         tokens = np.zeros((B, Sq), np.int32)
         positions = np.full((B, Sq), POS_SENTINEL, np.int32)
-        new_blocks: dict[int, list[tuple[int, int]]] = {}
+        # (table index, block, claimed-from-reservation) per slot — the
+        # reservation flag decides how an unused block returns to the pool.
+        new_blocks: dict[int, list[tuple[int, int, bool]]] = {}
         for i in active:
+            st = self.slots[i]
             row = [int(self.last_token[i])] + drafts[i]
             base = int(self.lengths[i])
+            new_blocks[i] = []
+            # The row's first block was claimed in step(); blocks past it
+            # are *optional* — they only hold draft tokens.  Claim them
+            # from the slot's reservation or the pool's spare capacity,
+            # NEVER by preemption (evicting a live request for tokens that
+            # may be rejected is a losing trade): when the pool is tight
+            # the draft is truncated to the blocks it could get.
+            for j in range(base // self._page + 1,
+                           (base + len(row) - 1) // self._page + 1):
+                if self.table[i, j] != 0:
+                    continue
+                reserved = st.blocks_reserved > 0
+                if (reserved or (self.scfg.oversubscribe
+                                 and self.pool.available() >= 1)):
+                    new_blocks[i].append((j, self._claim_block(i, j),
+                                          reserved))
+                else:
+                    keep = j * self._page - base
+                    row = row[:keep]
+                    drafts[i] = drafts[i][:keep - 1]
+                    break
             tokens[i, :len(row)] = row
             positions[i, :len(row)] = base + np.arange(len(row))
-            new_blocks[i] = []
-            for j in range(base // self._page,
-                           (base + len(row) - 1) // self._page + 1):
-                if self.table[i, j] == 0:
-                    new_blocks[i].append((j, self._claim_block(i, j)))
 
         caches = _attach_tables(self.caches, self.table, self.lengths)
         logits, new_caches, grew = self._verify(
@@ -989,9 +1234,7 @@ class PagedEngine(_EngineCommon):
             self.caches = caches_snap
             self.table = table_snap
             for i in active:
-                if new_blocks[i]:
-                    self.pool.rollback([bid for _, bid in new_blocks[i]])
-                    self.slots[i].blocks_reserved += len(new_blocks[i])
+                self._return_draft_blocks(i, new_blocks[i])
             self.counters["spec_bailouts"] += 1
             self._plain_decode_tick(active)
             return
@@ -1037,12 +1280,10 @@ class PagedEngine(_EngineCommon):
             # so prompt/prefix-shared blocks are structurally out of reach
             # (kv_pool.rollback additionally enforces it).
             last_j = (int(self.lengths[i]) - 1) // self._page
-            stale = [(j, bid) for j, bid in new_blocks[i] if j > last_j]
-            if stale:
-                for j, _ in stale:
-                    self.table[i, j] = 0
-                self.pool.rollback([bid for _, bid in stale])
-                st.blocks_reserved += len(stale)
+            stale = [blk for blk in new_blocks[i] if blk[0] > last_j]
+            for j, _, _ in stale:
+                self.table[i, j] = 0
+            self._return_draft_blocks(i, stale)
             self._maybe_evict(i, emitted[-1])
 
 

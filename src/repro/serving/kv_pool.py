@@ -24,10 +24,19 @@ Design (vLLM-style, sized for this repro):
   block drops, the block parks in an LRU *cached* pool instead of the
   free list: a later request with the same prefix can resurrect it, and
   allocation pressure evicts the oldest cached block first.
-* **Reservations.**  Admission control reserves the worst-case block count
-  for a request up front (``prompt + max_new_tokens``, minus shared-prefix
-  hits), so mid-decode allocation can never fail and the scheduler needs
-  no preemption path.
+* **Reservations.**  Admission control reserves blocks up front; an
+  unreserved :meth:`alloc` never dips into outstanding reservations.  In
+  the default (fully-reserved) mode the scheduler reserves the worst-case
+  block count for a request (``prompt + max_new_tokens``, minus
+  shared-prefix hits), so mid-decode allocation can never fail.  Under
+  **oversubscription** (``ServeConfig.oversubscribe``) the scheduler
+  reserves only the prompt blocks plus one decode block and handles
+  mid-decode exhaustion with victim preemption: :meth:`preempt` returns a
+  victim's exclusively-owned blocks to the free list while its shared /
+  registered prefix blocks merely drop a reference (parking in the LRU
+  cache, resurrectable), so a requeued victim resumes the shared prefix
+  for free and recomputes only the unshared tail.  The request lifecycle
+  this module backs is documented in ``docs/serving.md``.
 """
 
 from __future__ import annotations
@@ -100,7 +109,14 @@ class KVBlockPool:
 
     def alloc(self, reserved: bool = False) -> int:
         """Claim a block (refcount 1).  ``reserved=True`` consumes one unit
-        of a prior :meth:`reserve`."""
+        of a prior :meth:`reserve`; an unreserved alloc only succeeds when
+        a block exists *beyond* outstanding reservations — it must never
+        consume capacity another request was promised."""
+        if not reserved and self.available() < 1:
+            raise RuntimeError(
+                f"unreserved alloc: {len(self._free) + len(self._cached)} "
+                f"block(s) uncommitted but {self._reserved} reserved — an "
+                f"unreserved alloc may not consume a reservation")
         if self._free:
             bid = self._free.popleft()
         elif self._cached:
@@ -118,6 +134,15 @@ class KVBlockPool:
 
     def incref(self, bid: int) -> None:
         self._ref[bid] += 1
+
+    def refcount(self, bid: int) -> int:
+        """Live references to a block (0: free, parked, or unknown)."""
+        return self._ref.get(bid, 0)
+
+    def is_registered(self, bid: int) -> bool:
+        """True iff the block is published in the prefix registry (a full
+        prompt block other requests may map; it parks rather than frees)."""
+        return bid in self._key_of
 
     def decref(self, bid: int) -> None:
         """Drop one reference; the last drop frees the block — to the LRU
@@ -138,7 +163,7 @@ class KVBlockPool:
                 del self._key_of[bid]
             self._free.append(bid)
 
-    def rollback(self, bids: list[int]) -> None:
+    def rollback(self, bids: list[int], reserve: bool = True) -> None:
         """Return speculative tail blocks to the pool, atomically restoring
         the reservation they were claimed from.
 
@@ -147,6 +172,10 @@ class KVBlockPool:
         rejected, those blocks hold no live token and must come back — with
         the reservation units re-created so the request's worst-case
         guarantee (mid-decode allocation can never fail) still holds.
+        ``reserve=False`` skips the re-reservation: an oversubscribed
+        engine claims draft blocks from *spare* (unreserved) capacity, and
+        re-reserving those on rollback would earmark shared spare capacity
+        to one slot, starving the others into needless preemptions.
 
         Rolled-back blocks must be **exclusively owned, unregistered**
         scratch: a refcount > 1 block is mapped by another request's table
@@ -154,25 +183,49 @@ class KVBlockPool:
         either back would yank KV out from under a reader (the engine never
         rolls past the prompt/shared boundary; this guards the invariant).
         """
-        # Validate every bid BEFORE mutating anything: a guard firing
-        # mid-loop must not leave the pool half-rolled-back (freed blocks
-        # whose reservation units were never restored).
+        self._free_exclusive(bids, "rollback")
+        # Freed blocks are available again by construction, so re-reserving
+        # them cannot fail.
+        if reserve:
+            self._reserved += len(bids)
+
+    def _free_exclusive(self, bids: list[int], verb: str) -> None:
+        """Shared mechanics of :meth:`rollback` and :meth:`preempt`: free
+        exclusively-owned, unregistered blocks to the free list.  Validates
+        every bid BEFORE mutating anything — a guard firing mid-loop must
+        not leave the pool half-reclaimed."""
         for bid in bids:
             if self._ref.get(bid) != 1:
                 raise RuntimeError(
-                    f"rollback of block {bid} with refcount "
-                    f"{self._ref.get(bid)}: only exclusively-owned "
-                    f"speculative tail blocks may roll back")
+                    f"{verb} of block {bid} with refcount "
+                    f"{self._ref.get(bid)}: only exclusively-owned blocks "
+                    f"may be reclaimed (shared blocks outlive the {verb})")
             if bid in self._key_of:
                 raise RuntimeError(
-                    f"rollback of registered prefix block {bid}: "
-                    f"shared-prefix blocks never roll back")
+                    f"{verb} of registered prefix block {bid}: published "
+                    f"prefix blocks park via decref, never free forcibly")
         for bid in bids:
             del self._ref[bid]
             self._free.append(bid)
-        # Freed blocks are available again by construction, so re-reserving
-        # them cannot fail.
-        self._reserved += len(bids)
+
+    def preempt(self, bids: list[int]) -> None:
+        """Forcibly reclaim a preemption victim's exclusively-owned blocks.
+
+        Unlike :meth:`rollback` these blocks held *live* tokens (the victim
+        recomputes them on resume via chunked prefill) and no reservation
+        is re-created — the scheduler cancels the victim's remaining
+        reservation separately and the freed capacity is exactly what the
+        preemption exists to hand to other requests.
+
+        Shared and registered blocks must NOT come through here: a
+        refcount > 1 block is mapped by another request's table and a
+        registered block is a published prompt prefix — both must survive
+        the victim (the scheduler ``decref``\\ s them instead, parking
+        registered blocks in the LRU cache so resume re-maps them for
+        free).  Validation runs before any mutation, so a refused call
+        leaves the pool untouched.
+        """
+        self._free_exclusive(bids, "preempt")
 
     # ------------------------------------------------------------------
     # prefix sharing

@@ -145,6 +145,23 @@ def test_rollback_refuses_shared_blocks():
     assert pool.available() == avail
 
 
+def test_rollback_unreserved_frees_without_earmarking():
+    """A draft block claimed from oversubscribed *spare* capacity rolls
+    back with ``reserve=False``: the block frees outright and no phantom
+    reservation appears — the spare capacity stays shared."""
+    pool = KVBlockPool(4, 8)                 # capacity 3, nothing reserved
+    b = pool.alloc()                         # unreserved spare-capacity claim
+    assert pool.available() == 2
+    pool.rollback([b], reserve=False)
+    assert pool.live_blocks() == 0
+    assert pool.available() == 3             # back to fully shared
+    # the same guards still apply
+    shared = pool.alloc()
+    pool.incref(shared)
+    with pytest.raises(RuntimeError):
+        pool.rollback([shared], reserve=False)
+
+
 def test_rollback_then_realloc_is_clean():
     """A rolled-back block re-enters circulation like any freed block:
     fresh refcount 1, no registry residue."""
@@ -156,6 +173,82 @@ def test_rollback_then_realloc_is_clean():
     assert c == b
     pool.decref(c)
     assert pool.available() == pool.capacity
+
+
+def test_unreserved_alloc_respects_reservations():
+    """An unreserved alloc must never consume capacity another request
+    reserved: with every free block spoken for, only reserved claims
+    succeed — the guarantee oversubscribed claiming leans on when it
+    checks ``available()`` before allocating without a reservation."""
+    pool = KVBlockPool(4, 8)                 # capacity 3
+    pool.reserve(3)
+    with pytest.raises(RuntimeError):
+        pool.alloc()
+    b = pool.alloc(reserved=True)            # reserved claims still work
+    with pytest.raises(RuntimeError):
+        pool.alloc()
+    pool.decref(b)
+    pool.cancel_reservation(2)
+    assert pool.alloc() in (1, 2, 3)         # spare capacity: unreserved ok
+
+
+def test_preempt_returns_blocks_without_reservation():
+    """Preemption frees a victim's exclusive blocks WITHOUT re-creating
+    reservation units (contrast rollback): the freed capacity is exactly
+    what the preemption hands to other requests.  Accounting balances —
+    available() grows by the freed count."""
+    pool = KVBlockPool(5, 8)                 # capacity 4
+    pool.reserve(4)
+    victim = [pool.alloc(reserved=True) for _ in range(3)]
+    assert pool.available() == 0             # 3 live + 1 outstanding unit
+    pool.preempt(victim[1:])
+    assert pool.live_blocks() == 1
+    assert pool.available() == 2             # freed, NOT re-reserved
+    # the survivor unit + freed capacity are claimable again
+    got = [pool.alloc(reserved=True), pool.alloc(), pool.alloc()]
+    assert sorted(got) == sorted(victim[1:] + [4])
+    for b in [victim[0]] + got:
+        pool.decref(b)
+    assert pool.available() == pool.capacity
+
+
+def test_preempt_refuses_shared_and_registered_blocks():
+    """Shared (refcount > 1) and registered prefix blocks must outlive a
+    preemption — the scheduler decrefs them instead.  A mixed list with
+    one bad bid mutates nothing (validate-before-mutate)."""
+    pool = KVBlockPool(6, 8)
+    shared = pool.alloc()
+    pool.incref(shared)
+    with pytest.raises(RuntimeError):
+        pool.preempt([shared])
+    reg = pool.alloc()
+    pool.register((3, 4), reg)
+    with pytest.raises(RuntimeError):
+        pool.preempt([reg])
+    assert pool.live_blocks() == 2
+    assert pool.lookup((3, 4)) == reg        # registry intact
+    pool.decref(reg)                         # drop the lookup ref
+    scratch = pool.alloc()
+    avail = pool.available()
+    with pytest.raises(RuntimeError):
+        pool.preempt([scratch, shared])
+    assert pool.refcount(scratch) == 1       # untouched by the refusal
+    assert pool.available() == avail
+
+
+def test_preempted_registered_block_parks_for_resume():
+    """The resume-for-free path: a victim's registered prefix block is
+    decref'd (not preempted) and parks in the LRU — a later lookup under
+    the same chain key resurrects it with its content intact."""
+    pool = KVBlockPool(4, 8)
+    b = pool.alloc()
+    pool.register((1, 2, 3), b)
+    assert pool.refcount(b) == 1 and pool.is_registered(b)
+    pool.decref(b)                           # the victim's reference
+    assert pool.refcount(b) == 0
+    assert pool.available() == 3             # parked blocks stay claimable
+    assert pool.lookup((1, 2, 3)) == b       # resume re-maps for free
+    pool.decref(b)
 
 
 def test_constructor_validation():

@@ -465,6 +465,159 @@ def test_paged_bitstopper_window_layer_fused():
     assert fused == fallback
 
 
+# ---------------------------------------------------------------------------
+# oversubscription: victim preemption + lossless resume
+# ---------------------------------------------------------------------------
+
+# Pool sized so worst-case reservations of the three requests (4 blocks
+# each at page 8) cannot coexist, but their *actual* footprints can — the
+# shape oversubscription exists for.  max_new is large enough that decode
+# outgrows the prompt-sized reservations and a mid-decode claim must
+# preempt.
+_OS = dict(max_slots=3, page_size=8, pool_blocks=10, oversubscribe=True)
+
+
+def _os_reqs(cfg, max_new=16, seed=0):
+    return _reqs(cfg, (12, 9, 11), max_new=max_new, seed=seed)
+
+
+def test_oversubscribed_preemption_bitident_greedy(model):
+    """Acceptance: an oversubscribed trace completes with >=1 observed
+    preemption and its token streams are bit-identical to an uncontended
+    (worst-case-reserved, ample pool) run — the preempted request resumes
+    via chunked-prefill recompute without perturbing a single token."""
+    cfg, params = model
+    a = _os_reqs(cfg)
+    _paged(cfg, params, max_slots=3).generate(a, seed=0)
+    eng = _paged(cfg, params, **_OS)
+    b = _os_reqs(cfg)
+    eng.generate(b, seed=0)
+    assert eng.counters["preemptions"] >= 1
+    assert [r.generated for r in a] == [r.generated for r in b]
+    assert sum(r.preemptions for r in b) == eng.counters["preemptions"]
+    # full cleanup: no leaked blocks or reservations after the trace
+    assert eng.pool.available() == eng.pool.capacity
+    assert (eng.table == 0).all()
+
+
+def test_oversubscribed_preemption_bitident_sampled(model):
+    """Seeded sampling: keys are (seed, rid, token index), so preemption
+    and resume cannot shift the sampled trace either."""
+    cfg, params = model
+    a = _os_reqs(cfg)
+    _paged(cfg, params, max_slots=3, temperature=1.0).generate(a, seed=7)
+    eng = _paged(cfg, params, temperature=1.0, **_OS)
+    b = _os_reqs(cfg)
+    eng.generate(b, seed=7)
+    assert eng.counters["preemptions"] >= 1
+    assert [r.generated for r in a] == [r.generated for r in b]
+
+
+def test_oversubscribed_lifo_policy_bitident(model):
+    """The victim-choice policy changes WHO recomputes, never WHAT is
+    served."""
+    cfg, params = model
+    a = _os_reqs(cfg)
+    _paged(cfg, params, max_slots=3).generate(a, seed=0)
+    eng = _paged(cfg, params, preempt_policy="lifo", **_OS)
+    b = _os_reqs(cfg)
+    eng.generate(b, seed=0)
+    assert eng.counters["preemptions"] >= 1
+    assert [r.generated for r in a] == [r.generated for r in b]
+
+
+def test_oversubscribed_prefix_sharing_resumes_shared_blocks(model):
+    """With a common system prompt, preemption decrefs the shared prefix
+    blocks (they stay registered) and resume re-maps them for free — and
+    the served tokens still match the uncontended unshared run."""
+    cfg, params = model
+    sys_prompt = np.random.default_rng(42).integers(
+        0, cfg.vocab, 16, dtype=np.int32)
+
+    def reqs():
+        r = np.random.default_rng(5)
+        return [Request(prompt=np.concatenate(
+                            [sys_prompt,
+                             r.integers(0, cfg.vocab, L, dtype=np.int32)]),
+                        max_new_tokens=16)
+                for L in (3, 7, 5)]
+
+    a = reqs()
+    _paged(cfg, params, max_slots=3, prefix_sharing=False).generate(
+        a, seed=0)
+    eng = _paged(cfg, params, pool_blocks=11, max_slots=3, page_size=8,
+                 oversubscribe=True)
+    b = reqs()
+    eng.generate(b, seed=0)
+    assert eng.counters["preemptions"] >= 1
+    assert eng.counters["prefix_hit_tokens"] > 0
+    assert [r.generated for r in a] == [r.generated for r in b]
+    assert eng.pool.available() == eng.pool.capacity
+
+
+def test_oversubscribed_speculative_bitident(model):
+    """Speculative decoding under oversubscription: draft blocks are never
+    worth a preemption (drafts truncate instead), and the combined
+    spec+preemption trace still equals plain uncontended serving."""
+    cfg, params = model
+    a = _os_reqs(cfg)
+    _paged(cfg, params, max_slots=3).generate(a, seed=0)
+    eng = _paged(cfg, params, speculative="ngram", draft_k=3, **_OS)
+    b = _os_reqs(cfg)
+    eng.generate(b, seed=0)
+    assert eng.counters["preemptions"] >= 1
+    assert [r.generated for r in a] == [r.generated for r in b]
+    assert eng.pool.available() == eng.pool.capacity
+
+
+def test_oversubscribed_spec_rollback_spare_capacity(model):
+    """Adversarial drafter: every draft is (almost always) rejected, so
+    draft-tail blocks — claimed from the admission reservation AND from
+    oversubscribed spare capacity — are constantly rolled back.  Spare
+    claims must free outright (no phantom reservations earmarking shared
+    capacity), the pool must drain clean, and the trace stays lossless."""
+    cfg, params = model
+
+    class RepeatDrafter:
+        def propose(self, ctx, k):
+            return [int(ctx[-1])] * k
+
+    a = _os_reqs(cfg, max_new=24)
+    _paged(cfg, params, max_slots=3).generate(a, seed=0)
+    eng = _paged(cfg, params, speculative="ngram", draft_k=6,
+                 **_OS)
+    eng._drafter = RepeatDrafter()
+    b = _os_reqs(cfg, max_new=24)
+    eng.generate(b, seed=0)
+    assert [r.generated for r in a] == [r.generated for r in b]
+    assert eng.counters["spec_proposed"] > eng.counters["spec_accepted"]
+    assert eng.pool.available() == eng.pool.capacity
+    assert eng.pool._reserved == 0
+
+
+def test_oversubscribed_bitstopper_greedy_parity(model):
+    """The sparse serving path preempts and resumes too: BitStopper greedy
+    under an oversubscribed pool matches its own uncontended run (the
+    rewritten KV rows are recomputed from the same hidden states)."""
+    cfg, params = model
+    cfgb = cfg.replace(attn_impl="bitstopper_xla",
+                       bitstopper=BitStopperConfig(alpha=0.8))
+    a = _os_reqs(cfgb)
+    _paged(cfgb, params, max_slots=3).generate(a, seed=0)
+    eng = _paged(cfgb, params, **_OS)
+    b = _os_reqs(cfgb)
+    eng.generate(b, seed=0)
+    assert eng.counters["preemptions"] >= 1
+    assert [r.generated for r in a] == [r.generated for r in b]
+
+
+def test_oversubscribe_requires_paged_engine(model):
+    cfg, params = model
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(cfg, params,
+                                 ServeConfig(oversubscribe=True))
+
+
 def test_serve_config_validation():
     with pytest.raises(ValueError):
         ServeConfig(max_slots=0)
@@ -486,6 +639,8 @@ def test_serve_config_validation():
         ServeConfig(temperature=-0.5)
     with pytest.raises(ValueError):
         ServeConfig(cache_dtype="float16")
+    with pytest.raises(ValueError):
+        ServeConfig(preempt_policy="roulette")
     # valid construction resolves defaults
     scfg = ServeConfig(max_len=64, page_size=16)
     assert scfg.resolved_max_blocks() == 4
