@@ -1,0 +1,16 @@
+#!/usr/bin/env python
+"""Shim: run the static analyzers without setting PYTHONPATH.
+
+Equivalent to ``PYTHONPATH=src python -m repro.analysis ...`` from the
+repo root; all flags pass through (see ``repro/analysis/__main__.py``).
+"""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,7 +6,25 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+# Static analysis first (docs/analysis.md): Pallas kernel contracts for
+# every entry point, KV-pool sanitizer self-check, repo-rule lint.  Runs
+# in seconds and fails fast on structural violations — before the long
+# suite ever compiles a kernel.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.analysis --check --out results/ANALYSIS.json
+
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+
+# Pool-lifecycle tests again under the shadow-ledger sanitizer + freed-
+# page poisoning (docs/analysis.md): every alloc/decref/rollback/preempt
+# in the serving tests is replayed and audited, and stale-page reads
+# become loud.  Scoped to the suites that construct pools — the env var
+# only changes pool construction, so the rest of the suite is identical.
+# (The ci workflow's `sanitize` job runs the FULL suite this way.)
+REPRO_SANITIZE=1 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -x -q tests/test_pool_sanitizer.py tests/test_kv_pool.py \
+        tests/test_serving.py tests/test_speculative.py
 
 # Docs gate: every internal link / file reference in README.md and
 # docs/*.md must resolve — stale docs fail the build.

@@ -1,0 +1,19 @@
+"""Static-analysis / sanitizer subsystem.
+
+Three parts, one CLI (``python -m repro.analysis``):
+
+* :mod:`repro.analysis.kernel_contracts` — statically verifies every
+  Pallas entry point's BlockSpecs, index maps, scalar-prefetch operands,
+  scratch shapes and ``interpret`` routing against a shape-sweep registry.
+* :mod:`repro.analysis.pool_sanitizer` — opt-in (``REPRO_SANITIZE=1``)
+  shadow ledger + poison mode wrapping :class:`repro.serving.kv_pool.
+  KVBlockPool`.
+* :mod:`repro.analysis.lint` — repo-rule AST lint (private cross-module
+  imports, unread config fields, device ops in the host allocator,
+  nondeterminism).
+
+See ``docs/analysis.md`` for what each checker proves and how to extend
+the registries.
+"""
+
+from repro.analysis.report import Finding, summarize  # noqa: F401

@@ -1,0 +1,101 @@
+"""``python -m repro.analysis`` — run the repo's static analyzers.
+
+Sections (select with ``--only``, default all three):
+
+* ``kernels`` — Pallas kernel-contract checker (abstract-evals every
+  ``pl.pallas_call`` across shape sweeps; see ``kernel_contracts.py``).
+* ``pool``    — KV-pool sanitizer self-check (a blind detector would let
+  CI keep trusting a broken ledger; see ``pool_sanitizer.py``).
+* ``lint``    — repo-rule AST lint over ``src/`` (``lint.py``).
+
+Exit status: 0 when clean; with ``--check``, 1 when any finding is
+reported (CI gates on this).  A machine-readable per-rule summary is
+always written to ``--out`` (default ``results/ANALYSIS.json``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+
+from repro.analysis.lint import LINT_RULES, run_lint
+from repro.analysis.pool_sanitizer import POOL_RULES, run_pool_selfcheck
+from repro.analysis.report import KERNEL_RULES, summarize
+
+# kernel_contracts itself imports jax — deferred below so `--only lint`
+# and `--only pool` stay instant.
+ALL_RULES = KERNEL_RULES + POOL_RULES + LINT_RULES
+
+SECTIONS = ("kernels", "pool", "lint")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static analyzers: Pallas kernel contracts, KV-pool "
+                    "sanitizer self-check, repo-rule lint.")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if any finding is reported (CI gate)")
+    ap.add_argument("--only", choices=SECTIONS, action="append",
+                    help="run only this section (repeatable)")
+    ap.add_argument("--root", default=".",
+                    help="repo root for the lint section (default: cwd)")
+    ap.add_argument("--out", default="results/ANALYSIS.json",
+                    help="JSON report path (default: results/ANALYSIS.json)")
+    ap.add_argument("--list", action="store_true",
+                    help="list rule ids and kernel entry points, then exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        from repro.analysis.kernel_contracts import CONTRACTS
+        print("rules:")
+        for r in ALL_RULES:
+            print(f"  {r}")
+        print("kernel entry points:")
+        for c in CONTRACTS:
+            print(f"  {c.module}")
+        return 0
+
+    sections = tuple(args.only) if args.only else SECTIONS
+    findings = []
+    meta: dict = {"sections": list(sections)}
+
+    if "kernels" in sections:
+        from repro.analysis.kernel_contracts import run_kernel_contracts
+        kf, km = run_kernel_contracts()
+        findings += kf
+        meta["kernel_entry_points"] = km["entry_points"]
+        meta["cases"] = km["cases"]
+        meta["pallas_calls_checked"] = km["pallas_calls_checked"]
+    if "pool" in sections:
+        pf, pm = run_pool_selfcheck()
+        findings += pf
+        meta["pool_scenarios"] = pm["scenarios"]
+    if "lint" in sections:
+        findings += run_lint(args.root)
+
+    rules = summarize(findings, ALL_RULES)
+    report = {
+        "ok": not findings,
+        "rules": rules,
+        "findings": [dataclasses.asdict(f) for f in findings],
+        **meta,
+    }
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2) + "\n")
+
+    for f in findings:
+        print(f.format())
+    n_rules = sum(1 for v in rules.values() if v)
+    print(f"repro.analysis: {len(findings)} finding(s) across "
+          f"{n_rules} rule(s); sections: {', '.join(sections)}; "
+          f"report: {out}")
+    return 1 if (args.check and findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

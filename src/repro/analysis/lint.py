@@ -1,0 +1,298 @@
+"""Repo-rule AST lint — rules distilled from bugs earlier PRs actually fixed.
+
+Rules (each maps to one :class:`~repro.analysis.report.Finding` rule id):
+
+* ``repo-private-import`` — no cross-module use of ``_``-private names:
+  neither ``from repro.x import _name`` nor ``alias._name`` where
+  ``alias`` is an imported module.  Private helpers either stay private
+  or get promoted to a public name with a contract.
+* ``repo-config-field-unread`` — every declared ``ModelConfig`` /
+  ``AttnConfig`` / ``ServeConfig`` field must be *read* somewhere in the
+  runtime tree (the ``cfg.causal``-silently-ignored bug class: a config
+  knob that nothing reads is a lie to its caller).
+* ``repo-allocator-device-ops`` — the host-side block allocator
+  (``serving/kv_pool.py``, and this package's sanitizer) is consulted
+  between device steps at zero dispatch cost; importing ``jax`` there
+  would put device dispatch on the scheduler hot path.
+* ``repo-nondeterminism`` — no ``time.time``/``time.time_ns`` or stdlib
+  ``random`` in ``src/`` (benchmarks live outside ``src/``): serving is
+  schedule-invariant and replayable by construction.  Exemption:
+  ``time.time()`` compared against file mtimes (``getmtime``/
+  ``st_mtime``) is wall-clock vs wall-clock and stays.
+
+All rules work on the AST only — no imports of the scanned code — so the
+lint runs in milliseconds and can't be confused by import-time side
+effects.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+
+from repro.analysis.report import Finding
+
+LINT_RULES = [
+    "repo-private-import",
+    "repo-config-field-unread",
+    "repo-allocator-device-ops",
+    "repo-nondeterminism",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigSpec:
+    """Where a config dataclass lives and which extra trees count as
+    readers (the runtime surfaces; tests don't keep a field alive)."""
+
+    path: str        # file defining the dataclass, relative to root
+    cls: str         # dataclass name
+
+
+DEFAULT_CONFIG_SPECS = [
+    ConfigSpec("src/repro/models/config.py", "ModelConfig"),
+    ConfigSpec("src/repro/models/attention.py", "AttnConfig"),
+    ConfigSpec("src/repro/serving/engine.py", "ServeConfig"),
+]
+
+# Host-side allocator modules: pure Python by contract.
+DEFAULT_ALLOCATOR_PATHS = [
+    "src/repro/serving/kv_pool.py",
+    "src/repro/analysis/pool_sanitizer.py",
+]
+
+_DEVICE_MODULES = ("jax", "jaxlib")
+
+
+def _parse(path: pathlib.Path) -> ast.Module | None:
+    try:
+        return ast.parse(path.read_text())
+    except SyntaxError:
+        return None
+
+
+def _module_aliases(tree: ast.Module) -> set[str]:
+    """Names bound to *modules* in this file (``import x as y``, and
+    ``from pkg import mod``-style imports of submodules)."""
+    aliases: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases.add(a.asname or a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            # `from repro.models import transformer as T` binds a module;
+            # `from repro.models.transformer import forward` binds an
+            # object.  Statically we can't always tell, but in this repo
+            # submodule imports always use an alias or a lowercase module
+            # name that is then used with attribute access — treating
+            # every from-import name as a *potential* module alias only
+            # matters if a private attribute is read off it, which is
+            # exactly the pattern the rule forbids either way (private
+            # attribute of another module's object).
+            for a in node.names:
+                aliases.add(a.asname or a.name)
+    return aliases
+
+
+def check_private_imports(files: list[pathlib.Path],
+                          root: pathlib.Path) -> list[Finding]:
+    out: list[Finding] = []
+    for f in files:
+        tree = _parse(f)
+        if tree is None:
+            continue
+        rel = str(f.relative_to(root))
+        aliases = _module_aliases(tree)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    if a.name.startswith("_") and not a.name.startswith("__"):
+                        out.append(Finding(
+                            "repo-private-import", rel, node.lineno,
+                            f"imports private name `{a.name}` from "
+                            f"`{node.module}` — promote it to a public "
+                            f"name or keep it module-local"))
+            elif isinstance(node, ast.Attribute):
+                if (node.attr.startswith("_")
+                        and not node.attr.startswith("__")
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id in aliases):
+                    out.append(Finding(
+                        "repo-private-import", rel, node.lineno,
+                        f"reads private attribute `{node.value.id}."
+                        f"{node.attr}` of an imported module"))
+    return out
+
+
+def _dataclass_fields(tree: ast.Module, cls: str) -> list[tuple[str, int]]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == cls:
+            return [(st.target.id, st.lineno) for st in node.body
+                    if isinstance(st, ast.AnnAssign)
+                    and isinstance(st.target, ast.Name)]
+    return []
+
+
+def check_unread_config_fields(
+        files: list[pathlib.Path], root: pathlib.Path,
+        config_specs: list[ConfigSpec] | None = None) -> list[Finding]:
+    """A field is *read* if `.field` appears as an attribute access or as
+    a string constant argument to ``getattr`` anywhere in the scanned
+    runtime tree.  Deliberately conservative (any object's attribute of
+    the same name counts): false negatives beat noisy false positives in
+    a gate that blocks CI."""
+    specs = DEFAULT_CONFIG_SPECS if config_specs is None else config_specs
+    reads: set[str] = set()
+    for f in files:
+        tree = _parse(f)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Attribute):
+                reads.add(node.attr)
+            elif (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "getattr"):
+                for a in node.args:
+                    if isinstance(a, ast.Constant) and isinstance(a.value,
+                                                                  str):
+                        reads.add(a.value)
+    out: list[Finding] = []
+    for spec in specs:
+        path = root / spec.path
+        if not path.exists():
+            continue
+        tree = _parse(path)
+        if tree is None:
+            continue
+        for name, lineno in _dataclass_fields(tree, spec.cls):
+            if name not in reads:
+                out.append(Finding(
+                    "repo-config-field-unread", spec.path, lineno,
+                    f"{spec.cls}.{name} is never read — either wire it "
+                    f"into the runtime or delete the field"))
+    return out
+
+
+def check_allocator_device_ops(
+        root: pathlib.Path,
+        allocator_paths: list[str] | None = None) -> list[Finding]:
+    paths = (DEFAULT_ALLOCATOR_PATHS if allocator_paths is None
+             else allocator_paths)
+    out: list[Finding] = []
+    for rel in paths:
+        f = root / rel
+        if not f.exists():
+            continue
+        tree = _parse(f)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            bad = None
+            if isinstance(node, ast.Import):
+                bad = next((a.name for a in node.names
+                            if a.name.split(".")[0] in _DEVICE_MODULES),
+                           None)
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                if node.module.split(".")[0] in _DEVICE_MODULES:
+                    bad = node.module
+            if bad is not None:
+                out.append(Finding(
+                    "repo-allocator-device-ops", rel, node.lineno,
+                    f"host-side allocator imports `{bad}` — the scheduler "
+                    f"consults this module between device steps and must "
+                    f"stay dispatch-free"))
+    return out
+
+
+def _stmt_has_mtime(stmt: ast.stmt) -> bool:
+    for node in ast.walk(stmt):
+        if isinstance(node, ast.Attribute) and node.attr in ("getmtime",
+                                                             "st_mtime"):
+            return True
+    return False
+
+
+def check_nondeterminism(files: list[pathlib.Path],
+                         root: pathlib.Path) -> list[Finding]:
+    out: list[Finding] = []
+    for f in files:
+        tree = _parse(f)
+        if tree is None:
+            continue
+        rel = str(f.relative_to(root))
+        # stdlib-`random` bindings in this file (np.random / jax.random
+        # are seeded and deterministic — not this rule's business).
+        random_aliases: set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "random":
+                        random_aliases.add(a.asname or "random")
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "random":
+                    out.append(Finding(
+                        "repo-nondeterminism", rel, node.lineno,
+                        "imports from stdlib `random` — use a seeded "
+                        "np.random.Generator or jax.random instead"))
+        # Parent map so the mtime exemption can inspect the *smallest
+        # enclosing statement* of each time.time() call — the whole
+        # comparison expression, without double-visiting nested bodies.
+        parent: dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                parent[child] = node
+
+        def enclosing_stmt(node: ast.AST) -> ast.stmt | None:
+            while node is not None and not isinstance(node, ast.stmt):
+                node = parent.get(node)
+            return node
+
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                fn = node.func
+                if (isinstance(fn, ast.Attribute)
+                        and isinstance(fn.value, ast.Name)
+                        and fn.value.id == "time"
+                        and fn.attr in ("time", "time_ns")):
+                    stmt = enclosing_stmt(node)
+                    if stmt is None or not _stmt_has_mtime(stmt):
+                        out.append(Finding(
+                            "repo-nondeterminism", rel, node.lineno,
+                            "wall-clock `time.time` in src/ — use "
+                            "time.monotonic for durations (mtime "
+                            "comparisons are exempt)"))
+            elif (isinstance(node, ast.Attribute)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id in random_aliases):
+                out.append(Finding(
+                    "repo-nondeterminism", rel, node.lineno,
+                    f"stdlib random use `{node.value.id}.{node.attr}` "
+                    f"in src/"))
+    return out
+
+
+def run_lint(root: pathlib.Path | str,
+             src: str = "src",
+             read_trees: tuple[str, ...] = ("src", "benchmarks", "examples"),
+             config_specs: list[ConfigSpec] | None = None,
+             allocator_paths: list[str] | None = None) -> list[Finding]:
+    """Run every lint rule over ``root/src`` (reads for the unread-field
+    rule are additionally counted in ``benchmarks/`` and ``examples/`` —
+    a field only a benchmark reads is still live config)."""
+    root = pathlib.Path(root)
+    src_files = sorted((root / src).rglob("*.py"))
+    read_files: list[pathlib.Path] = []
+    for tree_dir in read_trees:
+        d = root / tree_dir
+        if d.exists():
+            read_files.extend(sorted(d.rglob("*.py")))
+    findings: list[Finding] = []
+    findings += check_private_imports(src_files, root)
+    findings += check_unread_config_fields(read_files, root, config_specs)
+    findings += check_allocator_device_ops(root, allocator_paths)
+    findings += check_nondeterminism(src_files, root)
+    # deterministic report order
+    findings.sort(key=lambda f: (f.rule, f.file, f.line))
+    return findings

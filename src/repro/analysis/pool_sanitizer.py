@@ -1,0 +1,449 @@
+"""Shadow-ledger sanitizer + poison mode for :class:`KVBlockPool`.
+
+Opt-in via ``REPRO_SANITIZE=1`` (any non-empty value other than ``0``):
+:func:`make_kv_pool` — the engine's pool constructor — then returns a
+:class:`SanitizedKVBlockPool`, which *independently replays* every pool
+operation in a shadow ledger and cross-checks the real allocator's state
+after each one.  The ledger never trusts the pool's own bookkeeping, so
+a bug in either side trips a :class:`PoolInvariantError` at the exact
+operation that diverged, with a trailing op log for diagnosis.
+
+Invariants (rule ids as reported by the CLI meta-check and the negative
+tests):
+
+* ``pool-conservation``    — free + live + parked == capacity, and
+  outstanding reservations never exceed reclaimable capacity.
+* ``pool-refcount``        — refcounts are >= 1 for live blocks and the
+  shadow's counts match the pool's exactly (a drift is a leak).
+* ``pool-use-after-free``  — no incref/decref of a block that is not
+  live (double-free, stale handle).
+* ``pool-rollback-reservation`` — ``rollback(reserve=True)`` re-creates
+  exactly ``len(bids)`` reservation units.
+* ``pool-registered-protection`` — rollback/preempt never touch a
+  registered prefix block or a shared (refcount > 1) block.
+* ``pool-poisoned-read``   — poison mode (below) makes violations of the
+  fill-level/stale-table masking invariant loud.
+
+**Poison mode**: when the engine hands :func:`make_kv_pool` a
+``poison_cb``, every block that returns to the free list (decref-to-free,
+rollback, preempt, LRU eviction of a parked block at realloc) is reported
+so the engine can overwrite the block's pool pages — K/V with
+``POISON_KV``, positions with ``POISON_POS``, packed ``kq`` plane bytes
+with ``POISON_BYTE``.  Any read that reaches a freed page through a stale
+block table or a fill-level hole then produces wildly wrong, greppable
+values instead of silently reusing stale KV.  The sentinels are finite
+(not NaN) so correctly-masked dead lanes (``jnp.where`` selection, gated
+``lax.cond`` branches) stay bit-identical: ``0 * POISON_KV == 0``.
+
+This module is host-side allocator code: pure Python, **no jax imports**
+(the ``repo-allocator-device-ops`` lint rule applies here too) — the
+device-side poison writes live in the engine's callback.
+"""
+
+from __future__ import annotations
+
+import collections
+import os
+from typing import Callable
+
+from repro.serving.kv_pool import KVBlockPool
+
+# Poison sentinels (engine-side callbacks use these; finite on purpose —
+# masked-out lanes multiply by zero and must stay exactly zero).
+POISON_KV = 1.0e4       # f32/bf16 K and V pool pages
+POISON_POS = -7777      # position plane: passes causal/fill masks (unlike
+                        # POS_SENTINEL) so the poisoned K/V gets *read*
+POISON_BYTE = 0xAB      # packed kq bit-plane bytes
+
+
+def sanitize_enabled() -> bool:
+    v = os.environ.get("REPRO_SANITIZE", "")
+    return v not in ("", "0")
+
+
+class PoolInvariantError(AssertionError):
+    """A pool operation violated a ledger invariant.  ``rule`` is the
+    machine-readable class; the message carries the trailing op log."""
+
+    def __init__(self, rule: str, message: str, oplog=()):
+        self.rule = rule
+        tail = "\n  ".join(str(op) for op in oplog)
+        super().__init__(
+            f"[{rule}] {message}" + (f"\nlast ops:\n  {tail}" if tail else ""))
+
+
+class _Shadow:
+    """Independent replay of KVBlockPool semantics (including LRU order
+    of the parked cache — eviction order is observable)."""
+
+    def __init__(self, pool_blocks: int, prefix_sharing: bool):
+        self.capacity = pool_blocks - 1
+        self.prefix_sharing = prefix_sharing
+        self.free: collections.deque[int] = collections.deque(
+            range(1, pool_blocks))
+        self.live: dict[int, int] = {}
+        self.cached: collections.OrderedDict[tuple, int] = \
+            collections.OrderedDict()
+        self.registry: dict[tuple, int] = {}
+        self.key_of: dict[int, tuple] = {}
+        self.reserved = 0
+
+
+class SanitizedKVBlockPool(KVBlockPool):
+    """Drop-in KVBlockPool that replays every op in a shadow ledger and
+    audits pool-vs-ledger agreement after each one."""
+
+    def __init__(self, pool_blocks: int, page_size: int,
+                 prefix_sharing: bool = True,
+                 poison_cb: Callable[[list[int]], None] | None = None,
+                 oplog_len: int = 32):
+        super().__init__(pool_blocks, page_size,
+                         prefix_sharing=prefix_sharing)
+        self._shadow = _Shadow(pool_blocks, prefix_sharing)
+        self._poison_cb = poison_cb
+        self._oplog: collections.deque = collections.deque(maxlen=oplog_len)
+
+    # -- helpers -------------------------------------------------------
+
+    def _fail(self, rule: str, msg: str):
+        raise PoolInvariantError(rule, msg, self._oplog)
+
+    def _poison(self, bids: list[int]) -> None:
+        if self._poison_cb is not None and bids:
+            for bid in bids:
+                if bid == 0:
+                    self._fail("pool-conservation",
+                               "attempt to poison the null block")
+            self._poison_cb(list(bids))
+
+    def _audit(self) -> None:
+        s = self._shadow
+        # conservation — on the shadow AND on the real pool, separately,
+        # then set-for-set agreement (order included for the LRU cache).
+        for name, free, live, cached, reserved in (
+                ("shadow", s.free, s.live, s.cached, s.reserved),
+                ("pool", self._free, self._ref, self._cached,
+                 self._reserved)):
+            if len(free) + len(live) + len(cached) != s.capacity:
+                self._fail(
+                    "pool-conservation",
+                    f"{name}: free({len(free)}) + live({len(live)}) + "
+                    f"parked({len(cached)}) != capacity({s.capacity})")
+            if reserved > len(free) + len(cached):
+                self._fail(
+                    "pool-conservation",
+                    f"{name}: {reserved} reserved exceeds reclaimable "
+                    f"{len(free) + len(cached)}")
+        if set(self._free) != set(s.free):
+            self._fail("pool-conservation",
+                       f"free-list drift: pool {sorted(self._free)} vs "
+                       f"ledger {sorted(s.free)}")
+        if dict(self._ref) != s.live:
+            self._fail("pool-refcount",
+                       f"refcount drift: pool {dict(self._ref)} vs "
+                       f"ledger {s.live}")
+        for bid, n in s.live.items():
+            if n < 1:
+                self._fail("pool-refcount",
+                           f"block {bid} live with refcount {n}")
+        if list(self._cached.items()) != list(s.cached.items()):
+            self._fail("pool-conservation",
+                       "parked-LRU drift between pool and ledger")
+        if dict(self._registry) != s.registry:
+            self._fail("pool-conservation", "prefix-registry drift")
+        if self._reserved != s.reserved:
+            self._fail("pool-rollback-reservation",
+                       f"reservation drift: pool {self._reserved} vs "
+                       f"ledger {s.reserved}")
+
+    # -- audited operations -------------------------------------------
+
+    def reserve(self, n: int) -> None:
+        self._oplog.append(("reserve", n))
+        super().reserve(n)
+        self._shadow.reserved += n
+        self._audit()
+
+    def cancel_reservation(self, n: int) -> None:
+        self._oplog.append(("cancel_reservation", n))
+        in_alloc = getattr(self, "_in_alloc", False)
+        super().cancel_reservation(n)
+        if not in_alloc:
+            self._shadow.reserved -= n
+            self._audit()
+
+    def alloc(self, reserved: bool = False) -> int:
+        self._oplog.append(("alloc", reserved))
+        s = self._shadow
+        # base-class alloc consumes a reservation via cancel_reservation;
+        # flag so the nested call doesn't double-replay.
+        self._in_alloc = True
+        try:
+            bid = super().alloc(reserved=reserved)
+        finally:
+            self._in_alloc = False
+        evicted = False
+        if bid in s.free:
+            s.free.remove(bid)
+        elif s.cached:
+            lru_key = next(iter(s.cached))
+            if s.cached[lru_key] != bid:
+                self._fail("pool-conservation",
+                           f"alloc evicted block {bid}, but ledger LRU "
+                           f"head is {s.cached[lru_key]}")
+            del s.cached[lru_key]
+            del s.registry[lru_key]
+            del s.key_of[bid]
+            evicted = True
+        else:
+            self._fail("pool-use-after-free",
+                       f"alloc returned block {bid} that the ledger "
+                       f"holds as neither free nor parked")
+        if reserved:
+            s.reserved -= 1
+        s.live[bid] = 1
+        self._audit()
+        if evicted:
+            # the parked block's pages are dead the instant its registry
+            # entry drops — poison before the new owner writes
+            self._poison([bid])
+        return bid
+
+    def incref(self, bid: int) -> None:
+        self._oplog.append(("incref", bid))
+        if bid not in self._shadow.live:
+            self._fail("pool-use-after-free",
+                       f"incref of non-live block {bid}")
+        super().incref(bid)
+        self._shadow.live[bid] += 1
+        self._audit()
+
+    def decref(self, bid: int) -> None:
+        self._oplog.append(("decref", bid))
+        s = self._shadow
+        if bid not in s.live:
+            self._fail("pool-use-after-free",
+                       f"decref of non-live block {bid} "
+                       f"(double-free or stale handle)")
+        super().decref(bid)
+        if s.live[bid] > 1:
+            s.live[bid] -= 1
+            self._audit()
+            return
+        del s.live[bid]
+        key = s.key_of.get(bid)
+        freed = False
+        if key is not None and s.prefix_sharing:
+            s.cached[key] = bid
+            s.cached.move_to_end(key)
+        else:
+            if key is not None:
+                del s.registry[key]
+                del s.key_of[bid]
+            s.free.append(bid)
+            freed = True
+        self._audit()
+        if freed:
+            self._poison([bid])
+
+    def _replay_free_exclusive(self, bids: list[int], verb: str) -> None:
+        s = self._shadow
+        for bid in bids:
+            if bid not in s.live:
+                self._fail("pool-use-after-free",
+                           f"{verb} of non-live block {bid}")
+            if s.live[bid] != 1:
+                self._fail("pool-registered-protection",
+                           f"{verb} of shared block {bid} "
+                           f"(refcount {s.live[bid]})")
+            if bid in s.key_of:
+                self._fail("pool-registered-protection",
+                           f"{verb} of registered prefix block {bid}")
+        for bid in bids:
+            del s.live[bid]
+            s.free.append(bid)
+
+    def rollback(self, bids: list[int], reserve: bool = True) -> None:
+        self._oplog.append(("rollback", tuple(bids), reserve))
+        self._replay_free_exclusive(bids, "rollback")
+        reserved_before = self._reserved
+        super().rollback(bids, reserve=reserve)
+        if reserve:
+            self._shadow.reserved += len(bids)
+            if self._reserved != reserved_before + len(bids):
+                self._fail(
+                    "pool-rollback-reservation",
+                    f"rollback of {len(bids)} block(s) moved the pool's "
+                    f"reservation from {reserved_before} to "
+                    f"{self._reserved}")
+        self._audit()
+        self._poison(list(bids))
+
+    def preempt(self, bids: list[int]) -> None:
+        self._oplog.append(("preempt", tuple(bids)))
+        self._replay_free_exclusive(bids, "preempt")
+        super().preempt(bids)
+        self._audit()
+        self._poison(list(bids))
+
+    def register(self, key: tuple, bid: int) -> None:
+        self._oplog.append(("register", key, bid))
+        s = self._shadow
+        if bid not in s.live:
+            self._fail("pool-use-after-free",
+                       f"register of non-live block {bid}")
+        super().register(key, bid)
+        if s.prefix_sharing and key not in s.registry:
+            s.registry[key] = bid
+            s.key_of[bid] = key
+        self._audit()
+
+    def lookup(self, key: tuple):
+        self._oplog.append(("lookup", key))
+        s = self._shadow
+        # A live hit routes through self.incref — the audited override —
+        # so that path is already replayed; only the parked-resurrect
+        # path (which bypasses incref) needs a ledger update here.
+        bid = super().lookup(key)
+        if s.prefix_sharing and key in s.registry:
+            sbid = s.registry[key]
+            if bid != sbid:
+                self._fail("pool-conservation",
+                           f"lookup({key!r}) returned {bid}, ledger "
+                           f"registry says {sbid}")
+            if sbid not in s.live:
+                del s.cached[key]
+                s.live[sbid] = 1
+        elif bid is not None:
+            self._fail("pool-conservation",
+                       f"lookup hit {bid} for a key the ledger never "
+                       f"saw registered")
+        self._audit()
+        return bid
+
+
+POOL_RULES = [
+    "pool-conservation",
+    "pool-refcount",
+    "pool-use-after-free",
+    "pool-rollback-reservation",
+    "pool-registered-protection",
+    "pool-poisoned-read",
+]
+
+_SELF = "src/repro/analysis/pool_sanitizer.py"
+
+
+def run_pool_selfcheck():
+    """Prove the sanitizer itself works: a canned legal op sequence must
+    pass silently, and one seeded corruption per rule class must trip a
+    :class:`PoolInvariantError` carrying exactly that rule.  A detector
+    that has gone blind is worse than none — CI would keep trusting it.
+
+    Returns ``(findings, meta)`` in the same shape as the other checkers;
+    findings are emitted only when detection is broken.
+    """
+    from repro.analysis.report import Finding
+
+    findings: list[Finding] = []
+
+    # -- legal sequence must NOT raise --------------------------------
+    poisoned: list[int] = []
+    try:
+        p = SanitizedKVBlockPool(8, 16, prefix_sharing=True,
+                                 poison_cb=poisoned.extend)
+        p.reserve(2)
+        a = p.alloc(reserved=True)
+        b = p.alloc(reserved=True)
+        p.incref(a)
+        p.decref(a)
+        p.register(("k", 1), a)
+        got = p.lookup(("k", 1))          # live hit: routes via incref
+        assert got == a
+        p.decref(a)
+        p.decref(a)                       # parks (registered prefix)
+        got = p.lookup(("k", 1))          # parked hit: resurrect path
+        assert got == a
+        p.decref(a)                       # parks again
+        p.rollback([b], reserve=True)
+        p.cancel_reservation(1)
+        c = p.alloc()                     # from free list
+        p.decref(c)                       # unregistered -> truly freed
+    except Exception as e:                # noqa: BLE001 — any raise is a bug
+        findings.append(Finding(
+            "pool-conservation", _SELF, 0,
+            f"sanitizer rejected a legal op sequence: {e}"))
+    else:
+        if b not in poisoned or c not in poisoned:
+            findings.append(Finding(
+                "pool-poisoned-read", _SELF, 0,
+                f"poison callback missed freed blocks (reported "
+                f"{sorted(set(poisoned))}, expected to include {b} "
+                f"and {c}) — stale-read poisoning is dark"))
+
+    # -- each seeded corruption must trip its rule --------------------
+    def expect(rule, scenario):
+        try:
+            scenario()
+        except PoolInvariantError as e:
+            if e.rule != rule:
+                findings.append(Finding(
+                    rule, _SELF, 0,
+                    f"seeded {rule} violation detected but "
+                    f"misclassified as {e.rule}"))
+        else:
+            findings.append(Finding(
+                rule, _SELF, 0,
+                f"seeded {rule} violation went undetected — the "
+                f"sanitizer has gone blind to this class"))
+
+    def leak_block():
+        p = SanitizedKVBlockPool(8, 16)
+        p._free.pop()                     # a block vanishes
+        p.reserve(0)                      # any audited op re-audits
+
+    def refcount_drift():
+        p = SanitizedKVBlockPool(8, 16)
+        bid = p.alloc()
+        p._ref[bid] += 1                  # pool leaks a reference
+        p.reserve(0)
+
+    def double_free():
+        p = SanitizedKVBlockPool(8, 16, prefix_sharing=False)
+        bid = p.alloc()
+        p.decref(bid)
+        p.decref(bid)
+
+    def reservation_drift():
+        p = SanitizedKVBlockPool(8, 16)
+        p._reserved += 1                  # phantom reservation
+        p.reserve(0)
+
+    def rollback_registered():
+        p = SanitizedKVBlockPool(8, 16)
+        bid = p.alloc()
+        p.register(("prefix",), bid)
+        p.rollback([bid])
+
+    expect("pool-conservation", leak_block)
+    expect("pool-refcount", refcount_drift)
+    expect("pool-use-after-free", double_free)
+    expect("pool-rollback-reservation", reservation_drift)
+    expect("pool-registered-protection", rollback_registered)
+
+    meta = {"scenarios": 6}
+    return findings, meta
+
+
+def make_kv_pool(pool_blocks: int, page_size: int,
+                 prefix_sharing: bool = True,
+                 poison_cb: Callable[[list[int]], None] | None = None
+                 ) -> KVBlockPool:
+    """The engine's pool constructor: a plain :class:`KVBlockPool` unless
+    ``REPRO_SANITIZE`` opts in to the audited + poisoning wrapper."""
+    if sanitize_enabled():
+        return SanitizedKVBlockPool(pool_blocks, page_size,
+                                    prefix_sharing=prefix_sharing,
+                                    poison_cb=poison_cb)
+    return KVBlockPool(pool_blocks, page_size,
+                       prefix_sharing=prefix_sharing)

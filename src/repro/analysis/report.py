@@ -1,0 +1,49 @@
+"""Shared finding/report types for the analysis subsystem.
+
+Every checker emits :class:`Finding` records — one per violation, each
+anchored to a file and line — so the CLI can aggregate per-rule counts
+into ``results/ANALYSIS.json`` and tests can assert that a seeded
+violation is reported *where* it was seeded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# Canonical kernel-contract rule ids.  Defined here (not in
+# kernel_contracts.py) so the CLI can enumerate every rule without
+# importing jax.
+KERNEL_RULES = [
+    "kernel-index-map-bounds",
+    "kernel-output-coverage",
+    "kernel-block-divisor",
+    "kernel-tile-multiple",
+    "kernel-scalar-prefetch",
+    "kernel-interpret-routing",
+    "kernel-scratch",
+    "kernel-contract-run",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a specific source location."""
+
+    rule: str       # stable rule id, e.g. "kernel-index-map-bounds"
+    file: str       # path (repo-relative when possible)
+    line: int       # 1-based line number (0 when no better anchor exists)
+    message: str    # human-readable explanation
+
+    def format(self) -> str:
+        return f"{self.file}:{self.line}: [{self.rule}] {self.message}"
+
+
+def summarize(findings: list[Finding],
+              all_rules: list[str] | None = None) -> dict[str, int]:
+    """Per-rule finding counts.  ``all_rules`` seeds zero-count entries so
+    the JSON report shows every rule that *ran*, not just ones that
+    fired."""
+    counts: dict[str, int] = {r: 0 for r in (all_rules or [])}
+    for f in findings:
+        counts[f.rule] = counts.get(f.rule, 0) + 1
+    return counts

@@ -139,9 +139,20 @@ def list_archs() -> list[str]:
     return list(ARCHS)
 
 
+# Families the launch scripts know how to shape-check (dry-run input
+# specs and frontend stubs key off these).
+FAMILIES = frozenset({"dense", "moe", "ssm", "hybrid", "audio", "vlm"})
+
+
 def get_config(name: str, **overrides) -> ModelConfig:
     cfg = ARCHS[name]()
-    return cfg.replace(**overrides) if overrides else cfg
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if cfg.family not in FAMILIES:
+        raise ValueError(
+            f"{cfg.name}: unknown family {cfg.family!r} "
+            f"(expected one of {sorted(FAMILIES)})")
+    return cfg
 
 
 def reduced_config(name: str) -> ModelConfig:

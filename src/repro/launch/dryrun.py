@@ -108,7 +108,7 @@ def prefill_cell(cfg: ModelConfig, shape, mesh, rules):
             x = jnp.concatenate(
                 [batch["patches"].astype(x.dtype), x], axis=1)
         x = constrain(x, "batch", "seq", "embed")
-        h, _, _ = T._run_segments(params, x, jnp.arange(x.shape[1]), cfg)
+        h, _, _ = T.run_segments(params, x, jnp.arange(x.shape[1]), cfg)
         hl = Lyr.norm(params["final_norm"], h[:, -1])
         if cfg.tie_embeddings:
             return Lyr.unembed(params["embed"], hl)
@@ -241,13 +241,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     if SHAPES[shape_name].kind == "train":
         kw = {"microbatches": microbatches, "remat": remat,
               "moment_dtype": moment_dtype}
-    t0 = time.time()
+    t0 = time.monotonic()
     with use_rules(rules):
         step, specs = input_specs(cfg, shape_name, mesh, rules, **kw)
         lowered = jax.jit(step).lower(*specs)
-        t_lower = time.time() - t0
+        t_lower = time.monotonic() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.monotonic() - t0 - t_lower
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()

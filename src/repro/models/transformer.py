@@ -153,7 +153,7 @@ def _remat_wrap(fn, policy: str):
     return jax.checkpoint(fn)
 
 
-def _run_segments(params, x, positions, cfg: ModelConfig, caches=None):
+def run_segments(params, x, positions, cfg: ModelConfig, caches=None):
     """caches: None or {segN: stacked cache pytree (or list)}."""
     aux_total = jnp.zeros((), jnp.float32)
     new_caches: dict[str, Any] = {}
@@ -210,7 +210,7 @@ def forward(params, tokens, cfg: ModelConfig, caches=None,
     S = x.shape[1]
     if positions is None:
         positions = jnp.arange(S)
-    x, new_caches, aux = _run_segments(params, x, positions, cfg, caches)
+    x, new_caches, aux = run_segments(params, x, positions, cfg, caches)
     h = L.norm(params["final_norm"], x)
     if cfg.tie_embeddings:
         logits = L.unembed(params["embed"], h)

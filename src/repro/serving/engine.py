@@ -44,6 +44,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# NOTE: repro.analysis.pool_sanitizer is imported lazily at pool
+# construction — it imports serving.kv_pool, and a module-level import
+# here would be circular through serving/__init__.
 from repro.models import transformer as T
 from repro.models.attention import POS_SENTINEL, PagedLayout
 from repro.models.config import ModelConfig
@@ -647,8 +650,13 @@ class PagedEngine(_EngineCommon):
         self._chunk = scfg.resolved_chunk()
         self.layout = PagedLayout(scfg.resolved_pool_blocks(), self._page,
                                   self._mb)
-        self.pool = KVBlockPool(self.layout.pool_blocks, self._page,
-                                prefix_sharing=scfg.prefix_sharing)
+        # Under REPRO_SANITIZE=1 this is the shadow-ledger wrapper with
+        # freed-page poisoning (see analysis/pool_sanitizer.py); otherwise
+        # a plain KVBlockPool.
+        from repro.analysis.pool_sanitizer import make_kv_pool
+        self.pool = make_kv_pool(self.layout.pool_blocks, self._page,
+                                 prefix_sharing=scfg.prefix_sharing,
+                                 poison_cb=self._poison_blocks)
 
         def prefill_fn(params, tokens, caches, positions, last_idx):
             # tokens/positions [1, Sp]: one chunk of one slot's prompt,
@@ -724,6 +732,50 @@ class PagedEngine(_EngineCommon):
                          "spec_accepted": 0, "spec_bailouts": 0,
                          "preemptions": 0, "preempt_freed_blocks": 0,
                          "preempt_dropped_tokens": 0}
+
+    # ------------------------------------------------------------------
+    # sanitizer poison hook
+    # ------------------------------------------------------------------
+
+    def _poison_blocks(self, bids: list[int]) -> None:
+        """REPRO_SANITIZE poison mode: overwrite freed blocks' pool pages
+        with loud sentinels the moment they return to the free list (and
+        before any realloc can hand them to a new owner).  A read through
+        a stale block table or a fill-level hole then produces wildly
+        wrong values instead of silently reusing stale KV; correctly
+        masked paths are unaffected because every dead-lane consumer
+        multiplies by zero or selects away — finite poison stays exactly
+        maskable (``0 * POISON_KV == 0``)."""
+        if not bids or getattr(self, "caches", None) is None:
+            return
+        from repro.analysis.pool_sanitizer import (POISON_BYTE, POISON_KV,
+                                                   POISON_POS)
+        idx = jnp.asarray(sorted(set(bids)), jnp.int32)
+
+        def poison_layer(c):
+            if not isinstance(c, dict):
+                if isinstance(c, list):
+                    return [poison_layer(x) for x in c]
+                return c
+            if "table" not in c:
+                return {k: poison_layer(v) for k, v in c.items()}
+            # paged layer: stacked (scanned) layers carry a leading reps
+            # axis on every pool leaf; the table's rank tells which.
+            stacked = c["table"].ndim == 3
+
+            def pset(a, val):
+                return a.at[:, idx].set(val) if stacked else \
+                    a.at[idx].set(val)
+
+            new = dict(c)
+            new["k"] = pset(c["k"], POISON_KV)
+            new["v"] = pset(c["v"], POISON_KV)
+            new["pos"] = pset(c["pos"], POISON_POS)
+            if "kq" in c:
+                new["kq"] = pset(c["kq"], POISON_BYTE)
+            return new
+
+        self.caches = poison_layer(self.caches)
 
     # ------------------------------------------------------------------
     # capacity accounting

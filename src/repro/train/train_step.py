@@ -109,7 +109,7 @@ def loss_fn(params, batch, cfg: ModelConfig, tcfg: TrainConfig):
         x = Lyr.embed(params["embed"], tokens).astype(cfg.activation_dtype)
     x = constrain(x, "batch", "seq", "embed")
     positions = jnp.arange(x.shape[1])
-    h, _, aux = T._run_segments(params, x, positions, cfg)
+    h, _, aux = T.run_segments(params, x, positions, cfg)
     if n_patch:
         h = h[:, n_patch:]                 # loss over the text positions
         positions = positions[: h.shape[1]]

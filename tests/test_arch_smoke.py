@@ -100,8 +100,8 @@ def test_mtp_head():
     # MTP needs hidden states: recompute trunk then the extra head.
     from repro.models import layers as L
     x = L.embed(params["embed"], tokens).astype(cfg.activation_dtype)
-    from repro.models.transformer import _run_segments, mtp_logits
-    h, _, _ = _run_segments(params, x, jnp.arange(16), cfg)
+    from repro.models.transformer import run_segments, mtp_logits
+    h, _, _ = run_segments(params, x, jnp.arange(16), cfg)
     ml = mtp_logits(params, tokens, h, cfg, jnp.arange(16))
     assert ml.shape == logits.shape
     assert not bool(jnp.isnan(ml).any())

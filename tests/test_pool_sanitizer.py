@@ -1,0 +1,309 @@
+"""KV-pool sanitizer: seeded violations per rule class, poison-mode
+stale-read detection, and serving equivalence under REPRO_SANITIZE=1.
+
+Every negative test corrupts exactly one invariant and asserts the
+sanitizer reports *that* rule — a detector that fires the wrong class
+would send someone debugging the wrong subsystem.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.pool_sanitizer import (
+    POISON_BYTE,
+    POISON_KV,
+    POISON_POS,
+    PoolInvariantError,
+    SanitizedKVBlockPool,
+    make_kv_pool,
+    run_pool_selfcheck,
+    sanitize_enabled,
+)
+from repro.serving.kv_pool import KVBlockPool
+
+
+def _pool(**kw):
+    return SanitizedKVBlockPool(8, 16, **kw)
+
+
+# ---------------------------------------------------------------------------
+# gating
+# ---------------------------------------------------------------------------
+
+
+def test_factory_plain_by_default(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not sanitize_enabled()
+    p = make_kv_pool(8, 16)
+    assert type(p) is KVBlockPool
+
+
+def test_factory_sanitized_when_enabled(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize_enabled()
+    p = make_kv_pool(8, 16)
+    assert isinstance(p, SanitizedKVBlockPool)
+
+
+# ---------------------------------------------------------------------------
+# one seeded violation per rule class
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_conservation_leak():
+    """A block silently vanishing from the free list (the classic lost-
+    update) trips conservation at the next audited op."""
+    p = _pool()
+    p._free.pop()
+    with pytest.raises(PoolInvariantError) as e:
+        p.reserve(0)
+    assert e.value.rule == "pool-conservation"
+
+
+def test_seeded_refcount_drift():
+    p = _pool()
+    bid = p.alloc()
+    p._ref[bid] += 1                      # pool leaks a reference
+    with pytest.raises(PoolInvariantError) as e:
+        p.reserve(0)
+    assert e.value.rule == "pool-refcount"
+
+
+def test_seeded_double_free():
+    p = _pool(prefix_sharing=False)
+    bid = p.alloc()
+    p.decref(bid)
+    with pytest.raises(PoolInvariantError) as e:
+        p.decref(bid)
+    assert e.value.rule == "pool-use-after-free"
+
+
+def test_seeded_incref_after_free():
+    p = _pool(prefix_sharing=False)
+    bid = p.alloc()
+    p.decref(bid)
+    with pytest.raises(PoolInvariantError) as e:
+        p.incref(bid)                     # stale handle
+    assert e.value.rule == "pool-use-after-free"
+
+
+def test_seeded_reservation_drift():
+    p = _pool()
+    p._reserved += 1                      # phantom reservation
+    with pytest.raises(PoolInvariantError) as e:
+        p.reserve(0)
+    assert e.value.rule == "pool-rollback-reservation"
+
+
+def test_rollback_restores_reservation_units():
+    """rollback(reserve=True) must re-create exactly len(bids) units —
+    audited directly, and the ledger catches a pool that forgets."""
+    p = _pool()
+    p.reserve(2)
+    a = p.alloc(reserved=True)
+    b = p.alloc(reserved=True)
+    p.rollback([a, b], reserve=True)
+    assert p._reserved == 2
+    p.cancel_reservation(2)
+
+
+def test_seeded_rollback_of_registered_block():
+    p = _pool()
+    bid = p.alloc()
+    p.register(("prefix", 0), bid)
+    with pytest.raises(PoolInvariantError) as e:
+        p.rollback([bid])
+    assert e.value.rule == "pool-registered-protection"
+
+
+def test_seeded_preempt_of_shared_block():
+    p = _pool()
+    bid = p.alloc()
+    p.incref(bid)                         # shared by two sequences
+    with pytest.raises(PoolInvariantError) as e:
+        p.preempt([bid])
+    assert e.value.rule == "pool-registered-protection"
+
+
+def test_lookup_live_hit_and_resurrect_paths():
+    """Both lookup paths keep the ledger in step: a live hit routes
+    through the audited incref (and must not be double-replayed), a
+    parked hit resurrects from the LRU cache."""
+    p = _pool()
+    bid = p.alloc()
+    p.register(("sys",), bid)
+    assert p.lookup(("sys",)) == bid      # live hit
+    assert p.refcount(bid) == 2
+    p.decref(bid)
+    p.decref(bid)                         # parks
+    assert p.lookup(("sys",)) == bid      # resurrect
+    assert p.refcount(bid) == 1
+    p.decref(bid)                         # parks again; still auditable
+    p.reserve(0)
+
+
+def test_error_carries_oplog():
+    p = _pool(prefix_sharing=False)
+    bid = p.alloc()
+    p.decref(bid)
+    with pytest.raises(PoolInvariantError, match="last ops"):
+        p.decref(bid)
+
+
+# ---------------------------------------------------------------------------
+# poison mode
+# ---------------------------------------------------------------------------
+
+
+def test_poison_cb_fires_on_every_free_path():
+    """decref-to-free, rollback, preempt and LRU eviction all report the
+    dying block before it can be handed to a new owner."""
+    poisoned = []
+    p = _pool(poison_cb=poisoned.extend)
+    a = p.alloc()
+    p.decref(a)                           # unregistered -> free
+    assert a in poisoned
+
+    b = p.alloc()
+    p.rollback([b], reserve=False)
+    assert b in poisoned
+
+    c = p.alloc()
+    p.preempt([c])
+    assert c in poisoned
+
+    # LRU eviction: park every block behind a registered prefix, then
+    # drain the free list so the next alloc must evict.
+    p2_poisoned = []
+    p2 = SanitizedKVBlockPool(4, 16, poison_cb=p2_poisoned.extend)
+    parked = []
+    for i in range(3):
+        bid = p2.alloc()
+        p2.register(("k", i), bid)
+        p2.decref(bid)
+        parked.append(bid)
+    evictee = p2.alloc()                  # must evict the LRU parked block
+    assert evictee == parked[0]
+    assert p2_poisoned == [parked[0]]
+
+
+def test_poison_never_touches_null_block():
+    p = _pool(poison_cb=lambda bids: None)
+    with pytest.raises(PoolInvariantError) as e:
+        p._poison([0])
+    assert e.value.rule == "pool-conservation"
+
+
+def test_poisoned_read_is_loud():
+    """The end-to-end property the rule class names: data written to a
+    block, read back through a *stale* block-table entry after the block
+    was freed, comes back as the poison sentinel — not the stale KV."""
+    pages = np.zeros((8, 16), np.float32)
+
+    def cb(bids):
+        pages[np.asarray(bids)] = POISON_KV
+
+    p = _pool(prefix_sharing=False, poison_cb=cb)
+    bid = p.alloc()
+    pages[bid] = 3.25                     # the sequence writes its KV
+    stale_table = np.array([bid])         # someone keeps the old table
+    p.decref(bid)                         # block freed -> pages poisoned
+    gathered = pages[stale_table]
+    assert np.all(gathered == POISON_KV), \
+        "stale-table gather returned stale KV instead of poison"
+
+
+# ---------------------------------------------------------------------------
+# self-check + serving integration
+# ---------------------------------------------------------------------------
+
+
+def test_selfcheck_clean():
+    findings, meta = run_pool_selfcheck()
+    assert findings == []
+    assert meta["scenarios"] == 6
+
+
+@pytest.fixture(scope="module")
+def model():
+    from repro.configs import reduced_config
+    from repro.models import transformer as T
+    cfg = reduced_config("stablelm-1.6b")
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _paged_engine(cfg, params):
+    from repro.serving import PagedEngine, ServeConfig
+    return PagedEngine(cfg, params, ServeConfig(
+        max_len=64, max_slots=2, prefill_bucket=8, page_size=8))
+
+
+def _reqs(cfg, lens, max_new=4, seed=0):
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab, L, dtype=np.int32),
+                    max_new_tokens=max_new)
+            for L in lens]
+
+
+def _paged_layers(c):
+    if isinstance(c, dict):
+        if "table" in c:
+            yield c
+        else:
+            for v in c.values():
+                yield from _paged_layers(v)
+    elif isinstance(c, (list, tuple)):
+        for v in c:
+            yield from _paged_layers(v)
+
+
+def test_sanitized_serving_token_equivalence(model, monkeypatch):
+    """The wrapper + poison mode must not perturb served tokens: freed
+    pages are dead by construction, so poisoning them is invisible to a
+    correct engine."""
+    cfg, params = model
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    plain = _reqs(cfg, (5, 9, 7))
+    _paged_engine(cfg, params).generate(plain, seed=0)
+
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    sanitized = _reqs(cfg, (5, 9, 7))
+    _paged_engine(cfg, params).generate(sanitized, seed=0)
+    assert [r.generated for r in plain] == [r.generated for r in sanitized]
+
+
+def test_sanitized_engine_poisons_freed_pool_pages(model, monkeypatch):
+    """After requests complete their blocks return to the free list, and
+    the engine's poison callback must have overwritten those pool pages
+    with the sentinels — a stale block-table read would be loud."""
+    cfg, params = model
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    eng = _paged_engine(cfg, params)
+    assert isinstance(eng.pool, SanitizedKVBlockPool)
+    reqs = _reqs(cfg, (5, 9))
+    eng.generate(reqs, seed=0)
+    assert all(len(r.generated) == 4 for r in reqs)
+
+    free = sorted(set(eng.pool._free) - {0})
+    assert free, "pool should have free blocks after all requests finish"
+    layers = list(_paged_layers(eng.caches))
+    assert layers, "paged engine must expose paged cache layers"
+    found_poisoned = False
+    for c in layers:
+        stacked = c["table"].ndim == 3
+        for bid in free:
+            k = np.asarray(c["k"][:, bid] if stacked else c["k"][bid])
+            pos = np.asarray(c["pos"][:, bid] if stacked else c["pos"][bid])
+            if np.all(k == POISON_KV):
+                assert np.all(pos == POISON_POS)
+                if "kq" in c:
+                    kq = np.asarray(c["kq"][:, bid] if stacked
+                                    else c["kq"][bid])
+                    assert np.all(kq == POISON_BYTE)
+                found_poisoned = True
+    assert found_poisoned, \
+        "no freed pool page carries the poison sentinel — freed-page " \
+        "poisoning is dark"
