@@ -30,6 +30,7 @@ the ``--smoke --check`` CI gate asserts): ``docs/benchmarks.md``.
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import os
 import sys
@@ -39,6 +40,14 @@ if __package__ in (None, ""):                 # direct `python benchmarks/..`
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
 
+if "--host-devices" in sys.argv:
+    # Must land in XLA_FLAGS before jax is imported: forces N host (CPU)
+    # devices so --mesh runs on a single-machine CI runner.
+    _n = int(sys.argv[sys.argv.index("--host-devices") + 1])
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" --xla_force_host_platform_device_count"
+                                 f"={_n}")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -46,9 +55,41 @@ import numpy as np
 from repro.core.besf import BitStopperConfig, besf_attention_decode, \
     besf_attention_decode_paged
 from repro.kernels.paged_decode import paged_bitstopper_decode
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
 from repro.models.attention import gather_paged_view
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def roofline_fields(fn, q, modeled_bytes):
+    """Roofline fields for one decode-step callable (launch/roofline.py
+    constants + launch/hlo_cost.py HLO accounting).
+
+    ``hlo_flops``/``hlo_bytes`` come from the compiled module — per-device
+    when the step was compiled under a mesh (SPMD modules are per-device).
+    ``roofline_fraction`` is modeled-minimal HBM time over the compiled
+    program's bound time, max(t_compute, t_hbm): 1.0 means the program
+    moves exactly the modeled intrinsic bytes and nothing else dominates;
+    the shortfall is XLA-side overhead traffic (gather materialization,
+    layout copies) the fused path exists to eliminate."""
+    try:
+        txt = jax.jit(fn).lower(q).compile().as_text()
+    except Exception as e:                       # interpret-mode edge cases
+        return {"roofline_note": f"hlo unavailable: {type(e).__name__}"}
+    cost = analyze_hlo(txt)
+    t_comp = cost.flops / PEAK_FLOPS
+    t_hbm = cost.bytes / HBM_BW
+    bound = max(t_comp, t_hbm)
+    return {
+        "hlo_flops": cost.flops,
+        "hlo_bytes": cost.bytes,
+        "t_compute_s": t_comp,
+        "t_hbm_s": t_hbm,
+        "bound": "hbm" if t_hbm >= t_comp else "compute",
+        "roofline_fraction": (modeled_bytes / HBM_BW) / bound if bound
+                             else 0.0,
+    }
 
 
 def build_pool_state(B, MB, bs, Hkv, D, seed=0):
@@ -186,7 +227,8 @@ def bench_config(state, bs, fill, cfg, reps, run_kernel):
     rows = []
     for impl, fn, r, bts, extra in steps:
         rows.append(dict(impl=impl, ms_per_step=_timeit(fn, q, reps=r),
-                         modeled_hbm_bytes_per_step=bts, **extra))
+                         modeled_hbm_bytes_per_step=bts, **extra,
+                         **roofline_fields(fn, q, bts)))
 
     for r in rows:
         r.update(fill=fill, pool_blocks=int(1 + B * MB),
@@ -266,6 +308,112 @@ def run_sweep(args, cfg, bs, B, Hkv, D, mbs, fills, reps):
     return all_rows
 
 
+def run_sharded(args, cfg, bs, B, Hkv, D, MB, fills, reps, mesh):
+    """Sharded decode rows: the serving shard_map (KV heads over "model",
+    slots over "data") around the paged oracle, timed on the mesh, with
+    *per-device* modeled bytes from per-shard oracle stats.
+
+    Each shard fetches plane/V traffic only for its ``Hkv/tp`` heads, and
+    its per-page LATS round count is the max over *fewer* heads — so
+    per-device bytes are <= single-device/tp by construction; the rows
+    quantify how close the split comes to the ideal 1/tp.  Output is
+    asserted equal to the single-device oracle at every fill (up to XLA
+    per-shape reduction-order ulps; see the inline note)."""
+    from repro.models.attention import _shard_paged_attention
+    from repro.sharding.rules import make_serve_rules
+
+    tp = mesh.shape["model"]
+    rules = make_serve_rules(mesh)
+    state = build_pool_state(B, MB, bs, Hkv, D, seed=0)
+    q, k_pool, v_pool = state["q"], state["k_pool"], state["v_pool"]
+    table = state["table"]
+    itemsize = k_pool.dtype.itemsize
+    Hl = Hkv // tp
+    rows = []
+    for fill in fills:
+        n_live = max(1, round(MB * fill))
+        lengths = jnp.full((B,), n_live * bs, jnp.int32)
+        q_pos = lengths - 1
+
+        def model_bytes(st, heads):
+            plane = int(np.asarray(st.rounds).sum()) * (bs // 8) * heads * D
+            v = int(np.asarray(st.v_fetched).sum()) * bs * heads * D * itemsize
+            return plane + v
+
+        # Single-device reference: the bit-identity target + global bytes.
+        ref = besf_attention_decode_paged(
+            q, k_pool, v_pool, table, lengths, q_pos,
+            state["k_amax"], state["v_amax"], cfg=cfg)
+        global_bytes = model_bytes(ref, Hkv)
+
+        # Per-device modeled bytes: the oracle at each shard's local
+        # geometry (exactly what that device's shard_map body computes).
+        per_dev = []
+        for s in range(tp):
+            hs = slice(s * Hl, (s + 1) * Hl)
+            st = besf_attention_decode_paged(
+                q[:, hs], k_pool[:, :, hs], v_pool[:, :, hs], table,
+                lengths, q_pos, state["k_amax"][hs], state["v_amax"][hs],
+                cfg=cfg)
+            per_dev.append(model_bytes(st, Hl))
+
+        call = functools.partial(besf_attention_decode_paged, cfg=cfg)
+
+        @jax.jit
+        def sharded_step(q, lengths=lengths, q_pos=q_pos):
+            return _shard_paged_attention(
+                call, rules, q, k_pool, v_pool, table, lengths, q_pos,
+                state["k_amax"], state["v_amax"])
+
+        out = jax.block_until_ready(sharded_step(q))
+        # Survivor sets are identical per head (pruning is per-head; the
+        # page's shared round counter only keeps feeding already-dead
+        # heads), so the only sharded-vs-single difference is XLA
+        # reassociating reductions when it compiles the smaller per-shard
+        # shapes — ulp-level.  Bit-identity of full serving *traces*
+        # (the invariant that matters) is asserted token-for-token in
+        # tests/test_serving_sharded.py and serve_throughput.py.
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref.out),
+                                   rtol=0, atol=1e-6)
+        row = dict(impl="paged-sharded",
+                   ms_per_step=_timeit(sharded_step, q, reps=reps),
+                   modeled_hbm_bytes_per_step=max(per_dev),
+                   modeled_hbm_bytes_per_device=per_dev,
+                   single_device_bytes=global_bytes,
+                   mesh=dict(zip(mesh.axis_names, mesh.devices.shape)),
+                   fill=fill, pool_blocks=int(1 + B * MB),
+                   max_blocks_per_req=int(MB), batch=int(B),
+                   page_size=int(bs), view_tokens=int(MB * bs),
+                   live_tokens=int(n_live * bs),
+                   **roofline_fields(sharded_step, q, max(per_dev)))
+        rows.append(row)
+        print(f"[decode] MB={MB:4d} fill={fill:4.2f} paged-sharded="
+              f"{row['ms_per_step']:8.2f}ms/"
+              f"{max(per_dev) / 1024:.0f}KiB per device "
+              f"(ideal 1/tp = {global_bytes / tp / 1024:.0f}KiB)")
+    return rows
+
+
+def check_sharded(all_rows):
+    """Deterministic sharded asserts: per-device modeled bytes <= the
+    single-device row's bytes / tp (per-shard LATS terminates no later
+    over fewer heads) and within 2x of that ideal split (the KV heads
+    share the plane/V traffic roughly evenly)."""
+    seen = 0
+    for r in all_rows:
+        if r["impl"] != "paged-sharded":
+            continue
+        seen += 1
+        tp = r["mesh"]["model"]
+        ideal = r["single_device_bytes"] / tp
+        got = r["modeled_hbm_bytes_per_step"]
+        assert got <= ideal, \
+            f"per-device bytes exceed the 1/tp split: {got} > {ideal}"
+        assert got >= 0.5 * ideal, \
+            f"per-device bytes implausibly far below 1/tp: {got} vs {ideal}"
+    assert seen, "no paged-sharded rows to check"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -277,6 +425,16 @@ def main():
                          "(slow in interpret mode; by default only the "
                          "smallest config runs it)")
     ap.add_argument("--alpha", type=float, default=0.6)
+    ap.add_argument("--mesh", default=None, metavar="DP,TP",
+                    help="also run the sharded serving path (shard_map: KV "
+                         "heads over 'model', batch over 'data') on the "
+                         "smallest pool: emits paged-sharded rows with "
+                         "per-device modeled bytes and asserts "
+                         "bit-identity vs single-device")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force N host (CPU) devices via XLA_FLAGS so "
+                         "--mesh runs on a single machine (consumed "
+                         "before jax import)")
     ap.add_argument("--timing-retries", type=int, default=1,
                     help="re-measure the sweep this many times before a "
                          "wall-clock assertion failure is fatal (CPU CI "
@@ -295,7 +453,28 @@ def main():
     fills = [0.5, 1.0] if args.smoke else [0.25, 0.5, 0.75, 1.0]
     reps = 2 if args.smoke else 5
 
-    all_rows = run_sweep(args, cfg, bs, B, Hkv, D, mbs, fills, reps)
+    mesh = None
+    if args.mesh is not None:
+        try:
+            dp, tp = (int(x) for x in args.mesh.split(","))
+        except ValueError:
+            ap.error(f"--mesh expects 'dp,tp' (got {args.mesh!r})")
+        n_dev = len(jax.devices())
+        if dp * tp > n_dev:
+            ap.error(f"--mesh {dp},{tp} needs {dp * tp} devices, "
+                     f"{n_dev} visible (use --host-devices on CPU)")
+        if Hkv % tp != 0:
+            ap.error(f"--mesh tp={tp} must divide n_kv_heads={Hkv}")
+        mesh = jax.make_mesh((dp, tp), ("data", "model"))
+
+    def measure():
+        rows = run_sweep(args, cfg, bs, B, Hkv, D, mbs, fills, reps)
+        if mesh is not None:
+            rows += run_sharded(args, cfg, bs, B, Hkv, D, mbs[0], fills,
+                                reps, mesh)
+        return rows
+
+    all_rows = measure()
 
     def write_report(rows):
         report = {
@@ -320,6 +499,8 @@ def main():
 
     if args.check:
         check_bytes(all_rows)
+        if mesh is not None:
+            check_sharded(all_rows)
         for attempt in range(args.timing_retries + 1):
             try:
                 check_timing(all_rows)
@@ -330,8 +511,7 @@ def main():
                 print(f"[decode] timing check failed ({e}); re-measuring "
                       f"serially (attempt {attempt + 2}/"
                       f"{args.timing_retries + 1})")
-                all_rows = run_sweep(args, cfg, bs, B, Hkv, D, mbs, fills,
-                                     reps)
+                all_rows = measure()
                 # the artifact must hold the rows the check passed on,
                 # not the jittered sweep the retry rejected
                 write_report(all_rows)

@@ -35,9 +35,19 @@ any host.  ``--out`` writes every trace's rows to
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
+import sys
 import time
+
+if "--host-devices" in sys.argv:
+    # Must land in XLA_FLAGS before jax is imported: forces N host (CPU)
+    # devices so --mesh runs on a single-machine CI runner.
+    _n = int(sys.argv[sys.argv.index("--host-devices") + 1])
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" --xla_force_host_platform_device_count"
+                                 f"={_n}")
 
 import jax
 import numpy as np
@@ -127,8 +137,10 @@ def _row(name, engine, n_tok, dt):
 
 
 def run(arch="stablelm-1.6b", impl="xla", alpha=0.6, n_requests=8,
-        slots=4, seed=0, lens=(8, 24, 40), new_lo=8, new_hi=24):
-    """Mixed-length trace: paged vs contiguous vs static-bucket."""
+        slots=4, seed=0, lens=(8, 24, 40), new_lo=8, new_hi=24, mesh=None):
+    """Mixed-length trace: paged vs contiguous vs static-bucket.  With a
+    ``mesh``, a fourth ``paged-sharded`` arm serves the same trace over the
+    (data, model) device mesh and must emit bit-identical tokens."""
     cfg = reduced_config(arch).replace(
         attn_impl=impl, bitstopper=BitStopperConfig(alpha=alpha))
     params = T.init_model(jax.random.PRNGKey(0), cfg)
@@ -139,14 +151,27 @@ def run(arch="stablelm-1.6b", impl="xla", alpha=0.6, n_requests=8,
     rng = np.random.default_rng(seed)
     trace = make_trace(rng, cfg.vocab, n_requests, lens, new_lo, new_hi)
 
-    rows = []
-    for name, eng in (
+    rows, outs = [], {}
+    arms = [
         ("paged", PagedEngine(cfg, params, scfg)),
         ("continuous", ContinuousBatchingEngine(cfg, params, scfg)),
         ("static-bucket", StaticBucketEngine(cfg, params, scfg)),
-    ):
-        n, dt, eng, _ = _timed(eng, trace, seed)
-        rows.append(_row(name, eng, n, dt))
+    ]
+    if mesh is not None:
+        arms.append(("paged-sharded", PagedEngine(
+            cfg, params, dataclasses.replace(scfg, mesh=mesh))))
+    for name, eng in arms:
+        n, dt, eng, reqs = _timed(eng, trace, seed)
+        row = _row(name, eng, n, dt)
+        if name == "paged-sharded":
+            row["mesh"] = dict(zip(mesh.axis_names, mesh.devices.shape))
+        rows.append(row)
+        outs[name] = [r.generated for r in reqs]
+    if mesh is not None:
+        # The standing serving invariant, now across devices: the sharded
+        # engine must re-serve the exact single-device token streams.
+        assert outs["paged-sharded"] == outs["paged"], \
+            "sharded serving diverged from single-device paged serving"
     return rows
 
 
@@ -291,13 +316,30 @@ def main():
     ap.add_argument("--out", default=None,
                     help="write all trace rows to this JSON path "
                          "(default: results/BENCH_serve.json)")
+    ap.add_argument("--mesh", default=None, metavar="DP,TP",
+                    help="add a paged-sharded arm to the mixed trace: "
+                         "serve over a (data, model) mesh and assert "
+                         "tokens bit-identical to the single-device paged "
+                         "arm.  Needs dp*tp devices (see --host-devices)")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force this many host (CPU) devices via XLA_FLAGS "
+                         "(parsed before jax import; enables --mesh on a "
+                         "single-machine runner)")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh is not None:
+        dp, tp = (int(x) for x in args.mesh.split(","))
+        if dp * tp > len(jax.devices()):
+            ap.error(f"--mesh {dp},{tp} needs {dp * tp} devices, "
+                     f"{len(jax.devices())} visible (use --host-devices)")
+        mesh = jax.make_mesh((dp, tp), ("data", "model"))
 
     kw = dict(arch=args.arch, impl=args.impl, alpha=args.alpha,
               n_requests=args.requests, slots=args.slots, seed=args.seed)
     if args.smoke:
         kw.update(n_requests=3, slots=2)
-        rows = run(**kw, lens=(5, 9), new_lo=3, new_hi=4)
+        rows = run(**kw, lens=(5, 9), new_lo=3, new_hi=4, mesh=mesh)
         srows = run_shared_prefix(**kw, prefix_len=16, tail_lens=(3, 7),
                                   new_lo=3, new_hi=4)
         orows = run_oversubscribed(**dict(kw, n_requests=3, slots=3),
@@ -305,14 +347,18 @@ def main():
                                    new_long=16, long_every=1,
                                    pool_blocks=10, check=args.check)
     else:
-        rows = run(**kw)
+        rows = run(**kw, mesh=mesh)
         srows = run_shared_prefix(**kw, prefix_len=args.prefix_len)
         orows = run_oversubscribed(**kw, check=args.check)
 
     _print_rows(f"mixed trace arch={args.arch} impl={args.impl} "
                 f"requests={kw['n_requests']} slots={kw['slots']}", rows)
-    speedup = rows[0]["tok_per_s"] / rows[-1]["tok_per_s"]
+    static = next(r for r in rows if r["engine"] == "static-bucket")
+    speedup = rows[0]["tok_per_s"] / static["tok_per_s"]
     print(f"  paged/static throughput ratio: {speedup:.2f}x")
+    if mesh is not None:
+        print(f"  paged-sharded arm (mesh {args.mesh}): tokens bit-identical"
+              f" to single-device paged")
 
     _print_rows(f"shared-prefix trace prefix_len="
                 f"{16 if args.smoke else args.prefix_len}", srows)

@@ -1,0 +1,180 @@
+#!/usr/bin/env python
+"""Perf-trajectory CI gate: compare a fresh ``--smoke --check`` benchmark
+run against its committed baseline.
+
+Every CI run re-executes the three benchmark smokes (decode_microbench,
+spec_decode_bench, serve_throughput) into ``/tmp``; this script then
+joins the fresh rows against the committed ``results/BENCH_*_smoke.json``
+baselines and asserts the *deterministic* fields stayed within a ratio
+tolerance.  Wall-clock fields (``seconds``, ``*_per_sec``, ``ms_*``) are
+never compared — CI runners jitter — but the modeled-traffic and
+scheduler-counter fields are reproducible on any machine, so a regression
+in them means the perf model or the scheduler actually changed:
+
+* decode:  modeled HBM bytes per step (the early-termination traffic
+  model) per (impl, pool size, fill).
+* spec:    decode ticks, tokens/tick, acceptance rate, modeled KV read
+  bytes per token, per (arm, draft_k, temperature).
+* serve:   token/prefill/decode/preemption counters and resident KV
+  bytes per engine arm, per scenario section.
+
+Rows present only in the fresh run (for example sharded arms on a runner
+with forced host devices) are ignored; every **baseline** row must still
+be matched, so arms can be added without blessing but not silently lost.
+
+    python scripts/check_bench.py decode /tmp/BENCH_decode_smoke.json
+    python scripts/check_bench.py serve  /tmp/BENCH_serve_smoke.json
+    python scripts/check_bench.py spec   /tmp/BENCH_spec_smoke.json
+
+Regenerate a baseline intentionally with ``--bless`` (copies the fresh
+report over the committed one; commit the diff):
+
+    python scripts/check_bench.py decode /tmp/BENCH_decode_smoke.json --bless
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Per-bench schema: where the row lists live inside the report, which
+# fields identify a row, and which deterministic fields are gated.
+BENCHES = {
+    "decode": {
+        "baseline": "results/BENCH_decode_smoke.json",
+        "sections": [("rows", ("impl", "max_blocks_per_req", "fill"))],
+        "fields": ("modeled_hbm_bytes_per_step", "live_tokens",
+                   "view_tokens", "pool_blocks", "batch", "page_size"),
+    },
+    "spec": {
+        "baseline": "results/BENCH_spec_smoke.json",
+        "sections": [("rows", ("arm", "draft_k", "temperature"))],
+        "fields": ("tokens", "decode_ticks", "tokens_per_tick",
+                   "acceptance_rate", "spec_ticks", "spec_bailouts",
+                   "modeled_kv_read_bytes_per_token"),
+    },
+    "serve": {
+        "baseline": "results/BENCH_serve_smoke.json",
+        "sections": [("mixed", ("engine",)),
+                     ("shared_prefix", ("engine",)),
+                     ("oversubscribed", ("engine",))],
+        "fields": ("tokens", "prefill_tokens", "prefix_hit_tokens",
+                   "decode_tokens", "decode_steps", "decode_kv_tokens",
+                   "requests_finished", "preemptions",
+                   "preempt_freed_blocks", "kv_bytes_resident",
+                   "pool_blocks", "peak_live_blocks"),
+    },
+}
+
+
+def _rows(report, section):
+    node = report.get(section)
+    if node is None:
+        return None
+    return node if isinstance(node, list) else node.get("rows")
+
+
+def _key(row, key_fields):
+    return tuple(row.get(k) for k in key_fields)
+
+
+def _within(base, fresh, rtol):
+    if base is None or fresh is None:
+        return base is None and fresh is None
+    if isinstance(base, bool) or isinstance(fresh, bool) \
+            or not isinstance(base, (int, float)) \
+            or not isinstance(fresh, (int, float)):
+        return base == fresh
+    if base == fresh:
+        return True
+    if base == 0:
+        return fresh == 0
+    return abs(fresh - base) <= rtol * abs(base)
+
+
+def compare(bench, fresh_path, baseline_path, rtol):
+    spec = BENCHES[bench]
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    with open(baseline_path) as f:
+        base = json.load(f)
+
+    problems = []
+    checked = 0
+    for section, key_fields in spec["sections"]:
+        brows, frows = _rows(base, section), _rows(fresh, section)
+        if brows is None:
+            continue                       # section absent from baseline
+        if frows is None:
+            problems.append(f"[{section}] missing from the fresh report")
+            continue
+        fresh_by_key = {_key(r, key_fields): r for r in frows}
+        for brow in brows:
+            key = _key(brow, key_fields)
+            frow = fresh_by_key.get(key)
+            where = f"[{section}] {dict(zip(key_fields, key))}"
+            if frow is None:
+                problems.append(f"{where}: baseline row missing from the "
+                                f"fresh run")
+                continue
+            for field in spec["fields"]:
+                if field not in brow:
+                    continue
+                bval, fval = brow[field], frow.get(field)
+                checked += 1
+                if not _within(bval, fval, rtol):
+                    problems.append(f"{where}.{field}: baseline {bval!r} "
+                                    f"vs fresh {fval!r} "
+                                    f"(tolerance {rtol:.0%})")
+    return checked, problems
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("bench", choices=sorted(BENCHES))
+    ap.add_argument("fresh", help="fresh --smoke --check report (JSON)")
+    ap.add_argument("--baseline", default=None,
+                    help="override the committed baseline path")
+    ap.add_argument("--rtol", type=float, default=0.25,
+                    help="relative tolerance on numeric fields "
+                         "(default 0.25)")
+    ap.add_argument("--bless", action="store_true",
+                    help="copy the fresh report over the baseline instead "
+                         "of comparing (then commit the diff)")
+    args = ap.parse_args()
+
+    baseline = args.baseline or os.path.join(REPO,
+                                             BENCHES[args.bench]["baseline"])
+    if args.bless:
+        os.makedirs(os.path.dirname(baseline), exist_ok=True)
+        shutil.copyfile(args.fresh, baseline)
+        print(f"[check_bench] blessed {args.fresh} -> {baseline}")
+        return 0
+    if not os.path.exists(baseline):
+        print(f"[check_bench] FAIL: no baseline at {baseline}\n"
+              f"  generate one: python scripts/check_bench.py "
+              f"{args.bench} {args.fresh} --bless")
+        return 1
+
+    checked, problems = compare(args.bench, args.fresh, baseline, args.rtol)
+    for p in problems:
+        print(f"[check_bench] {args.bench}: {p}")
+    if problems:
+        print(f"[check_bench] FAIL: {args.bench} drifted from "
+              f"{os.path.relpath(baseline, REPO)} "
+              f"({len(problems)} field(s); intentional? re-bless with "
+              f"--bless and commit)")
+        return 1
+    print(f"[check_bench] OK: {args.bench} matches "
+          f"{os.path.relpath(baseline, REPO)} "
+          f"({checked} deterministic fields within {args.rtol:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

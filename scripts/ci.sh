@@ -39,6 +39,10 @@ python scripts/check_docs.py
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/serve_throughput.py --smoke --check \
         --out /tmp/BENCH_serve_smoke.json
+# Perf-trajectory gate: fresh deterministic counters vs the committed
+# baseline (results/BENCH_serve_smoke.json) — scheduler/traffic drift
+# fails CI; bless intentional changes (scripts/check_bench.py --bless).
+python scripts/check_bench.py serve /tmp/BENCH_serve_smoke.json
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m repro.launch.serve --requests 2 --slots 2 \
         --min-prompt 4 --max-prompt 8 --new-tokens 3 --shared-prefix 8 \
@@ -59,6 +63,9 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/decode_microbench.py --smoke --check \
         --out /tmp/BENCH_decode_smoke.json
+# Perf-trajectory gate: the modeled early-termination traffic per
+# (impl, pool, fill) must match results/BENCH_decode_smoke.json.
+python scripts/check_bench.py decode /tmp/BENCH_decode_smoke.json
 
 # Speculative-serve smoke: the n-gram drafter through BOTH verify paths
 # (fused Sq-tiled kernel in interpret mode, then the pure-JAX fallback) —
@@ -78,3 +85,6 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/spec_decode_bench.py --smoke --check \
         --out /tmp/BENCH_spec_smoke.json
+# Perf-trajectory gate: acceptance rate, ticks and modeled KV traffic
+# per speculative arm must match results/BENCH_spec_smoke.json.
+python scripts/check_bench.py spec /tmp/BENCH_spec_smoke.json

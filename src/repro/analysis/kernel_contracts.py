@@ -398,6 +398,13 @@ def _decode_cases() -> list[Case]:
         mk(2, 4, 2, 8, 8, 3, 5, None, True),
         mk(1, 2, 2, 16, 16, 2, 4, 8, False),
         mk(2, 8, 2, 128, 128, 2, 4, None, True, tile_check=True),
+        # Sharded serving (ServeConfig.mesh) calls the kernel inside
+        # shard_map at per-shard geometry: local Hkv = n_kv_heads / tp
+        # (grouped Q heads ride along), local batch = slots / dp.  The
+        # contract must hold at these shapes too — e.g. tp=2 over the
+        # Hq4/Hkv2 case above, down to a single local KV head.
+        mk(1, 2, 1, 8, 8, 3, 5, None, True),
+        mk(1, 4, 1, 128, 128, 2, 4, None, True, tile_check=True),
     ]
 
 
@@ -440,6 +447,11 @@ def _verify_cases() -> list[Case]:
         mk(2, 2, 2, 1, 8, 8, 2, 4, None, True),
         mk(1, 3, 4, 2, 16, 8, 3, 5, 4, False),
         mk(1, 2, 4, 2, 128, 128, 2, 4, None, True, tile_check=True),
+        # Per-shard geometry under ServeConfig.mesh (tp=2 over the
+        # Hq4/Hkv2 cases above): the Sq-tiled verify kernel must also
+        # hold its contract at local Hkv = 1 with grouped Q heads.
+        mk(1, 3, 2, 1, 16, 8, 3, 5, 4, False),
+        mk(1, 2, 2, 1, 128, 128, 2, 4, None, True, tile_check=True),
     ]
 
 

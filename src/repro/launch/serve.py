@@ -106,8 +106,30 @@ def main():
                          "change, only how many verify forwards they take")
     ap.add_argument("--draft-k", type=int, default=4,
                     help="draft tokens proposed per speculative tick")
+    ap.add_argument("--mesh", default=None, metavar="DP,TP",
+                    help="paged engine: serve over a (data, model) device "
+                         "mesh — slots shard over the dp axis, KV heads "
+                         "(paged pools + per-head BESF attention) over tp. "
+                         "Output is bit-identical to single-device "
+                         "(docs/serving.md).  Needs dp*tp visible devices "
+                         "(CPU: XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh is not None:
+        if args.engine != "paged":
+            ap.error("--mesh requires --engine paged")
+        try:
+            dp, tp = (int(x) for x in args.mesh.split(","))
+        except ValueError:
+            ap.error(f"--mesh expects 'dp,tp' (got {args.mesh!r})")
+        n_dev = len(jax.devices())
+        if dp * tp > n_dev:
+            ap.error(f"--mesh {dp},{tp} needs {dp * tp} devices, "
+                     f"{n_dev} visible")
+        mesh = jax.make_mesh((dp, tp), ("data", "model"))
 
     cfg = reduced_config(args.arch).replace(
         attn_impl=args.impl,
@@ -123,7 +145,7 @@ def main():
             args.fused_decode],
         speculative=args.speculative, draft_k=args.draft_k,
         oversubscribe=args.oversubscribe,
-        preempt_policy=args.preempt_policy)
+        preempt_policy=args.preempt_policy, mesh=mesh)
     if args.speculative != "off" and args.engine != "paged":
         ap.error("--speculative requires --engine paged "
                  "(block-table rollback)")

@@ -23,6 +23,7 @@ which every causal/window test rejects.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -672,6 +673,62 @@ def gather_paged_view(cache, active=None):
     return k_view, v_view, pos_view
 
 
+def _paged_shard_rules(cfg: AttnConfig):
+    """Active mesh rules iff the paged pools are KV-head-sharded under them.
+
+    Shardable iff a >1 "model" axis divides ``n_kv_heads`` — the same
+    divisibility gate PAGED_CACHE_RULES applies to the pool placement, so
+    this and the cache layout agree by construction.  When it fails (MQA's
+    single KV head on a multi-way axis) the pools are replicated and the
+    plain single-device call is already correct."""
+    from repro.sharding.api import current_rules
+    rules = current_rules()
+    if rules is None:
+        return None
+    tp = rules.mesh.shape.get("model", 0)
+    if tp <= 1 or cfg.n_kv_heads % tp != 0:
+        return None
+    return rules
+
+
+def _shard_paged_attention(fn, rules, q, kpool, vpool, table, lengths,
+                           q_pos, k_amax, v_amax):
+    """Run a paged BESF entry point tensor-parallel over KV heads.
+
+    Per-(slot, KV head) independence is what makes this exact: every BESF
+    quantity — the LATS thresholds, bit-plane partial scores, the softmax
+    normalizer, the V accumulation — reduces only within one (slot, KV
+    head) pair, so splitting ``Hkv`` over "model" (grouped Q heads ride
+    along: Q heads are KV-major, ``h -> h // G``) changes NO float
+    reduction order.  Each shard runs the unmodified kernel/oracle at
+    local geometry ``Hkv/tp`` against its slice of the bit-plane/V pools
+    and amax scales (block table and fill levels replicated), and the
+    trailing all-gather back to replicated heads is pure data movement —
+    so the downstream ``wo`` matmul sums in single-device order and the
+    output stays bit-identical to the unsharded run.  Slots shard over
+    "data" the same way (batch rows are independent)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = rules.mesh
+    verify = q.ndim == 4                                  # [B,Sq,Hq,D]
+    bspec = rules.pspec(("batch",), (q.shape[0],))[0]
+    qspec = (P(bspec, None, "model", None) if verify
+             else P(bspec, "model", None))
+    kspec = (P(None, None, None, "model", None) if kpool.ndim == 5
+             else P(None, None, "model", None))           # kq vs f32 pool
+    lspec = P(bspec, None) if verify else P(bspec)
+    out = shard_map(
+        lambda *a: fn(*a).out, mesh=mesh,
+        in_specs=(qspec, kspec, P(None, None, "model", None),
+                  P(bspec, None), lspec, lspec, P("model"), P("model")),
+        out_specs=qspec, check_rep=False,
+    )(q, kpool, vpool, table, lengths, q_pos, k_amax, v_amax)
+    gspec = (P(bspec, None, None, None) if verify
+             else P(bspec, None, None))
+    return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, gspec))
+
+
 def _paged_cached_attention(q, cache, positions, cfg: AttnConfig):
     """Attention against the (already updated) paged cache.
 
@@ -697,16 +754,23 @@ def _paged_cached_attention(q, cache, positions, cfg: AttnConfig):
         lengths = jnp.where(real, q_pos + 1, 0)
         if cfg.fused_decode:
             from repro.kernels.paged_verify import paged_bitstopper_verify
-            res = paged_bitstopper_verify(
-                q, cache["kq"], cache["v"], cache["table"], lengths,
-                q_pos, cache["k_amax"], cache["v_amax"],
+            call = functools.partial(
+                paged_bitstopper_verify,
                 cfg=cfg.bitstopper, window=cfg.window, stats=False)
+            pool = cache["kq"]
         else:
-            res = besf_attention_verify_paged(
-                q, cache["k"], cache["v"], cache["table"], lengths,
-                q_pos, cache["k_amax"], cache["v_amax"],
+            call = functools.partial(
+                besf_attention_verify_paged,
                 cfg=cfg.bitstopper, window=cfg.window)
-        return res.out.astype(q.dtype)                        # [B,S,Hq,Dv]
+            pool = cache["k"]
+        args = (q, pool, cache["v"], cache["table"], lengths, q_pos,
+                cache["k_amax"], cache["v_amax"])
+        rules = _paged_shard_rules(cfg)
+        if rules is not None:
+            out = _shard_paged_attention(call, rules, *args)
+        else:
+            out = call(*args).out
+        return out.astype(q.dtype)                            # [B,S,Hq,Dv]
     if (cfg.impl in ("bitstopper", "bitstopper_xla") and S == 1
             and "k_amax" in cache):
         qt = q[:, 0]                                          # [B, Hq, D]
@@ -718,16 +782,23 @@ def _paged_cached_attention(q, cache, positions, cfg: AttnConfig):
         lengths = jnp.where(active, cache["length"], 0)
         if cfg.fused_decode:
             from repro.kernels.paged_decode import paged_bitstopper_decode
-            res = paged_bitstopper_decode(
-                qt, cache["kq"], cache["v"], cache["table"], lengths,
-                q_pos, cache["k_amax"], cache["v_amax"],
+            call = functools.partial(
+                paged_bitstopper_decode,
                 cfg=cfg.bitstopper, window=cfg.window, stats=False)
+            pool = cache["kq"]
         else:
-            res = besf_attention_decode_paged(
-                qt, cache["k"], cache["v"], cache["table"], lengths,
-                q_pos, cache["k_amax"], cache["v_amax"],
+            call = functools.partial(
+                besf_attention_decode_paged,
                 cfg=cfg.bitstopper, window=cfg.window)
-        return res.out[:, None].astype(q.dtype)               # [B,1,Hq,Dv]
+            pool = cache["k"]
+        args = (qt, pool, cache["v"], cache["table"], lengths, q_pos,
+                cache["k_amax"], cache["v_amax"])
+        rules = _paged_shard_rules(cfg)
+        if rules is not None:
+            out = _shard_paged_attention(call, rules, *args)
+        else:
+            out = call(*args).out
+        return out[:, None].astype(q.dtype)                   # [B,1,Hq,Dv]
     k_view, v_view, pos_view = gather_paged_view(cache, active)
     return _cached_attention(q, k_view, v_view, positions, pos_view, cfg)
 
@@ -857,6 +928,13 @@ def attention(
         k_all, v_all, k_pos, new_cache = _update_cache(cache, k, v, positions)
         out = _cached_attention(q, k_all, v_all, positions, k_pos, cfg)
 
+    # Pin the head layout entering the wo contraction via the "heads_out"
+    # logical axis.  Training rules map it to "model" (Megatron: partial
+    # products + psum against the heads_flat-sharded wo).  Serving rules
+    # map it to None: the all-gather back to replicated heads is pure data
+    # movement, so the flattened-head matmul sums in single-device order —
+    # the serving bit-identity invariant (docs/serving.md).
+    out = constrain(out, "batch", "seq", "heads_out", None)
     out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
     y = L.linear(p["wo"], out)
     y = constrain(y, "batch", "seq", "embed")

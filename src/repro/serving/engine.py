@@ -91,8 +91,22 @@ class ServeConfig:
                                       # self-drafter) | "draft" (draft
                                       # transformer; defaults to self-draft)
     draft_k: int = 4                  # draft tokens proposed per tick
+    # ---- multi-device serving (PagedEngine) ----
+    mesh: Any = None                  # jax.sharding.Mesh over ("data",
+                                      # "model"): slots shard over "data",
+                                      # KV heads (pools + attention) over
+                                      # "model"; params replicated.  Output
+                                      # stays bit-identical to mesh=None
+                                      # (docs/serving.md).  None =
+                                      # single-device.
 
     def __post_init__(self):
+        if self.mesh is not None:
+            axes = set(getattr(self.mesh, "axis_names", ()))
+            if not axes or not axes <= {"data", "model"}:
+                raise ValueError(
+                    "ServeConfig.mesh must be a Mesh over axes named "
+                    f"'data'/'model', got axes {sorted(axes)}")
         # Fail at construction with a nameable field, not deep inside jit.
         for name in ("max_len", "max_slots", "prefill_bucket", "page_size"):
             if getattr(self, name) < 1:
@@ -378,6 +392,10 @@ class ContinuousBatchingEngine(_EngineCommon):
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
+        if scfg.mesh is not None:
+            raise ValueError(
+                "ServeConfig.mesh is a PagedEngine feature (the contiguous "
+                "per-slot engine is the single-device baseline)")
         self._dtype = (jnp.bfloat16 if scfg.cache_dtype == "bfloat16"
                        else jnp.float32)
 
@@ -643,6 +661,23 @@ class PagedEngine(_EngineCommon):
         cfg = self.cfg = cfg.replace(fused_decode=bool(fused))
         self.params = params
         self.scfg = scfg
+        # Mesh-sharded serving: slots over "data", KV heads (paged pools +
+        # per-head BESF attention) over "model", parameters replicated —
+        # the layout under which sharded output is bit-identical to
+        # single-device (make_serve_rules / docs/serving.md).  The rules
+        # are entered inside the jitted closures so constrain() and the
+        # paged shard_map see them at trace time; the host-side scheduler,
+        # KVBlockPool allocator, block tables and fill levels are untouched
+        # (replicated across "model", so CoW sharing / preemption /
+        # rollback / the sanitizer ledger work unchanged).
+        # (MQA fallback: a KV-head count the model axis doesn't divide
+        # replicates the pools via PAGED_CACHE_RULES' divisibility check
+        # and skips the attention shard_map — still correct, still
+        # bit-identical, just not tensor-parallel.)
+        self._rules = None
+        if scfg.mesh is not None:
+            from repro.sharding.rules import make_serve_rules
+            self._rules = make_serve_rules(scfg.mesh)
         self._dtype = (jnp.bfloat16 if scfg.cache_dtype == "bfloat16"
                        else jnp.float32)
         self._page = scfg.page_size
@@ -658,18 +693,24 @@ class PagedEngine(_EngineCommon):
                                  prefix_sharing=scfg.prefix_sharing,
                                  poison_cb=self._poison_blocks)
 
+        from repro.sharding.api import use_rules
+
         def prefill_fn(params, tokens, caches, positions, last_idx):
             # tokens/positions [1, Sp]: one chunk of one slot's prompt,
             # written straight into the shared pool through the slot's
             # block-table row — no post-hoc cache insert.
-            logits, caches, _ = T.forward(params, tokens, cfg, caches=caches,
-                                          positions=positions)
+            with use_rules(self._rules):
+                logits, caches, _ = T.forward(params, tokens, cfg,
+                                              caches=caches,
+                                              positions=positions)
             last = jax.lax.dynamic_slice_in_dim(logits, last_idx, 1, axis=1)
             return last[:, 0], caches
 
         def decode_fn(params, tokens, caches, positions):
-            logits, caches, _ = T.forward(params, tokens, cfg, caches=caches,
-                                          positions=positions)
+            with use_rules(self._rules):
+                logits, caches, _ = T.forward(params, tokens, cfg,
+                                              caches=caches,
+                                              positions=positions)
             return logits[:, -1], caches
 
         self._prefill = jax.jit(prefill_fn)
@@ -693,9 +734,10 @@ class PagedEngine(_EngineCommon):
             cfg_v = cfg.replace(spec_verify=True)
 
             def verify_fn(params, tokens, caches, positions):
-                logits, new_caches, _ = T.forward(
-                    params, tokens, cfg_v, caches=caches,
-                    positions=positions)
+                with use_rules(self._rules):
+                    logits, new_caches, _ = T.forward(
+                        params, tokens, cfg_v, caches=caches,
+                        positions=positions)
                 # Scale-growth probe: did this draft-block write grow any
                 # layer's pool-wide running max-abs?  (Non-BitStopper
                 # impls carry no amax leaves: grew is constant False.)
@@ -714,6 +756,17 @@ class PagedEngine(_EngineCommon):
         B = scfg.max_slots
         self.caches = T.init_caches(cfg, B, scfg.max_len, self._dtype,
                                     paged=self.layout)
+        if self._rules is not None:
+            # Commit the pool leaves to their mesh placement (KV-head shard
+            # over "model", bookkeeping replicated) and the params to full
+            # replication; jit keeps these shardings on the returned caches,
+            # so every subsequent tick runs sharded without further movement.
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.sharding.rules import cache_shardings
+            self.caches = jax.device_put(
+                self.caches, cache_shardings(self._rules, self.caches))
+            self.params = jax.device_put(
+                self.params, NamedSharding(scfg.mesh, PartitionSpec()))
         self.slots: list[_PagedSlot | None] = [None] * B
         self.queue: collections.deque[Request] = collections.deque()
         self.table = np.zeros((B, self._mb), np.int32)

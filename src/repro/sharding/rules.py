@@ -68,6 +68,10 @@ AXIS_MAP_1POD = {
     "heads": "model",
     "kv_heads": "model",
     "heads_flat": "model",
+    # attention output entering wo: keep heads sharded so the wo matmul is
+    # the Megatron partial-product + psum against the heads_flat-sharded
+    # weight.  (The serving map replicates this axis instead — bit-identity.)
+    "heads_out": "model",
     "ffn": "model",
     "vocab": "model",
     "expert": "model",
@@ -94,21 +98,112 @@ CACHE_RULES: dict[str, tuple] = {
     "length": (),
 }
 
+# Paged block-pool caches (models/attention.py init_cache(paged=...)) reuse
+# some contiguous leaf names ("k", "v", "pos") at *pool* shapes, so they get
+# their own rule table, selected by the presence of the "table" leaf in the
+# same cache dict.  Pools are KV-head-sharded over "model" (per-head BESF
+# attention needs no softmax collectives); the page axis is replicated so the
+# host-side KVBlockPool allocator stays device-agnostic — one logical block
+# id space, block tables and fill levels replicated across "model".  Slots
+# ("batch") shard over "data".  Indivisible dims (MQA's single KV head on a
+# multi-way model axis) silently replicate via MeshRules.pspec.
+PAGED_CACHE_RULES: dict[str, tuple] = {
+    "k": (None, None, "kv_heads", None),          # [nb, bs, Hkv, D]
+    "v": (None, None, "kv_heads", None),
+    "kq": (None, None, None, "kv_heads", None),   # [nb, bits, bs/8, Hkv, D]
+    "k_amax": ("kv_heads",),                      # [Hkv]
+    "v_amax": ("kv_heads",),
+    "pos": (None, None),                          # [nb, bs] fill levels
+    "table": ("batch", None),                     # [slots, MB] block tables
+    "length": ("batch",),                         # [slots]
+}
+
 
 def cache_pspecs(rules: MeshRules, cache_tree):
-    """PartitionSpec tree for a decode-cache pytree (handles scan stacking)."""
-    import jax
+    """PartitionSpec tree for a decode-cache pytree.
 
-    def leaf_spec(path, leaf):
-        name = str(getattr(path[-1], "key", path[-1]))
-        axes = CACHE_RULES.get(name)
-        if axes is None:
-            return rules.pspec([None] * leaf.ndim, leaf.shape)
+    Handles scan stacking (a leading axis is replicated) and routes paged
+    cache dicts — recognised by their "table" leaf — through
+    PAGED_CACHE_RULES, since paged pool leaves reuse contiguous leaf names
+    at different geometries."""
+
+    def spec_for(axes, leaf):
         if leaf.ndim == len(axes) + 1:           # scan-stacked
             axes = (None,) + axes
         return rules.pspec(axes, leaf.shape)
 
-    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+    def walk(node):
+        if isinstance(node, dict):
+            table = PAGED_CACHE_RULES if "table" in node else CACHE_RULES
+            out = {}
+            for name, sub in node.items():
+                if isinstance(sub, (dict, list, tuple)):
+                    out[name] = walk(sub)
+                elif table.get(name) is None:
+                    out[name] = rules.pspec([None] * sub.ndim, sub.shape)
+                else:
+                    out[name] = spec_for(table[name], sub)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(sub) for sub in node)
+        return rules.pspec([None] * node.ndim, node.shape)
+
+    return walk(cache_tree)
+
+def cache_shardings(rules: MeshRules, cache_tree):
+    """NamedSharding tree (device_put-ready) for a decode-cache pytree."""
+    from jax.sharding import NamedSharding
+    specs = cache_pspecs(rules, cache_tree)
+
+    def walk(spec_node, cache_node):
+        if isinstance(cache_node, dict):
+            return {k: walk(spec_node[k], cache_node[k]) for k in cache_node}
+        if isinstance(cache_node, (list, tuple)):
+            return type(cache_node)(
+                walk(s, c) for s, c in zip(spec_node, cache_node))
+        return NamedSharding(rules.mesh, spec_node)
+
+    return walk(specs, cache_tree)
+
+
+# Inference-only axis map for the mesh-sharded paged serving engine
+# (ServeConfig.mesh).  Deliberately narrower than the training map: only
+# axes whose sharding is pure data movement are mapped — slots ("batch")
+# over "data", attention heads over "model" (per-head BESF + the paged
+# pools, see PAGED_CACHE_RULES).  Every axis that any float *contraction*
+# runs over (ffn hidden, flattened heads into wo, embed, vocab, kv_seq)
+# stays replicated: sharding a contraction dim makes GSPMD psum partial
+# products, which reassociates float adds and breaks the standing
+# bit-identity invariant (sharded serving == single-device, docs/serving.md).
+AXIS_MAP_SERVE = {
+    "batch": "data",
+    "fsdp": None,
+    "embed": None,
+    "seq": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "heads_flat": None,
+    "heads_out": None,
+    "ffn": None,
+    "vocab": None,
+    "expert": None,
+    "expert_ffn": None,
+    "expert_dmodel": None,
+    "seq_sp": None,
+    "kv_seq": None,
+}
+
+
+def make_serve_rules(mesh) -> MeshRules:
+    """MeshRules for bit-identical mesh-sharded serving (PagedEngine).
+
+    Parameters are replicated (``param_rules=()`` — serving has no
+    optimizer state to shard, and replicated weights keep every matmul's
+    contraction in single-device summation order); activations shard over
+    slots ("data") and attention heads ("model") only."""
+    return MeshRules(mesh=mesh, axis_map=dict(AXIS_MAP_SERVE),
+                     param_rules=())
+
 
 AXIS_MAP_MULTIPOD = dict(AXIS_MAP_1POD, batch=("pod", "data"))
 
