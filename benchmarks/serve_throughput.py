@@ -20,12 +20,21 @@ Three traces (field-by-field output reference: ``docs/benchmarks.md``):
   an ample-pool ``uncontended`` run), fewer scheduler ticks, higher
   utilization.
 
+``--chaos`` adds a fourth section (:func:`run_chaos`): the mixed trace
+re-served through the deterministic chaos harness — scripted host
+crashes with snapshot/restore, drafter and kernel faults, forced
+preemptions, an interrupted snapshot write — plus a QoS trace with SLO
+classes, deadlines and load shedding.  Everything it reports (snapshots
+taken, requests shed, degradations, the ``bit_identical`` flag) is a
+pure function of the trace, so the fields gate in CI like any counter.
+
 ``--check`` turns the claims into assertions (the CI gate): the
 oversubscribed arm must observe >= 1 preemption, emit token streams
 bit-identical to the uncontended run, and spend fewer decode ticks than
 worst-case reservation — all scheduling-level counters, deterministic on
-any host.  ``--out`` writes every trace's rows to
-``results/BENCH_serve.json``.
+any host.  With ``--chaos`` it also asserts the fault storm changed no
+token and the shed/truncation sets are exact.  ``--out`` writes every
+trace's rows to ``results/BENCH_serve.json``.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py
     PYTHONPATH=src python benchmarks/serve_throughput.py --impl bitstopper_xla
@@ -57,10 +66,12 @@ from repro.core.besf import BitStopperConfig
 from repro.models import transformer as T
 from repro.serving import (
     ContinuousBatchingEngine,
+    FaultPlan,
     PagedEngine,
     Request,
     ServeConfig,
     StaticBucketEngine,
+    serve_with_chaos,
 )
 
 
@@ -280,6 +291,148 @@ def run_oversubscribed(arch="stablelm-1.6b", impl="xla", alpha=0.6,
     return rows
 
 
+def run_chaos(arch="stablelm-1.6b", impl="xla", alpha=0.6, seed=0,
+              check=False):
+    """Chaos section (docs/robustness.md): two scenarios, four arms, all
+    scheduling fields deterministic.
+
+    **Fault storm** — a mixed trace (shared system prompt + n-gram
+    speculative decoding + oversubscribed pool) served twice: once
+    undisturbed, once through :func:`serve_with_chaos` under a scripted
+    :class:`FaultPlan` (host crashes with snapshot/restore, a drafter
+    failure, a forced pool-dry preemption, an interrupted snapshot write
+    — plus a fused-kernel fault and circuit-breaker degrade when the
+    fused BitStopper kernel is on).  The ``bit_identical`` field records
+    the headline claim: the fault storm must not change one token.
+
+    **QoS** — a saturated trace with SLO classes, a shed watermark and
+    per-request deadlines, against a no-QoS reference: sheds are exact
+    (``shed_rids``), deadline truncation keeps every emitted stream a
+    prefix of the reference, and both sets are pure functions of the
+    trace — committed into the smoke baseline like any counter."""
+    import tempfile
+
+    cfg = reduced_config(arch).replace(
+        attn_impl=impl, bitstopper=BitStopperConfig(alpha=alpha))
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    fused = impl == "bitstopper_xla"
+    rng = np.random.default_rng(seed)
+
+    # --- fault-storm scenario -----------------------------------------
+    # Generations deliberately run past the prompt+1-block oversubscribed
+    # reservation, so decode makes *unreserved* claims — the seam the
+    # scripted pool_dry fault (and natural preemption) bites on.
+    prefix_len, tail_lens, new_lo, new_hi = 16, (4, 9, 6), 14, 20
+    prefix = rng.integers(0, cfg.vocab, prefix_len, dtype=np.int32)
+    trace = make_trace(rng, cfg.vocab, 6, tail_lens, new_lo, new_hi,
+                       shared_prefix=prefix)
+    scfg = ServeConfig(max_len=prefix_len + max(tail_lens) + new_hi + 8,
+                       max_slots=3, prefill_bucket=8, page_size=8,
+                       pool_blocks=16, oversubscribe=True,
+                       speculative="ngram", fused_decode=fused,
+                       snapshot_every=2)
+
+    def copies():
+        return [Request(prompt=r.prompt.copy(),
+                        max_new_tokens=r.max_new_tokens) for r in trace]
+
+    rows = []
+    ref = copies()
+    t0 = time.monotonic()
+    eng = PagedEngine(cfg, params, scfg)
+    eng.generate(ref, seed=seed)
+    row = _row("undisturbed", eng, sum(len(r.generated) for r in ref),
+               time.monotonic() - t0)
+    row["pool_blocks"] = eng.layout.pool_blocks
+    rows.append(row)
+
+    events = [("crash", 2), ("drafter_fail", 3), ("pool_dry", 5),
+              ("checkpoint_interrupt", 6), ("crash", 8)]
+    if fused:
+        events.append(("kernel_fail", 2))
+    plan = FaultPlan.scripted(events)
+    snap_dir = tempfile.mkdtemp(prefix="bench_chaos_")
+    t0 = time.monotonic()
+    creqs, rep = serve_with_chaos(
+        lambda: PagedEngine(cfg, params, scfg), copies(), seed=seed,
+        plan=plan, snapshot_dir=snap_dir)
+    dt = time.monotonic() - t0
+    c = rep["engine_counters"]
+    crow = {"engine": "chaos", "tokens": sum(len(r.generated)
+                                             for r in creqs),
+            "seconds": dt, "tok_per_s": sum(len(r.generated)
+                                            for r in creqs) / dt}
+    crow.update(c)
+    crow.update({k: rep[k] for k in
+                 ("crashes", "restores", "snapshots_taken",
+                  "snapshots_interrupted", "staging_reclaimed")})
+    crow["fired_by_kind"] = rep["fired_by_kind"]
+    crow["bit_identical"] = ([r.generated for r in creqs]
+                             == [r.generated for r in ref])
+    crow["pool_blocks"] = scfg.pool_blocks
+    rows.append(crow)
+
+    # --- QoS scenario --------------------------------------------------
+    qlens = (9,)
+    qtrace = make_trace(rng, cfg.vocab, 4, qlens, 8, 8)
+    qtrace[0].max_new_tokens = 10
+
+    def qcopies(qos):
+        out = []
+        for i, r in enumerate(qtrace):
+            out.append(Request(
+                prompt=r.prompt.copy(), max_new_tokens=r.max_new_tokens,
+                slo="standard" if i == 0 else "besteffort",
+                deadline_ticks=6 if (qos and i == 0) else None))
+        return out
+
+    qbase = dict(max_len=64, max_slots=4, prefill_bucket=8, page_size=8,
+                 pool_blocks=6, oversubscribe=True)
+    qref = qcopies(qos=False)
+    t0 = time.monotonic()
+    eng = PagedEngine(cfg, params, ServeConfig(**qbase))
+    eng.generate(qref, seed=seed)
+    rows.append(_row("qos-reference", eng,
+                     sum(len(r.generated) for r in qref),
+                     time.monotonic() - t0))
+
+    qreqs = qcopies(qos=True)
+    t0 = time.monotonic()
+    eng = PagedEngine(cfg, params,
+                      ServeConfig(**qbase, shed_watermark=0.5))
+    eng.generate(qreqs, seed=seed)
+    qrow = _row("qos", eng, sum(len(r.generated) for r in qreqs),
+                time.monotonic() - t0)
+    qrow["shed_rids"] = sorted(r.rid for r in qreqs if r.shed_reason)
+    qrow["truncated_rids"] = sorted(r.rid for r in qreqs
+                                    if r.deadline_hit)
+    rows.append(qrow)
+
+    if check:
+        assert crow["bit_identical"], \
+            "fault storm changed the served tokens"
+        assert crow["crashes"] >= 1 and crow["restores"] == crow["crashes"]
+        assert crow["snapshots_interrupted"] >= 1
+        assert crow["staging_reclaimed"] >= 1
+        assert crow["drafter_failures"] >= 1
+        assert crow["forced_preemptions"] >= 1, \
+            "pool_dry fault never forced a preemption"
+        assert crow["degradations"] == (1 if fused else 0)
+        assert qrow["requests_shed"] >= 1 and qrow["shed_watermark"] >= 1
+        assert qrow["deadline_truncated"] >= 1
+        by_rid = {r.rid: r for r in qref}
+        for r in qreqs:
+            if r.shed_reason:
+                assert r.slo == "besteffort" and not r.generated
+            else:
+                assert r.generated == by_rid[r.rid].generated[
+                    :len(r.generated)], \
+                    f"rid {r.rid} diverged from the QoS-free reference"
+        assert qreqs[0].deadline_hit and \
+            len(qreqs[0].generated) < qtrace[0].max_new_tokens
+    return rows
+
+
 def _print_rows(title, rows):
     print(f"\n[serve_throughput] {title}")
     for r in rows:
@@ -312,7 +465,15 @@ def main():
                     help="assert the oversubscription gate: >=1 "
                          "preemption, tokens bit-identical to the "
                          "uncontended run, fewer decode ticks than "
-                         "worst-case reservation")
+                         "worst-case reservation (with --chaos, also the "
+                         "chaos gate: fault-storm tokens bit-identical, "
+                         "sheds/truncations exact)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="add the chaos section: the mixed trace under a "
+                         "scripted fault plan (crashes + snapshot/restore, "
+                         "drafter/kernel faults, forced preemptions) plus "
+                         "a QoS trace with deadlines and load shedding "
+                         "(docs/robustness.md)")
     ap.add_argument("--out", default=None,
                     help="write all trace rows to this JSON path "
                          "(default: results/BENCH_serve.json)")
@@ -350,6 +511,10 @@ def main():
         rows = run(**kw, mesh=mesh)
         srows = run_shared_prefix(**kw, prefix_len=args.prefix_len)
         orows = run_oversubscribed(**kw, check=args.check)
+    crows = None
+    if args.chaos:
+        crows = run_chaos(arch=args.arch, impl=args.impl, alpha=args.alpha,
+                          seed=args.seed, check=args.check)
 
     _print_rows(f"mixed trace arch={args.arch} impl={args.impl} "
                 f"requests={kw['n_requests']} slots={kw['slots']}", rows)
@@ -384,6 +549,25 @@ def main():
               "observed, tokens lossless, fewer ticks than worst-case "
               "reservation")
 
+    if crows is not None:
+        _print_rows("chaos trace (scripted fault plan + QoS)", crows)
+        cr = next(r for r in crows if r["engine"] == "chaos")
+        qr = next(r for r in crows if r["engine"] == "qos")
+        print(f"  fault storm: {cr['crashes']} crashes / {cr['restores']} "
+              f"restores, {cr['snapshots_taken']} snapshots "
+              f"({cr['snapshots_interrupted']} interrupted), "
+              f"{cr['degradations']} kernel degradations, "
+              f"{cr['drafter_failures']} drafter failures, "
+              f"{cr['forced_preemptions']} forced preemptions — "
+              f"bit_identical={cr['bit_identical']}")
+        print(f"  qos: shed rids {qr['shed_rids']} "
+              f"(watermark {qr['shed_watermark']}, deadline "
+              f"{qr['shed_deadline']}), truncated rids "
+              f"{qr['truncated_rids']}")
+        if args.check:
+            print("[serve_throughput] chaos gate OK: fault-storm tokens "
+                  "bit-identical, sheds and truncations exact")
+
     out = args.out or os.path.join(os.path.dirname(__file__), "..",
                                    "results", "BENCH_serve.json")
     payload = {
@@ -394,6 +578,8 @@ def main():
         "shared_prefix": srows,
         "oversubscribed": orows,
     }
+    if crows is not None:
+        payload["chaos"] = crows
     if os.path.dirname(out):
         os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:

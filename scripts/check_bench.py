@@ -62,12 +62,21 @@ BENCHES = {
         "baseline": "results/BENCH_serve_smoke.json",
         "sections": [("mixed", ("engine",)),
                      ("shared_prefix", ("engine",)),
-                     ("oversubscribed", ("engine",))],
+                     ("oversubscribed", ("engine",)),
+                     ("chaos", ("engine",))],
         "fields": ("tokens", "prefill_tokens", "prefix_hit_tokens",
                    "decode_tokens", "decode_steps", "decode_kv_tokens",
                    "requests_finished", "preemptions",
                    "preempt_freed_blocks", "kv_bytes_resident",
-                   "pool_blocks", "peak_live_blocks"),
+                   "pool_blocks", "peak_live_blocks",
+                   # chaos section (all deterministic: scripted fault
+                   # plan + tick-indexed decisions, docs/robustness.md)
+                   "bit_identical", "crashes", "restores",
+                   "snapshots_taken", "snapshots_interrupted",
+                   "staging_reclaimed", "degradations",
+                   "drafter_failures", "forced_preemptions",
+                   "requests_shed", "shed_watermark", "shed_deadline",
+                   "deadline_truncated", "shed_rids", "truncated_rids"),
     },
 }
 

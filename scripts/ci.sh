@@ -36,8 +36,13 @@ python scripts/check_docs.py
 # the oversubscription gate: >= 1 preemption on the long-tail trace,
 # tokens bit-identical to the uncontended run, fewer decode ticks than
 # worst-case reservation (all deterministic counters, no wall clock).
+# --chaos adds the chaos section (docs/robustness.md): the mixed trace
+# under a scripted fault plan (host crashes + snapshot/restore, drafter
+# fault, forced preemption, interrupted snapshot write) must serve
+# bit-identical tokens, and the QoS trace's shed/truncation sets must be
+# exact — all gated against the committed baseline below.
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-    python benchmarks/serve_throughput.py --smoke --check \
+    python benchmarks/serve_throughput.py --smoke --check --chaos \
         --out /tmp/BENCH_serve_smoke.json
 # Perf-trajectory gate: fresh deterministic counters vs the committed
 # baseline (results/BENCH_serve_smoke.json) — scheduler/traffic drift
@@ -54,6 +59,17 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m repro.launch.serve --requests 4 --slots 3 \
         --min-prompt 6 --max-prompt 12 --new-tokens 16 --page-size 8 \
         --pool-blocks 10 --oversubscribe
+
+# Chaos smoke: a canned fault plan end to end through the launcher — a
+# host crash recovered from an atomically-promoted snapshot, plus an
+# interrupted snapshot write whose staging orphan is reclaimed
+# (docs/robustness.md; tests/test_chaos.py pins the bit-identity).
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --requests 3 --slots 2 \
+        --min-prompt 6 --max-prompt 10 --new-tokens 6 --page-size 8 \
+        --snapshot-dir "$(mktemp -d /tmp/ci_chaos_snap.XXXXXX)" \
+        --snapshot-every 2 \
+        --fault-plan '[["crash", 3], ["checkpoint_interrupt", 4]]'
 
 # Fused paged-decode smoke: times gather vs paged vs the Pallas kernel
 # (interpret mode on CPU runners) and asserts the traffic model scales

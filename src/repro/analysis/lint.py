@@ -19,6 +19,13 @@ Rules (each maps to one :class:`~repro.analysis.report.Finding` rule id):
   schedule-invariant and replayable by construction.  Exemption:
   ``time.time()`` compared against file mtimes (``getmtime``/
   ``st_mtime``) is wall-clock vs wall-clock and stays.
+* ``repo-tick-wallclock`` — engine tick paths (``serving/``) may not even
+  *import* ``time`` or ``datetime``: every scheduling, fault-injection,
+  deadline, and snapshot decision is indexed by the engine's tick
+  counter, which is what makes crash/restore traces bit-replayable
+  (docs/robustness.md).  The one legitimately wall-clock-driven serving
+  component — the stuck-tick watchdog — lives in
+  ``runtime/fault_tolerance.py`` and wraps the engine from outside.
 
 All rules work on the AST only — no imports of the scanned code — so the
 lint runs in milliseconds and can't be confused by import-time side
@@ -38,6 +45,7 @@ LINT_RULES = [
     "repo-config-field-unread",
     "repo-allocator-device-ops",
     "repo-nondeterminism",
+    "repo-tick-wallclock",
 ]
 
 
@@ -62,7 +70,16 @@ DEFAULT_ALLOCATOR_PATHS = [
     "src/repro/analysis/pool_sanitizer.py",
 ]
 
+# Engine tick-path trees: tick-indexed and wall-clock-free by contract
+# (docs/robustness.md) — a clock read here would make crash/restore
+# replay and fault injection nondeterministic.
+DEFAULT_TICKPATH_DIRS = [
+    "src/repro/serving",
+]
+
 _DEVICE_MODULES = ("jax", "jaxlib")
+
+_WALLCLOCK_MODULES = ("time", "datetime")
 
 
 def _parse(path: pathlib.Path) -> ast.Module | None:
@@ -206,6 +223,46 @@ def check_allocator_device_ops(
     return out
 
 
+def check_tick_wallclock(
+        root: pathlib.Path,
+        tickpath_dirs: list[str] | None = None) -> list[Finding]:
+    """Engine tick paths may not import ``time``/``datetime`` at all.
+    Import-level is deliberate: a clock *binding* in a tick-path module is
+    one refactor away from a clock *read* in a scheduling decision, and
+    the watchdog — the one component that needs a clock — already lives
+    outside (``runtime/fault_tolerance.py``) with the clock injected."""
+    dirs = (DEFAULT_TICKPATH_DIRS if tickpath_dirs is None
+            else tickpath_dirs)
+    out: list[Finding] = []
+    for rel_dir in dirs:
+        d = root / rel_dir
+        if not d.exists():
+            continue
+        for f in sorted(d.rglob("*.py")):
+            tree = _parse(f)
+            if tree is None:
+                continue
+            rel = str(f.relative_to(root))
+            for node in ast.walk(tree):
+                bad = None
+                if isinstance(node, ast.Import):
+                    bad = next((a.name for a in node.names
+                                if a.name.split(".")[0]
+                                in _WALLCLOCK_MODULES), None)
+                elif isinstance(node, ast.ImportFrom) and node.module:
+                    if node.module.split(".")[0] in _WALLCLOCK_MODULES:
+                        bad = node.module
+                if bad is not None:
+                    out.append(Finding(
+                        "repo-tick-wallclock", rel, node.lineno,
+                        f"engine tick path imports `{bad}` — serving "
+                        f"decisions are indexed by the engine tick "
+                        f"counter, never the wall clock; wall-clock "
+                        f"supervision belongs in runtime/ (EngineWatchdog "
+                        f"wraps the engine with an injected clock)"))
+    return out
+
+
 def _stmt_has_mtime(stmt: ast.stmt) -> bool:
     for node in ast.walk(stmt):
         if isinstance(node, ast.Attribute) and node.attr in ("getmtime",
@@ -277,7 +334,8 @@ def run_lint(root: pathlib.Path | str,
              src: str = "src",
              read_trees: tuple[str, ...] = ("src", "benchmarks", "examples"),
              config_specs: list[ConfigSpec] | None = None,
-             allocator_paths: list[str] | None = None) -> list[Finding]:
+             allocator_paths: list[str] | None = None,
+             tickpath_dirs: list[str] | None = None) -> list[Finding]:
     """Run every lint rule over ``root/src`` (reads for the unread-field
     rule are additionally counted in ``benchmarks/`` and ``examples/`` —
     a field only a benchmark reads is still live config)."""
@@ -293,6 +351,7 @@ def run_lint(root: pathlib.Path | str,
     findings += check_unread_config_fields(read_files, root, config_specs)
     findings += check_allocator_device_ops(root, allocator_paths)
     findings += check_nondeterminism(src_files, root)
+    findings += check_tick_wallclock(root, tickpath_dirs)
     # deterministic report order
     findings.sort(key=lambda f: (f.rule, f.file, f.line))
     return findings

@@ -11,6 +11,13 @@ Layout:  <dir>/step_<N>/shard_<i>.npz + MANIFEST.json
   multi-host writers could each own a subset; on one host it bounds file
   size.  Structure (treedef) is stored in the manifest via leaf paths, so
   loading is resilient to unrelated code motion.
+
+The same stage-then-promote discipline backs **serving crash snapshots**
+(:func:`save_snapshot` / :func:`load_snapshot`): a single JSON document
+per step (``PagedEngine.snapshot()``), with an ``interrupt`` seam for
+deterministic fault injection between stage and promote — a reader can
+never observe a torn snapshot, and :func:`gc_staging` reclaims orphans
+(docs/robustness.md).
 """
 
 from __future__ import annotations
@@ -32,29 +39,26 @@ def _leaf_paths(tree):
     return paths, leaves
 
 
-def save_checkpoint(tree, directory: str, step: int, n_shards: int = 4):
-    paths, leaves = _leaf_paths(tree)
-    final = os.path.join(directory, f"step_{step:08d}")
+def _stage(directory: str, step: int) -> str:
+    """Create a staging dir for one atomic write.  Unique tmp dir per
+    save: concurrent writers of the same step (async saver racing a sync
+    one) must not share a staging directory, or the loser's os.replace
+    finds its tmp already promoted away.  mkdtemp creates 0700; restore
+    umask-derived permissions since this inode is promoted to the final
+    directory (shared readers must list it)."""
     os.makedirs(directory, exist_ok=True)
-    # Unique tmp dir per save: concurrent writers of the same step (async
-    # saver racing a sync one) must not share a staging directory, or the
-    # loser's os.replace finds its tmp already promoted away.  mkdtemp
-    # creates 0700; restore umask-derived permissions since this inode is
-    # promoted to the final checkpoint dir (shared readers must list it).
     tmp = tempfile.mkdtemp(dir=directory, prefix=f"step_{step:08d}.tmp.")
     umask = os.umask(0)
     os.umask(umask)
     os.chmod(tmp, 0o777 & ~umask)
-    shards: list[dict] = [dict() for _ in range(n_shards)]
-    for i, (p, leaf) in enumerate(zip(paths, leaves)):
-        shards[i % n_shards][p] = np.asarray(leaf)
-    for si, shard in enumerate(shards):
-        # npz keys cannot contain '/': escape.
-        np.savez(os.path.join(tmp, f"shard_{si}.npz"),
-                 **{k.replace("/", "__"): v for k, v in shard.items()})
-    manifest = {"step": step, "n_shards": n_shards, "paths": paths}
-    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
-        json.dump(manifest, f)
+    return tmp
+
+
+def _promote(tmp: str, final: str) -> None:
+    """Atomically publish a fully-written staging dir.  Readers either
+    see the previous complete state or the new one — never a torn write;
+    a crash before this point leaves only an orphaned ``.tmp`` dir
+    (reclaimed by :func:`gc_staging`)."""
     import shutil
     if os.path.exists(final):
         # ignore_errors: a concurrent re-save of the same step may be
@@ -66,9 +70,87 @@ def save_checkpoint(tree, directory: str, step: int, n_shards: int = 4):
         if not os.path.isdir(final):
             raise        # real I/O failure: keep the staging dir, surface it
         # A concurrent writer promoted the same step between our rmtree and
-        # replace; its checkpoint is equivalent — drop our staging copy.
+        # replace; its copy is equivalent — drop our staging copy.
         shutil.rmtree(tmp, ignore_errors=True)
+
+
+def save_checkpoint(tree, directory: str, step: int, n_shards: int = 4):
+    paths, leaves = _leaf_paths(tree)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = _stage(directory, step)
+    shards: list[dict] = [dict() for _ in range(n_shards)]
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        shards[i % n_shards][p] = np.asarray(leaf)
+    for si, shard in enumerate(shards):
+        # npz keys cannot contain '/': escape.
+        np.savez(os.path.join(tmp, f"shard_{si}.npz"),
+                 **{k.replace("/", "__"): v for k, v in shard.items()})
+    manifest = {"step": step, "n_shards": n_shards, "paths": paths}
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    _promote(tmp, final)
     return final
+
+
+def save_snapshot(obj, directory: str, step: int, interrupt=None) -> str:
+    """Atomically persist one JSON-serializable object (an engine crash
+    snapshot — ``PagedEngine.snapshot()``) under the same
+    stage-then-promote discipline as checkpoints: ``step_<N>/`` with a
+    MANIFEST.json, so :func:`latest_step` and GC treat snapshots and
+    checkpoints uniformly.
+
+    ``interrupt`` is the fault-injection seam (serving/chaos.py): called
+    after the staging write completes but *before* the atomic promote.
+    If it raises, the write dies exactly where a host crash mid-save
+    would — the staging dir is orphaned, the previously promoted snapshot
+    remains the visible latest, and no reader can ever observe the torn
+    write.  :func:`gc_staging` reclaims the orphan."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = _stage(directory, step)
+    with open(os.path.join(tmp, "snapshot.json"), "w") as f:
+        json.dump(obj, f)
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump({"step": step, "kind": "snapshot"}, f)
+    if interrupt is not None:
+        interrupt()
+    _promote(tmp, final)
+    return final
+
+
+def load_snapshot(directory: str, step: int | None = None):
+    """Load a :func:`save_snapshot` object.  step=None → latest promoted
+    (staging orphans are invisible: :func:`latest_step` skips ``.tmp``).
+    Returns ``(obj, step)``."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no snapshot under {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "snapshot.json")) as f:
+        return json.load(f), step
+
+
+def gc_staging(directory: str, grace: float = 600.0) -> list[str]:
+    """Reclaim ``.tmp`` staging dirs orphaned by a crashed or interrupted
+    writer (unique mkdtemp names are never reused, so nothing else will).
+    ``grace`` guards in-flight saves by mtime age; a single-writer caller
+    that *knows* its own write just died may pass 0.  Returns the names
+    reclaimed."""
+    import shutil
+    import time
+    if not os.path.isdir(directory):
+        return []
+    reclaimed = []
+    for n in os.listdir(directory):
+        if n.startswith("step_") and ".tmp" in n:
+            p = os.path.join(directory, n)
+            try:
+                if time.time() - os.path.getmtime(p) >= grace:
+                    shutil.rmtree(p, ignore_errors=True)
+                    reclaimed.append(n)
+            except OSError:
+                pass
+    return reclaimed
 
 
 def load_checkpoint(tree_like, directory: str, step: int | None = None):
@@ -142,21 +224,12 @@ class CheckpointManager:
 
     def _gc(self):
         import shutil
-        import time
         steps = sorted(
             int(n.split("_")[1]) for n in os.listdir(self.directory)
             if n.startswith("step_") and ".tmp" not in n)
         for s in steps[: -self.keep]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
                           ignore_errors=True)
-        # Staging dirs orphaned by a crash (unique mkdtemp names are never
-        # reused) — reclaim them once they are safely older than any
-        # in-flight save could be.
-        for n in os.listdir(self.directory):
-            if n.startswith("step_") and ".tmp" in n:
-                p = os.path.join(self.directory, n)
-                try:
-                    if time.time() - os.path.getmtime(p) > 600:
-                        shutil.rmtree(p, ignore_errors=True)
-                except OSError:
-                    pass
+        # Staging dirs orphaned by a crash — reclaim once safely older
+        # than any in-flight save could be.
+        gc_staging(self.directory, grace=600.0)

@@ -19,6 +19,14 @@ Engines:
   the dense path, at a fraction of the resident KV memory.
 * ``--engine static`` — legacy length-bucketed batcher (the baseline
   ``benchmarks/serve_throughput.py`` measures against).
+
+Robustness knobs (paged engine; docs/robustness.md): ``--deadline`` /
+``--shed-watermark`` bound per-request latency and queue growth;
+``--snapshot-dir`` + ``--snapshot-every`` persist crash snapshots; a
+``--fault-plan`` drives the whole trace through the deterministic chaos
+harness (scripted crashes, kernel faults, drafter faults, …) with
+kill-and-restore recovery — served tokens are bit-identical to an
+undisturbed run.
 """
 
 from __future__ import annotations
@@ -34,10 +42,12 @@ from repro.core.besf import BitStopperConfig
 from repro.models import transformer as T
 from repro.serving import (
     ContinuousBatchingEngine,
+    FaultPlan,
     PagedEngine,
     Request,
     ServeConfig,
     StaticBucketEngine,
+    serve_with_chaos,
 )
 
 
@@ -114,6 +124,31 @@ def main():
                          "(docs/serving.md).  Needs dp*tp visible devices "
                          "(CPU: XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=N)")
+    ap.add_argument("--deadline", type=int, default=None, metavar="TICKS",
+                    help="paged engine: default per-request deadline in "
+                         "scheduler ticks from submission; expiry "
+                         "truncates started requests (emitted tokens stay "
+                         "a prefix of the undisturbed stream) and sheds "
+                         "never-started ones")
+    ap.add_argument("--shed-watermark", type=float, default=None,
+                    metavar="FRAC",
+                    help="paged engine: shed queued besteffort requests "
+                         "while pool saturation exceeds this fraction "
+                         "(requires --oversubscribe)")
+    ap.add_argument("--besteffort-tail", type=int, default=0, metavar="N",
+                    help="mark the last N trace requests slo=besteffort "
+                         "(sheddable; preferred preemption victims)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="persist crash snapshots (engine host state; "
+                         "atomic stage-then-promote) under this directory")
+    ap.add_argument("--snapshot-every", type=int, default=0, metavar="N",
+                    help="snapshot cadence in engine ticks (with "
+                         "--snapshot-dir; 0 = only the initial snapshot)")
+    ap.add_argument("--fault-plan", default=None, metavar="PLAN",
+                    help="drive the trace through the chaos harness under "
+                         "this fault plan: inline JSON [[kind, tick], ...] "
+                         "or @file.json.  Crashes need --snapshot-dir to "
+                         "restore from")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -145,21 +180,71 @@ def main():
             args.fused_decode],
         speculative=args.speculative, draft_k=args.draft_k,
         oversubscribe=args.oversubscribe,
-        preempt_policy=args.preempt_policy, mesh=mesh)
+        preempt_policy=args.preempt_policy, mesh=mesh,
+        deadline_ticks=args.deadline, shed_watermark=args.shed_watermark,
+        snapshot_every=args.snapshot_every)
     if args.speculative != "off" and args.engine != "paged":
         ap.error("--speculative requires --engine paged "
                  "(block-table rollback)")
     if args.oversubscribe and args.engine != "paged":
         ap.error("--oversubscribe requires --engine paged "
                  "(block-pool preemption)")
-    engine = {"paged": PagedEngine,
-              "continuous": ContinuousBatchingEngine,
-              "static": StaticBucketEngine}[args.engine](cfg, params, scfg)
+    chaos = args.fault_plan is not None or args.snapshot_dir is not None
+    if args.engine != "paged" and (
+            chaos or args.deadline is not None
+            or args.shed_watermark is not None or args.snapshot_every):
+        ap.error("--fault-plan/--snapshot-dir/--snapshot-every/--deadline/"
+                 "--shed-watermark require --engine paged "
+                 "(docs/robustness.md)")
+    plan = None
+    if args.fault_plan is not None:
+        text = args.fault_plan
+        if text.startswith("@"):
+            with open(text[1:]) as f:
+                text = f.read()
+        plan = FaultPlan.from_json(text)
+
+    def make_engine():
+        return {"paged": PagedEngine,
+                "continuous": ContinuousBatchingEngine,
+                "static": StaticBucketEngine}[args.engine](cfg, params, scfg)
 
     rng = np.random.default_rng(args.seed)
     reqs = make_trace(rng, cfg.vocab, args.requests,
                       args.min_prompt, args.max_prompt, args.new_tokens,
                       shared_prefix=args.shared_prefix)
+    if args.besteffort_tail:
+        for r in reqs[len(reqs) - args.besteffort_tail:]:
+            r.slo = "besteffort"
+
+    if chaos:
+        t0 = time.monotonic()
+        reqs, rep = serve_with_chaos(
+            make_engine, reqs, seed=args.seed, plan=plan,
+            snapshot_dir=args.snapshot_dir)
+        dt = time.monotonic() - t0
+        n_tok = sum(len(r.generated) for r in reqs)
+        c = rep["engine_counters"]
+        print(f"[serve] {len(reqs)} requests / {n_tok} new tokens in "
+              f"{dt:.2f}s ({n_tok / dt:.1f} tok/s, engine={args.engine}, "
+              f"impl={args.impl}, chaos)")
+        print(f"[serve] chaos: {rep['crashes']} crashes / "
+              f"{rep['restores']} restores, "
+              f"{rep['snapshots_taken']} snapshots "
+              f"({rep['snapshots_interrupted']} interrupted, "
+              f"{rep['staging_reclaimed']} staging orphans reclaimed), "
+              f"fired={rep['fired_by_kind']}, unfired={rep['unfired']}")
+        print(f"[serve] chaos: {c.get('degradations', 0)} kernel "
+              f"degradations, {c.get('drafter_failures', 0)} drafter "
+              f"failures, {c.get('forced_preemptions', 0)} forced "
+              f"preemptions, {c.get('requests_shed', 0)} shed "
+              f"(watermark {c.get('shed_watermark', 0)} / deadline "
+              f"{c.get('shed_deadline', 0)}), "
+              f"{c.get('deadline_truncated', 0)} deadline-truncated")
+        print(f"[serve] counters: {c}")
+        return
+
+    engine = make_engine()
     t0 = time.monotonic()
     engine.generate(reqs, seed=args.seed)
     dt = time.monotonic() - t0

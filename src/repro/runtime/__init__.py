@@ -1,5 +1,7 @@
-"""Cluster runtime: failure detection, elastic re-meshing, stragglers."""
+"""Cluster runtime: failure detection, elastic re-meshing, stragglers,
+and the serving stuck-tick watchdog."""
 
 from repro.runtime.fault_tolerance import (  # noqa: F401
-    ClusterMonitor, ElasticMeshManager, StragglerPolicy,
+    ClusterMonitor, ElasticMeshManager, EngineWatchdog, StragglerPolicy,
+    StuckTickError,
 )

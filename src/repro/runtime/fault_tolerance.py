@@ -13,6 +13,15 @@ the deliverable — a real deployment swaps the heartbeat transport).
   a shard exceeding ``k * ema`` is marked a straggler.  Mitigation in data
   loading: every shard can deterministically regenerate any other shard's
   batch (see data/pipeline.py), so reassignment is metadata-only.
+* :class:`EngineWatchdog` — the serving-side consumer of
+  :class:`StragglerPolicy`: wraps ``PagedEngine.step()`` and raises
+  :class:`StuckTickError` when a tick blows past the EMA deadline (a hung
+  kernel or wedged scheduler stalls the whole engine otherwise).  The
+  watchdog lives HERE, not in ``serving/``: engine tick paths are
+  tick-indexed and wall-clock-free by lint rule (``repo-tick-wallclock``,
+  docs/robustness.md), so the one component that legitimately reads a
+  clock wraps the engine from outside — with the clock injected, so tests
+  never assert on real ``time.monotonic``.
 """
 
 from __future__ import annotations
@@ -25,16 +34,18 @@ import numpy as np
 
 
 class ClusterMonitor:
-    def __init__(self, n_nodes: int, timeout: float = 30.0):
+    def __init__(self, n_nodes: int, timeout: float = 30.0,
+                 clock=time.monotonic):
         self.n_nodes = n_nodes
         self.timeout = timeout
-        now = time.monotonic()
+        self._clock = clock
+        now = self._clock()
         self._last_beat = {i: now for i in range(n_nodes)}
         self._failed: set[int] = set()
 
     def heartbeat(self, node: int, t: float | None = None):
         if node not in self._failed:
-            self._last_beat[node] = t if t is not None else time.monotonic()
+            self._last_beat[node] = t if t is not None else self._clock()
 
     def inject_failure(self, node: int):
         self._failed.add(node)
@@ -42,10 +53,10 @@ class ClusterMonitor:
 
     def recover(self, node: int):
         self._failed.discard(node)
-        self._last_beat[node] = time.monotonic()
+        self._last_beat[node] = self._clock()
 
     def failed_nodes(self, now: float | None = None) -> set[int]:
-        now = now if now is not None else time.monotonic()
+        now = now if now is not None else self._clock()
         out = set(self._failed)
         for node, beat in self._last_beat.items():
             if now - beat > self.timeout:
@@ -121,3 +132,63 @@ class StragglerPolicy:
         """Deterministic donor for a straggler's data shard (all hosts agree
         without communication: pure function of (step, failed_shard))."""
         return healthy_shards[(failed_shard + step) % len(healthy_shards)]
+
+
+class StuckTickError(RuntimeError):
+    """A serving engine tick exceeded the watchdog's EMA deadline — a
+    hung kernel, a wedged allocator loop, anything that stalls the tick.
+    The process supervisor's cue to kill and restore from the latest
+    crash snapshot (docs/robustness.md)."""
+
+
+class EngineWatchdog:
+    """Stuck-tick watchdog for a serving engine.
+
+    Wraps ``engine.step()``: each tick is timed, fed to a
+    :class:`StragglerPolicy` EMA, and compared against the policy's
+    deadline (``slack * ema``).  A tick that blows the deadline raises
+    :class:`StuckTickError` — the ONLY wall-clock-driven decision in the
+    serving stack, which is why it wraps the engine from ``runtime/``
+    instead of living in a tick path (serving/ is wall-clock-free by
+    lint).  The clock is injected so tests drive it with a fake counter
+    and never assert against real ``time.monotonic``.
+
+    ``warmup`` ticks are observed but never flagged: the first ticks of a
+    serve are jit compiles, orders of magnitude slower than steady state,
+    and must seed the EMA without tripping it."""
+
+    def __init__(self, engine, policy: StragglerPolicy | None = None,
+                 clock=time.monotonic, warmup: int = 8):
+        if warmup < 1:
+            raise ValueError(f"warmup must be >= 1, got {warmup}")
+        self.engine = engine
+        self.policy = policy if policy is not None else StragglerPolicy()
+        self.clock = clock
+        self.warmup = warmup
+        self.ticks_seen = 0
+        self.last_tick_time: float | None = None
+
+    def step(self) -> bool:
+        t0 = self.clock()
+        alive = self.engine.step()
+        dt = self.clock() - t0
+        self.last_tick_time = dt
+        self.ticks_seen += 1
+        # Check against the deadline BEFORE this tick joins the EMA: a
+        # monster tick must not dilute the very deadline meant to catch it.
+        if (self.ticks_seen > self.warmup
+                and self.policy.is_straggler(dt)):
+            raise StuckTickError(
+                f"engine tick {self.ticks_seen} took {dt:.4f}s, deadline "
+                f"{self.policy.deadline():.4f}s "
+                f"(ema {self.policy.ema:.4f}s x slack "
+                f"{self.policy.slack})")
+        self.policy.observe(dt)
+        return alive
+
+    def run(self, seed: int = 0) -> None:
+        """Drain the engine under watchdog supervision (the watchdog's
+        analogue of ``engine.run``)."""
+        self.engine.begin(seed)
+        while self.engine.pending():
+            self.step()

@@ -1,5 +1,15 @@
 """Serving: paged continuous-batching engine with BitStopper sparse decode."""
 
+from repro.serving.chaos import (  # noqa: F401
+    CheckpointInterrupted,
+    DrafterFault,
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    HostCrash,
+    KernelFault,
+    serve_with_chaos,
+)
 from repro.serving.engine import (  # noqa: F401
     ContinuousBatchingEngine,
     PagedEngine,

@@ -1,0 +1,246 @@
+"""Deterministic fault injection + crash/restore harness for serving.
+
+Chaos testing for the paged engine, built on one rule: **every fault is a
+pure function of the scripted plan and the engine's tick counter** — no
+wall clock, no ambient randomness, no flakiness.  A :class:`FaultPlan` is
+a list of ``(kind, tick)`` events (hand-scripted or derived from a seed);
+a :class:`FaultInjector` fires each event at the first consultation of
+its kind at-or-after its tick, exactly once.  Replaying the same trace
+under the same plan reproduces the same faults at the same points, which
+is what lets tests assert *bit-identical tokens* across a fault storm.
+
+Fault kinds and where they bite (`docs/robustness.md` has the model):
+
+* ``pool_dry``      — a mid-decode block claim is forced to preempt a
+                      victim even though the pool is not actually dry
+                      (exercises lossless preemption at scripted points;
+                      ``PagedEngine._claim_block``).
+* ``kernel_fail``   — the fused paged decode/verify kernel raises
+                      :class:`KernelFault`; the engine's circuit breaker
+                      degrades to the gather fallback (bit-identical) and
+                      retries the same tick.
+* ``drafter_fail``  — the speculative drafter raises; the tick falls back
+                      to a plain decode (losslessness is unconditional —
+                      speculation only ever changes forward count).
+* ``checkpoint_interrupt`` — a snapshot write dies after staging, before
+                      the atomic promote: the store must never expose the
+                      torn snapshot and GC must reclaim the orphan.
+* ``crash``         — the host dies between ticks; the harness rebuilds a
+                      fresh engine and :meth:`PagedEngine.restore`\\ s the
+                      latest snapshot.  Served tokens must be (and are
+                      tested) bit-identical to an undisturbed run.
+
+The injector lives in the *harness*, outside the engine, so it survives a
+``crash`` — replayed ticks after a restore do not re-fire consumed events
+(a real re-run of the same wall of faults would not re-crash at a point
+the previous incarnation already crashed at).
+
+This module is imported by ``serving/engine.py`` and must stay free of
+top-level serving imports (and of wall-clock reads — the
+``repo-tick-wallclock`` lint rule enforces the latter for all of
+``serving/``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+KINDS = ("pool_dry", "kernel_fail", "drafter_fail",
+         "checkpoint_interrupt", "crash")
+
+
+class KernelFault(RuntimeError):
+    """Fused-kernel failure (injected or real): the decode/verify call
+    died.  Caught by the engine's circuit breaker, which degrades to the
+    pure-JAX gather fallback and retries — tokens never change."""
+
+
+class DrafterFault(RuntimeError):
+    """Speculative drafter failure: the proposal step died.  The tick
+    degenerates to a plain decode; no tokens are lost."""
+
+
+class HostCrash(RuntimeError):
+    """Simulated whole-host death between scheduler ticks.  Raised by the
+    harness (never caught by the engine): everything the engine held —
+    device KV included — is gone; recovery is a fresh engine +
+    :meth:`PagedEngine.restore` from the latest snapshot."""
+
+
+class CheckpointInterrupted(RuntimeError):
+    """A snapshot write was killed after staging but before the atomic
+    promote (``checkpoint/store.py``).  The previous snapshot must remain
+    the visible latest; the staging orphan is GC'd."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scripted fault: fires at the first consultation of ``kind`` at
+    tick >= ``tick``, then is consumed."""
+    kind: str
+    tick: int
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"kinds are {KINDS}")
+        if self.tick < 0:
+            raise ValueError(f"fault tick must be >= 0, got {self.tick}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An immutable scripted sequence of faults.  Deterministic by
+    construction: events are (kind, tick) pairs with no time-of-day or
+    randomness at fire time — :meth:`from_seed` derives a plan from a
+    seed *once*, and the derived plan is plain data."""
+    events: tuple[FaultEvent, ...] = ()
+
+    @classmethod
+    def scripted(cls, events) -> "FaultPlan":
+        """Build from ``(kind, tick)`` pairs (or FaultEvents)."""
+        evs = tuple(e if isinstance(e, FaultEvent) else FaultEvent(*e)
+                    for e in events)
+        return cls(events=evs)
+
+    @classmethod
+    def from_seed(cls, seed: int, n_events: int, max_tick: int,
+                  kinds=KINDS) -> "FaultPlan":
+        """Derive a plan from a seed: ``n_events`` faults with kinds and
+        ticks drawn from a seeded ``np.random.default_rng`` —
+        reproducible forever, independent of interpreter hash seeds and
+        wall clock."""
+        rng = np.random.default_rng(seed)
+        kinds = tuple(kinds)
+        evs = tuple(FaultEvent(kinds[int(rng.integers(len(kinds)))],
+                               int(rng.integers(max_tick + 1)))
+                    for _ in range(n_events))
+        return cls(events=evs)
+
+    def to_json(self) -> str:
+        return json.dumps([[e.kind, e.tick] for e in self.events])
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultPlan":
+        return cls.scripted(json.loads(text))
+
+
+class FaultInjector:
+    """Consumes a :class:`FaultPlan` against the engine's tick counter.
+
+    ``fire(kind, tick)`` returns True iff an unconsumed event of ``kind``
+    has armed (``event.tick <= tick``); the event is then consumed and
+    logged.  Consultation order is fixed by the engine's deterministic
+    schedule, so the full fired log is a pure function of (plan, trace).
+    """
+
+    def __init__(self, plan: FaultPlan | None = None):
+        self.plan = plan or FaultPlan()
+        self._pending: list[FaultEvent] = sorted(
+            self.plan.events, key=lambda e: (e.tick, e.kind))
+        self.fired: list[tuple[str, int, int]] = []  # (kind, armed, fired-at)
+
+    def fire(self, kind: str, tick: int) -> bool:
+        for i, ev in enumerate(self._pending):
+            if ev.kind == kind and ev.tick <= tick:
+                del self._pending[i]
+                self.fired.append((kind, ev.tick, tick))
+                return True
+        return False
+
+    def pending(self) -> list[tuple[str, int]]:
+        return [(e.kind, e.tick) for e in self._pending]
+
+    def report(self) -> dict:
+        by_kind: dict[str, int] = {}
+        for kind, _, _ in self.fired:
+            by_kind[kind] = by_kind.get(kind, 0) + 1
+        return {"fired": list(self.fired),
+                "fired_by_kind": by_kind,
+                "unfired": self.pending()}
+
+
+def serve_with_chaos(make_engine, requests, seed: int = 0,
+                     plan: FaultPlan | None = None,
+                     snapshot_dir: str | None = None,
+                     snapshot_every: int | None = None):
+    """Drive a serving trace under a fault plan, with crash recovery.
+
+    ``make_engine`` is a zero-arg factory for a fresh :class:`PagedEngine`
+    (a crash destroys the old one — device KV and all).  Requests are
+    submitted up front; a snapshot is taken immediately (so a crash at any
+    tick has something to restore) and then every ``snapshot_every`` ticks
+    through the engine's own cadence knob.  ``crash`` events raise
+    :class:`HostCrash` between ticks; recovery rebuilds the engine and
+    restores the latest snapshot — generated-so-far tokens come from the
+    snapshot, in-flight requests requeue through the lossless PR-5 resume
+    path, and the continuation re-samples under the same
+    ``(seed, rid, token index)`` keys, so the final token streams are
+    bit-identical to an undisturbed run.
+
+    Returns ``(requests, report)``: the engine's request objects sorted by
+    rid (after a crash these are *restored* objects, not the caller's),
+    and a dict of fault/snapshot/restore accounting.
+    """
+    from repro.checkpoint.store import (gc_staging, load_snapshot,
+                                        save_snapshot)
+
+    injector = FaultInjector(plan)
+    engine = make_engine()
+    engine.chaos = injector
+    every = (engine.scfg.snapshot_every if snapshot_every is None
+             else snapshot_every)
+    for r in requests:
+        engine.submit(r)
+    engine.begin(seed)
+    report = {"crashes": 0, "restores": 0, "snapshots_taken": 0,
+              "snapshots_interrupted": 0, "staging_reclaimed": 0}
+
+    def take_snapshot():
+        if snapshot_dir is None:
+            return
+        state = engine.snapshot()
+
+        def interrupt():
+            if injector.fire("checkpoint_interrupt", engine.ticks):
+                raise CheckpointInterrupted(
+                    f"snapshot write killed at tick {engine.ticks}")
+
+        try:
+            save_snapshot(state, snapshot_dir, step=engine.ticks,
+                          interrupt=interrupt)
+            report["snapshots_taken"] += 1
+        except CheckpointInterrupted:
+            report["snapshots_interrupted"] += 1
+            # The orphaned staging dir is reclaimable immediately here:
+            # this harness is the only writer, so nothing is in flight.
+            report["staging_reclaimed"] += len(
+                gc_staging(snapshot_dir, grace=0.0))
+
+    take_snapshot()
+    while engine.pending():
+        try:
+            if injector.fire("crash", engine.ticks):
+                raise HostCrash(f"host died at tick {engine.ticks}")
+            engine.step()
+        except HostCrash:
+            report["crashes"] += 1
+            if snapshot_dir is None:
+                raise          # nothing to restore from: the crash is fatal
+            engine = make_engine()
+            engine.chaos = injector
+            state, _ = load_snapshot(snapshot_dir)
+            engine.restore(state)
+            report["restores"] += 1
+            continue
+        if (snapshot_dir is not None and every
+                and engine.ticks % every == 0):
+            take_snapshot()
+
+    out = [engine.requests[rid] for rid in sorted(engine.requests)]
+    report.update(injector.report())
+    report["engine_counters"] = dict(engine.counters)
+    return out, report

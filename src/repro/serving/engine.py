@@ -50,6 +50,7 @@ import numpy as np
 from repro.models import transformer as T
 from repro.models.attention import POS_SENTINEL, PagedLayout
 from repro.models.config import ModelConfig
+from repro.serving.chaos import KernelFault
 from repro.serving.kv_pool import KVBlockPool
 
 
@@ -99,6 +100,26 @@ class ServeConfig:
                                       # stays bit-identical to mesh=None
                                       # (docs/serving.md).  None =
                                       # single-device.
+    # ---- robustness (PagedEngine; docs/robustness.md) ----
+    deadline_ticks: int | None = None # default per-request deadline, in
+                                      # scheduler ticks from submission
+                                      # (Request.deadline_ticks overrides);
+                                      # expiry truncates a started request
+                                      # (its tokens stay a prefix of the
+                                      # undisturbed stream) and sheds a
+                                      # never-started one.  None = none.
+    shed_watermark: float | None = None  # pool-saturation fraction past
+                                      # which queued "besteffort" requests
+                                      # are rejected-with-reason instead of
+                                      # admitted; needs oversubscribe=True
+                                      # (worst-case-reserved admission
+                                      # blocks instead of overcommitting,
+                                      # so shedding could never relieve
+                                      # preemption pressure).  None = off.
+    snapshot_every: int = 0           # crash-snapshot cadence in ticks for
+                                      # serving/chaos.serve_with_chaos and
+                                      # launch/serve --snapshot-every
+                                      # (0 = only the initial snapshot)
 
     def __post_init__(self):
         if self.mesh is not None:
@@ -148,6 +169,23 @@ class ServeConfig:
                 f"{self.speculative!r}")
         if self.draft_k < 1:
             raise ValueError(f"draft_k must be >= 1, got {self.draft_k}")
+        if self.deadline_ticks is not None and self.deadline_ticks < 1:
+            raise ValueError(f"deadline_ticks must be >= 1, got "
+                             f"{self.deadline_ticks}")
+        if self.shed_watermark is not None:
+            if not 0.0 < self.shed_watermark < 1.0:
+                raise ValueError(
+                    f"shed_watermark must be in (0, 1), got "
+                    f"{self.shed_watermark}")
+            if not self.oversubscribe:
+                raise ValueError(
+                    "shed_watermark requires oversubscribe=True: worst-case"
+                    "-reserved admission blocks the head of line instead of "
+                    "overcommitting the pool, so saturation-based shedding "
+                    "could never relieve preemption pressure")
+        if self.snapshot_every < 0:
+            raise ValueError(f"snapshot_every must be >= 0, got "
+                             f"{self.snapshot_every}")
 
     # Resolved paged-layout sizes (None fields get max_len-derived defaults).
     def resolved_max_blocks(self) -> int:
@@ -167,11 +205,25 @@ class Request:
     max_new_tokens: int = 32
     generated: list = dataclasses.field(default_factory=list)
     rid: int = -1                     # assigned at submit()
+    # ---- robustness / QoS (PagedEngine; docs/robustness.md) ----
+    deadline_ticks: int | None = None # per-request deadline in scheduler
+                                      # ticks from submission (overrides
+                                      # ServeConfig.deadline_ticks)
+    slo: str = "standard"             # "besteffort" (sheddable past the
+                                      # watermark, victimized first) |
+                                      # "standard" | "strict" (victimized
+                                      # last)
     # per-request accounting, filled by the engine
     prefill_len: int = 0
     admitted_step: int = -1
     finished_step: int = -1
     preemptions: int = 0              # times this request was victimized
+    submitted_tick: int = -1          # engine tick at submit()
+    shed_reason: str | None = None    # "watermark" | "deadline" when the
+                                      # engine rejected it (no tokens)
+    deadline_hit: bool = False        # finished by deadline truncation
+                                      # (generated is a PREFIX of the
+                                      # undisturbed stream)
 
 
 def _supported(cfg: ModelConfig) -> None:
@@ -280,6 +332,42 @@ def _amax_leaves(caches) -> list:
     return out
 
 
+def _set_amax_leaves(caches, values: list):
+    """Write quant-scale leaves back into a paged cache pytree, in the
+    same deterministic traversal order :func:`_amax_leaves` reads them —
+    the restore half of engine snapshotting.  The running scales are
+    monotone and order-dependent (growth overshoots by ``AMAX_HEADROOM``),
+    so a restored engine must inherit the crash-time scales rather than
+    re-derive them from recomputed tokens: with identical scales the
+    recompute writes trigger no growth and every future growth event fires
+    identically to the undisturbed run."""
+    it = iter(values)
+
+    def rec(c):
+        if isinstance(c, dict):
+            out = {}
+            for key in sorted(c):
+                if key in ("k_amax", "v_amax"):
+                    ref = c[key]
+                    out[key] = jnp.asarray(
+                        np.asarray(next(it), np.float32).reshape(ref.shape),
+                        ref.dtype)
+                else:
+                    out[key] = rec(c[key])
+            return out
+        if isinstance(c, (list, tuple)):
+            new = [rec(x) for x in c]
+            return new if isinstance(c, list) else tuple(new)
+        return c
+
+    new = rec(caches)
+    leftover = sum(1 for _ in it)
+    if leftover:
+        raise ValueError(f"snapshot carries {leftover} extra quant-scale "
+                         f"leaves the cache has no home for")
+    return new
+
+
 def _attach_tables(caches, table: np.ndarray, length: np.ndarray):
     """Rebuild a paged cache pytree with the engine's authoritative block
     table / fill levels attached to every layer (stacked layers broadcast
@@ -307,10 +395,23 @@ def _attach_tables(caches, table: np.ndarray, length: np.ndarray):
 class _EngineCommon:
     """Shared scheduler-loop + measurement surface of the serving engines."""
 
+    def begin(self, seed: int = 0) -> None:
+        """Fix the sampling seed for a serving run.  Split out of
+        :meth:`run` so external drivers (``serving/chaos.py``) can own the
+        tick loop; a restored engine re-derives the same base key, keeping
+        every continuation token under its original (seed, rid, n) key."""
+        self._seed = seed
+        self._base_key = jax.random.PRNGKey(seed)
+
+    def pending(self) -> bool:
+        """True while any submitted request is unfinished (queued or in a
+        slot) — the tick-loop condition."""
+        return bool(self.queue or any(r is not None for r in self.slots))
+
     def run(self, seed: int = 0) -> None:
         """Drain queue + slots to completion, deterministically under seed."""
-        self._base_key = jax.random.PRNGKey(seed)
-        while self.queue or any(r is not None for r in self.slots):
+        self.begin(seed)
+        while self.pending():
             self.step()
 
     def generate(self, requests: list[Request], seed: int = 0):
@@ -389,6 +490,11 @@ class ContinuousBatchingEngine(_EngineCommon):
             raise ValueError(
                 "oversubscription needs the paged engine (block-pool "
                 "preemption); use PagedEngine")
+        if (scfg.deadline_ticks is not None
+                or scfg.shed_watermark is not None or scfg.snapshot_every):
+            raise ValueError(
+                "deadlines / load shedding / crash snapshots are "
+                "PagedEngine features (docs/robustness.md); use PagedEngine")
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
@@ -448,6 +554,7 @@ class ContinuousBatchingEngine(_EngineCommon):
         self.last_token = np.zeros((B,), np.int32)    # next decode input
         self._next_rid = 0
         self._step = 0
+        self._seed = None
         self._base_key = jax.random.PRNGKey(0)
         self.counters = {"prefill_tokens": 0, "decode_tokens": 0,
                          "decode_steps": 0, "decode_slot_steps": 0,
@@ -693,32 +800,14 @@ class PagedEngine(_EngineCommon):
                                  prefix_sharing=scfg.prefix_sharing,
                                  poison_cb=self._poison_blocks)
 
-        from repro.sharding.api import use_rules
+        # Deterministic fault injection (serving/chaos.py): when a
+        # FaultInjector is attached, the engine consults it at its
+        # injection points (pool claim, fused kernel call, drafter) keyed
+        # on self.ticks — nothing else in the tick path changes.
+        self.chaos = None
 
-        def prefill_fn(params, tokens, caches, positions, last_idx):
-            # tokens/positions [1, Sp]: one chunk of one slot's prompt,
-            # written straight into the shared pool through the slot's
-            # block-table row — no post-hoc cache insert.
-            with use_rules(self._rules):
-                logits, caches, _ = T.forward(params, tokens, cfg,
-                                              caches=caches,
-                                              positions=positions)
-            last = jax.lax.dynamic_slice_in_dim(logits, last_idx, 1, axis=1)
-            return last[:, 0], caches
-
-        def decode_fn(params, tokens, caches, positions):
-            with use_rules(self._rules):
-                logits, caches, _ = T.forward(params, tokens, cfg,
-                                              caches=caches,
-                                              positions=positions)
-            return logits[:, -1], caches
-
-        self._prefill = jax.jit(prefill_fn)
-        self._decode = jax.jit(decode_fn)
-
-        # Speculative decoding: drafter + the Sq=k+1 verify forward.  The
-        # verify closes over spec_verify=True so multi-query BitStopper
-        # attention routes through the paged verify (NOT block prefill).
+        # Speculative decoding: drafter selection happens before the jits
+        # are built (the verify closure exists iff a drafter does).
         self._drafter = None
         self._spec_k = scfg.draft_k
         if scfg.speculative != "off":
@@ -731,27 +820,11 @@ class PagedEngine(_EngineCommon):
             from repro.serving.speculative import make_drafter
             self._drafter = drafter if drafter is not None else \
                 make_drafter(scfg.speculative, cfg, params)
-            cfg_v = cfg.replace(spec_verify=True)
-
-            def verify_fn(params, tokens, caches, positions):
-                with use_rules(self._rules):
-                    logits, new_caches, _ = T.forward(
-                        params, tokens, cfg_v, caches=caches,
-                        positions=positions)
-                # Scale-growth probe: did this draft-block write grow any
-                # layer's pool-wide running max-abs?  (Non-BitStopper
-                # impls carry no amax leaves: grew is constant False.)
-                old_amax = _amax_leaves(caches)
-                new_amax = _amax_leaves(new_caches)
-                grew = jnp.zeros((), bool)
-                for o, n in zip(old_amax, new_amax):
-                    grew |= jnp.any(n > o)
-                return logits, new_caches, grew
-
-            self._verify = jax.jit(verify_fn)
         elif drafter is not None:
             raise ValueError(
                 "drafter passed but ServeConfig.speculative == 'off'")
+
+        self._build_jits()
 
         B = scfg.max_slots
         self.caches = T.init_caches(cfg, B, scfg.max_len, self._dtype,
@@ -776,7 +849,16 @@ class PagedEngine(_EngineCommon):
         self._next_rid = 0
         self._admit_seq = 0
         self._step = 0
+        self._seed = None
         self._base_key = jax.random.PRNGKey(0)
+        # Public monotone tick counter: every fault-injection decision,
+        # deadline, and snapshot cadence keys on it (never wall clock), so
+        # chaos runs are replayable bit-for-bit.  Persisted by snapshot().
+        self.ticks = 0
+        # Every request ever submitted, by rid — makes a snapshot (and a
+        # post-crash restore) self-contained: the full trace output is
+        # recoverable from the engine alone.
+        self.requests: dict[int, Request] = {}
         self.counters = {"prefill_tokens": 0, "prefix_hit_tokens": 0,
                          "prefill_chunks": 0, "decode_tokens": 0,
                          "decode_steps": 0, "decode_slot_steps": 0,
@@ -784,7 +866,111 @@ class PagedEngine(_EngineCommon):
                          "spec_ticks": 0, "spec_proposed": 0,
                          "spec_accepted": 0, "spec_bailouts": 0,
                          "preemptions": 0, "preempt_freed_blocks": 0,
-                         "preempt_dropped_tokens": 0}
+                         "preempt_dropped_tokens": 0,
+                         "requests_shed": 0, "shed_watermark": 0,
+                         "shed_deadline": 0, "deadline_truncated": 0,
+                         "degradations": 0, "drafter_failures": 0,
+                         "forced_preemptions": 0}
+
+    # ------------------------------------------------------------------
+    # jitted forwards + the kernel circuit breaker
+    # ------------------------------------------------------------------
+
+    def _build_jits(self) -> None:
+        """(Re)build the jitted forward closures from the *current*
+        ``self.cfg`` — at construction, and again when the circuit breaker
+        flips ``fused_decode`` off.  The closures capture cfg by value, so
+        a degrade must rebuild them; the cache pytree itself is untouched
+        (the read path keys on cfg, the write path on cache structure, and
+        the f32 pool is always maintained — the fallback reads the same
+        cache the kernel did)."""
+        cfg = self.cfg
+        from repro.sharding.api import use_rules
+
+        def prefill_fn(params, tokens, caches, positions, last_idx):
+            # tokens/positions [1, Sp]: one chunk of one slot's prompt,
+            # written straight into the shared pool through the slot's
+            # block-table row — no post-hoc cache insert.
+            with use_rules(self._rules):
+                logits, caches, _ = T.forward(params, tokens, cfg,
+                                              caches=caches,
+                                              positions=positions)
+            last = jax.lax.dynamic_slice_in_dim(logits, last_idx, 1, axis=1)
+            return last[:, 0], caches
+
+        def decode_fn(params, tokens, caches, positions):
+            with use_rules(self._rules):
+                logits, caches, _ = T.forward(params, tokens, cfg,
+                                              caches=caches,
+                                              positions=positions)
+            return logits[:, -1], caches
+
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn)
+
+        # The Sq=k+1 verify forward closes over spec_verify=True so
+        # multi-query BitStopper attention routes through the paged verify
+        # (NOT block prefill).
+        if self._drafter is not None:
+            cfg_v = cfg.replace(spec_verify=True)
+
+            def verify_fn(params, tokens, caches, positions):
+                with use_rules(self._rules):
+                    logits, new_caches, _ = T.forward(
+                        params, tokens, cfg_v, caches=caches,
+                        positions=positions)
+                # Scale-growth probe: did this draft-block write grow any
+                # layer's pool-wide running max-abs?  (Non-BitStopper
+                # impls carry no amax leaves: grew is constant False.)
+                old_amax = _amax_leaves(caches)
+                new_amax = _amax_leaves(new_caches)
+                grew = jnp.zeros((), bool)
+                for o, n in zip(old_amax, new_amax):
+                    grew |= jnp.any(n > o)
+                return logits, new_caches, grew
+
+            self._verify = jax.jit(verify_fn)
+
+    def _degrade(self, why: str) -> None:
+        """Per-engine circuit breaker: a fused-kernel fault flips the
+        engine onto the pure-JAX gather oracle for the rest of its life.
+        Still **lossless** — fused and fallback decode/verify are
+        bit-identical (tests/test_paged_decode.py, fused-vs-fallback trace
+        tests), so degrading never changes served tokens, only per-step
+        traffic.  Counter-reported as ``degradations``."""
+        if not self.cfg.fused_decode:
+            raise RuntimeError(
+                f"kernel fault on the gather-fallback path ({why}): the "
+                f"breaker has nothing simpler to fall back to")
+        self.cfg = self.cfg.replace(fused_decode=False)
+        self._build_jits()
+        self.counters["degradations"] += 1
+
+    def _guarded_decode(self, *args):
+        """The decode forward behind the circuit breaker.  A failed jitted
+        call leaves ``self.caches`` unmutated (the caller assigns only on
+        return), so the post-degrade retry re-runs the *same tick* through
+        the fallback against identical state — bit-identical recovery."""
+        try:
+            if (self.chaos is not None and self.cfg.fused_decode
+                    and self.chaos.fire("kernel_fail", self.ticks)):
+                raise KernelFault(
+                    f"injected fused-decode fault at tick {self.ticks}")
+            return self._decode(*args)
+        except KernelFault as e:
+            self._degrade(str(e))
+            return self._decode(*args)
+
+    def _guarded_verify(self, *args):
+        try:
+            if (self.chaos is not None and self.cfg.fused_decode
+                    and self.chaos.fire("kernel_fail", self.ticks)):
+                raise KernelFault(
+                    f"injected fused-verify fault at tick {self.ticks}")
+            return self._verify(*args)
+        except KernelFault as e:
+            self._degrade(str(e))
+            return self._verify(*args)
 
     # ------------------------------------------------------------------
     # sanitizer poison hook
@@ -881,10 +1067,30 @@ class PagedEngine(_EngineCommon):
             raise ValueError(
                 f"request needs {need} KV blocks, pool has "
                 f"{self.pool.capacity} (raise pool_blocks)")
+        if req.slo not in ("besteffort", "standard", "strict"):
+            raise ValueError(
+                f"slo must be besteffort|standard|strict, got {req.slo!r}")
+        if req.deadline_ticks is not None and req.deadline_ticks < 1:
+            raise ValueError(
+                f"deadline_ticks must be >= 1, got {req.deadline_ticks}")
         req.rid = self._next_rid
         self._next_rid += 1
+        req.submitted_tick = self.ticks
+        self.requests[req.rid] = req
         self.queue.append(req)
         return req
+
+    def _deadline_of(self, req: Request) -> int | None:
+        """Effective deadline in ticks from submission (request override,
+        else the config default).  A request submitted at tick t is
+        expired once ``self.ticks > t + deadline`` — it had ``deadline``
+        full ticks of service."""
+        return (req.deadline_ticks if req.deadline_ticks is not None
+                else self.scfg.deadline_ticks)
+
+    def _expired(self, req: Request) -> bool:
+        ddl = self._deadline_of(req)
+        return ddl is not None and self.ticks > req.submitted_tick + ddl
 
     def _match_prefix(self, tokens: np.ndarray,
                       keep_last: bool = True) -> list[int]:
@@ -917,6 +1123,36 @@ class PagedEngine(_EngineCommon):
     def _admit(self) -> None:
         while self.queue and None in self.slots:
             req = self.queue[0]
+            # Deadline expiry in queue: a request that already produced
+            # tokens (a preemption victim awaiting resume) *finishes
+            # truncated* — its emitted tokens are a prefix of the
+            # undisturbed stream, never divergent; a request with nothing
+            # emitted yet is shed outright (reject-with-reason).
+            if self._expired(req):
+                self.queue.popleft()
+                req.finished_step = self._step
+                if req.generated:
+                    req.deadline_hit = True
+                    self.counters["deadline_truncated"] += 1
+                    self.counters["requests_finished"] += 1
+                else:
+                    req.shed_reason = "deadline"
+                    self.counters["requests_shed"] += 1
+                    self.counters["shed_deadline"] += 1
+                continue
+            # Load shedding: past the saturation watermark, besteffort
+            # requests that never started are rejected instead of queued
+            # into a preemption storm.  Started requests are never shed —
+            # shedding is lossy only for work with zero sunk cost.
+            if (self.scfg.shed_watermark is not None
+                    and req.slo == "besteffort" and not req.generated
+                    and self.pool.saturation() > self.scfg.shed_watermark):
+                self.queue.popleft()
+                req.finished_step = self._step
+                req.shed_reason = "watermark"
+                self.counters["requests_shed"] += 1
+                self.counters["shed_watermark"] += 1
+                continue
             resumed = len(req.generated) > 0
             # Resume context: everything already cached at preemption time
             # — the prompt plus all generated tokens but the last (which is
@@ -1036,6 +1272,13 @@ class PagedEngine(_EngineCommon):
         done = len(req.generated) >= req.max_new_tokens
         if self.scfg.eos_id is not None and tok == self.scfg.eos_id:
             done = True
+        # Mid-decode deadline: finish truncated after this tick's token.
+        # Truncation only ever *shortens* the stream — the emitted tokens
+        # are exactly the undisturbed stream's prefix.
+        if not done and self._expired(req):
+            req.deadline_hit = True
+            self.counters["deadline_truncated"] += 1
+            done = True
         if not done:
             return
         req.finished_step = self._step
@@ -1054,6 +1297,10 @@ class PagedEngine(_EngineCommon):
         """One scheduler tick: admit, one prefill chunk, one decode step
         (plain or speculative) over every prefilled slot.  Returns False
         when there is no work."""
+        # The tick counter is the engine's only clock: fault injection,
+        # deadlines, and snapshot cadence all key on it (wall clock is
+        # lint-banned from serving/ — repo-tick-wallclock).
+        self.ticks += 1
         self._admit()
         self._prefill_tick()
         active = [i for i, st in enumerate(self.slots)
@@ -1086,6 +1333,128 @@ class PagedEngine(_EngineCommon):
         return True
 
     # ------------------------------------------------------------------
+    # crash-consistent snapshot / restore (docs/robustness.md)
+    # ------------------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """Crash-consistent engine state, fully JSON-serializable.
+
+        Persists every piece of host-side truth: the request registry
+        (prompts, generated tokens, QoS/accounting fields), queue and slot
+        occupancy, scheduler counters, tick counter, sampling seed, the
+        pool's allocator state (free list, refcounts, registry,
+        reservations — for fidelity and offline inspection), and the
+        pool-wide quant-scale leaves (``k_amax``/``v_amax``).
+
+        Deliberately NOT persisted: device KV.  Restore re-materializes it
+        through the PR-5 lossless-resume path — in-flight requests requeue
+        with their generated tokens and recompute their context via
+        chunked prefill (re-sharing prefix blocks across each other as
+        they go), which is bit-identical because K/V written for (token,
+        position) is schedule-invariant and the restored quant scales
+        make the recompute's rescale trajectory match the undisturbed
+        run's exactly."""
+        active = sorted(
+            (st.seq, st.req.rid) for st in self.slots if st is not None)
+        reqs = []
+        for rid in sorted(self.requests):
+            r = self.requests[rid]
+            reqs.append({
+                "rid": rid,
+                "prompt": [int(t) for t in r.prompt],
+                "max_new_tokens": int(r.max_new_tokens),
+                "generated": [int(t) for t in r.generated],
+                "deadline_ticks": r.deadline_ticks,
+                "slo": r.slo,
+                "prefill_len": int(r.prefill_len),
+                "admitted_step": int(r.admitted_step),
+                "finished_step": int(r.finished_step),
+                "preemptions": int(r.preemptions),
+                "submitted_tick": int(r.submitted_tick),
+                "shed_reason": r.shed_reason,
+                "deadline_hit": bool(r.deadline_hit),
+            })
+        return {
+            "version": 1,
+            "ticks": int(self.ticks),
+            "step": int(self._step),
+            "seed": self._seed,
+            "next_rid": int(self._next_rid),
+            "admit_seq": int(self._admit_seq),
+            "counters": {k: int(v) for k, v in self.counters.items()},
+            "requests": reqs,
+            "queue": [r.rid for r in self.queue],
+            "active": [rid for _, rid in active],
+            "amax": [np.asarray(a, np.float32).tolist()
+                     for a in _amax_leaves(self.caches)],
+            "pool": self.pool.snapshot(),
+        }
+
+    def restore(self, state: dict) -> None:
+        """Rebuild scheduler truth from a snapshot into THIS engine, which
+        must be freshly constructed (a host crash destroyed the old
+        process — device KV included — so restore starts from a clean pool
+        and empty caches, not from snapshot-era block ids).
+
+        In-flight requests requeue exactly like preemption victims
+        (admission order first, then the snapshot's queue order): the
+        ordinary ``_admit`` resume path recomputes each context and
+        replays the last sampled token, so the continuation's tokens are
+        bit-identical to an undisturbed run.  The quant-scale leaves are
+        written back *before* any recompute — see :func:`_set_amax_leaves`
+        for why that pins the BitStopper scale trajectory."""
+        if self.requests or self.ticks or self.pool.live_blocks():
+            raise RuntimeError(
+                "restore() needs a freshly constructed engine (the crash "
+                "destroyed the old one; device KV is recomputed, not "
+                "re-mapped)")
+        if state.get("version") != 1:
+            raise ValueError(f"unknown snapshot version "
+                             f"{state.get('version')!r}")
+        self.ticks = int(state["ticks"])
+        self._step = int(state["step"])
+        self._next_rid = int(state["next_rid"])
+        self._admit_seq = int(state["admit_seq"])
+        if state["seed"] is not None:
+            self.begin(int(state["seed"]))
+        self.counters.update(state["counters"])
+        # Pool bookkeeping counters carry across the crash so benchmark
+        # accounting stays cumulative; the allocator itself restarts empty
+        # (every restored block is re-claimed through the resume path).
+        self.pool.peak_live_blocks = int(state["pool"]["peak_live_blocks"])
+        self.pool.alloc_count = int(state["pool"]["alloc_count"])
+        self.requests = {}
+        for d in state["requests"]:
+            self.requests[d["rid"]] = Request(
+                prompt=np.asarray(d["prompt"], np.int32),
+                max_new_tokens=d["max_new_tokens"],
+                generated=list(d["generated"]),
+                rid=d["rid"],
+                deadline_ticks=d["deadline_ticks"],
+                slo=d["slo"],
+                prefill_len=d["prefill_len"],
+                admitted_step=d["admitted_step"],
+                finished_step=d["finished_step"],
+                preemptions=d["preemptions"],
+                submitted_tick=d["submitted_tick"],
+                shed_reason=d["shed_reason"],
+                deadline_hit=d["deadline_hit"],
+            )
+        self.caches = _set_amax_leaves(self.caches, state["amax"])
+        if self._rules is not None:
+            # Re-commit the restored leaves to their mesh placement: the
+            # scale injection above rebuilt host-side arrays.
+            from repro.sharding.rules import cache_shardings
+            self.caches = jax.device_put(
+                self.caches, cache_shardings(self._rules, self.caches))
+        # Crash-time slot occupants re-admit first (they were admitted
+        # before anything still queued), in admission order; then the
+        # queue in its snapshot order.  ``_admit`` distinguishes fresh
+        # vs resumed requests by ``len(generated)`` as usual.
+        for rid in list(state["active"]) + list(state["queue"]):
+            self.queue.append(self.requests[rid])
+
+    # ------------------------------------------------------------------
     # oversubscription: victim preemption + lossless requeue
     # ------------------------------------------------------------------
 
@@ -1102,21 +1471,40 @@ class PagedEngine(_EngineCommon):
                 n += 1
         return n
 
+    _SLO_RANK = {"besteffort": 0, "standard": 1, "strict": 2}
+
     def _select_victim(self, needy: int) -> int | None:
         """Pick the slot to preempt so ``needy`` can claim a block.
-        ``fewest_tokens`` victimizes the request with the least generated
-        output (cheapest recompute, closest to vLLM's default); ``lifo``
-        victimizes the newest admission (oldest requests never starve).
-        Slots whose preemption would free nothing are never chosen."""
+
+        SLO class and deadline slack dominate: besteffort slots are
+        victimized before standard before strict, and within a class the
+        request with the MOST ticks of deadline slack is victimized first
+        (it can best afford the resume recompute).  With neither SLO
+        classes nor deadlines in play those keys are constant and the
+        policy reduces to its pre-QoS behavior: ``fewest_tokens``
+        victimizes the request with the least generated output (cheapest
+        recompute, closest to vLLM's default); ``lifo`` victimizes the
+        newest admission (oldest requests never starve).  Slots whose
+        preemption would free nothing are never chosen."""
         cands = [i for i, st in enumerate(self.slots)
                  if st is not None and i != needy
                  and self._freeable_blocks(i) > 0]
         if not cands:
             return None
-        if self.scfg.preempt_policy == "lifo":
-            return max(cands, key=lambda i: self.slots[i].seq)
-        return min(cands, key=lambda i: (len(self.slots[i].req.generated),
-                                         -self.slots[i].seq))
+
+        def vkey(i):
+            st = self.slots[i]
+            req = st.req
+            ddl = self._deadline_of(req)
+            slack = (float("inf") if ddl is None
+                     else req.submitted_tick + ddl - self.ticks)
+            if self.scfg.preempt_policy == "lifo":
+                pol = (-st.seq,)
+            else:
+                pol = (len(req.generated), -st.seq)
+            return (self._SLO_RANK.get(req.slo, 1), -slack) + pol
+
+        return min(cands, key=vkey)
 
     def _preempt(self, slot: int) -> None:
         """Evict a running request to reclaim its blocks, requeueing it for
@@ -1171,11 +1559,17 @@ class PagedEngine(_EngineCommon):
                 break
         self.queue.insert(pos, req)
 
-    def _claim_block(self, slot: int, j: int) -> int:
+    def _claim_block(self, slot: int, j: int, optional: bool = False) -> int:
         """Materialize the physical block behind table entry j — out of the
         slot's admission reservation when one remains, else (oversubscribed
         admission only) from the pool's spare capacity, preempting victims
-        until a block is claimable."""
+        until a block is claimable.
+
+        ``optional`` marks a speculative draft-block claim: those never
+        preempt (the caller pre-checks spare capacity and truncates the
+        draft when there is none), so the injected pool-dry consult is
+        skipped here — the spec tick consults it itself and answers with a
+        draft truncation, exactly what real dryness does at that point."""
         st = self.slots[slot]
         if st.blocks_reserved > 0:
             bid = self.pool.alloc(reserved=True)
@@ -1185,6 +1579,17 @@ class PagedEngine(_EngineCommon):
                 raise RuntimeError(
                     "paged scheduler invariant violated: slot "
                     f"{slot} needs a decode block but has no reservation")
+            # Injected pool-dry (serving/chaos.py): force one preemption
+            # cycle even though the pool is not actually exhausted —
+            # exercises the lossless preempt/resume machinery at scripted
+            # points.  If no victim exists the forced dryness is dropped
+            # rather than wedging a healthy pool.
+            if (not optional and self.chaos is not None
+                    and self.chaos.fire("pool_dry", self.ticks)):
+                victim = self._select_victim(needy=slot)
+                if victim is not None:
+                    self._preempt(victim)
+                    self.counters["forced_preemptions"] += 1
             while self.pool.available() < 1:
                 victim = self._select_victim(needy=slot)
                 if victim is None:
@@ -1214,7 +1619,7 @@ class PagedEngine(_EngineCommon):
             positions[i, 0] = self.lengths[i]
         tokens = jnp.asarray(self.last_token[:, None])
         caches = _attach_tables(self.caches, self.table, self.lengths)
-        logits, self.caches = self._decode(
+        logits, self.caches = self._guarded_decode(
             self.params, tokens, caches, jnp.asarray(positions))
         rids = [st.req.rid if st is not None else 0 for st in self.slots]
         counts = [len(st.req.generated) if st is not None else 0
@@ -1265,6 +1670,14 @@ class PagedEngine(_EngineCommon):
         first divergence truncates acceptance and everything after it is
         rolled back untouched."""
         k = self._spec_k
+        # Injected (or real) drafter death degrades the tick, never the
+        # trace: an empty draft set falls through to the plain decode
+        # below — speculation only ever changes forward count, so a dead
+        # drafter costs throughput, not tokens.
+        drafter_down = (self.chaos is not None
+                        and self.chaos.fire("drafter_fail", self.ticks))
+        if drafter_down:
+            self.counters["drafter_failures"] += 1
         drafts: dict[int, list[int]] = {}
         for i in active:
             req = self.slots[i].req
@@ -1272,12 +1685,20 @@ class PagedEngine(_EngineCommon):
             # the admission reservation; cap so written positions stay
             # within the non-speculative worst case.
             cap = min(k, req.max_new_tokens - len(req.generated) - 1)
-            if cap <= 0:
+            if drafter_down or cap <= 0:
                 drafts[i] = []
                 continue
             ctx = np.concatenate([np.asarray(req.prompt, np.int32),
                                   np.asarray(req.generated, np.int32)])
-            drafts[i] = [int(t) for t in self._drafter.propose(ctx, cap)][:cap]
+            try:
+                drafts[i] = [int(t)
+                             for t in self._drafter.propose(ctx, cap)][:cap]
+            except Exception:
+                # A real drafter exception: pluggable drafters are allowed
+                # to die without taking the engine down — this slot just
+                # decodes plain this tick.
+                self.counters["drafter_failures"] += 1
+                drafts[i] = []
         if not any(drafts[i] for i in active):
             # Nothing proposed anywhere (cold n-gram cache, budget tails):
             # a verify pass would just be a slow plain tick.
@@ -1308,16 +1729,24 @@ class PagedEngine(_EngineCommon):
             # from the slot's reservation or the pool's spare capacity,
             # NEVER by preemption (evicting a live request for tokens that
             # may be rejected is a losing trade): when the pool is tight
-            # the draft is truncated to the blocks it could get.
+            # the draft is truncated to the blocks it could get.  An
+            # injected pool-dry on an unreserved claim here takes the
+            # real-dryness path — the draft truncates; forcing a
+            # preemption at this point would evict an *active* slot in
+            # the middle of its own speculative tick.
             for j in range(base // self._page + 1,
                            (base + len(row) - 1) // self._page + 1):
                 if self.table[i, j] != 0:
                     continue
                 reserved = st.blocks_reserved > 0
-                if (reserved or (self.scfg.oversubscribe
-                                 and self.pool.available() >= 1)):
-                    new_blocks[i].append((j, self._claim_block(i, j),
-                                          reserved))
+                forced_dry = (not reserved and self.chaos is not None
+                              and self.chaos.fire("pool_dry", self.ticks))
+                if not forced_dry and (
+                        reserved or (self.scfg.oversubscribe
+                                     and self.pool.available() >= 1)):
+                    new_blocks[i].append(
+                        (j, self._claim_block(i, j, optional=True),
+                         reserved))
                 else:
                     keep = j * self._page - base
                     row = row[:keep]
@@ -1327,7 +1756,7 @@ class PagedEngine(_EngineCommon):
             positions[i, :len(row)] = base + np.arange(len(row))
 
         caches = _attach_tables(self.caches, self.table, self.lengths)
-        logits, new_caches, grew = self._verify(
+        logits, new_caches, grew = self._guarded_verify(
             self.params, jnp.asarray(tokens), caches,
             jnp.asarray(positions))
 

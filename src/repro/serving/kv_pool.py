@@ -85,6 +85,36 @@ class KVBlockPool:
         minus outstanding reservations."""
         return len(self._free) + len(self._cached) - self._reserved
 
+    def saturation(self) -> float:
+        """Committed fraction of capacity: 1 - available / capacity.
+        Counts live blocks AND outstanding reservations (capacity already
+        promised is just as unavailable as capacity in use) — the signal
+        the engine's load-shedding watermark thresholds on."""
+        return 1.0 - self.available() / self.capacity
+
+    def snapshot(self) -> dict:
+        """Full allocator state as JSON-serializable plain data, for the
+        engine's crash snapshot.  Restore does NOT reinstate it — after a
+        host crash the device KV behind these block ids is gone, so a
+        restored engine re-claims blocks through the resume path against a
+        fresh pool — but persisting it keeps the snapshot a faithful,
+        inspectable record of crash-time occupancy (and carries the
+        bookkeeping counters across)."""
+        return {
+            "pool_blocks": self.pool_blocks,
+            "page_size": self.page_size,
+            "prefix_sharing": self.prefix_sharing,
+            "free": list(self._free),
+            "ref": {str(bid): n for bid, n in sorted(self._ref.items())},
+            "cached": [[list(key), bid]
+                       for key, bid in self._cached.items()],
+            "registry": [[list(key), bid]
+                         for key, bid in sorted(self._registry.items())],
+            "reserved": self._reserved,
+            "peak_live_blocks": self.peak_live_blocks,
+            "alloc_count": self.alloc_count,
+        }
+
     def reserve(self, n: int) -> None:
         if n < 0:
             raise ValueError(f"cannot reserve {n} blocks")

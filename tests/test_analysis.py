@@ -333,6 +333,36 @@ def test_seeded_nondeterminism(tmp_path):
     assert 9 not in lines                  # mtime comparison is exempt
 
 
+def test_seeded_tick_wallclock(tmp_path):
+    """serving/ tick paths are wall-clock-free by rule (docs/robustness.md):
+    importing time or datetime there at all is a finding — engine decisions
+    must key on the tick counter, and the watchdog (the one legitimate
+    clock consumer) lives in runtime/ with an injected clock."""
+    rel = _write(tmp_path, "src/repro/serving/sched.py", """\
+        import time
+        from datetime import datetime
+
+        def stamp():
+            return time.monotonic()
+        """)
+    findings = _lint(tmp_path, tickpath_dirs=["src/repro/serving"])
+    got = [(f.file, f.line) for f in findings
+           if f.rule == "repo-tick-wallclock"]
+    assert (rel, 1) in got and (rel, 2) in got
+
+
+def test_tick_wallclock_scoped_to_serving(tmp_path):
+    # The same imports OUTSIDE the tick-path dirs are not this rule's
+    # business (repo-nondeterminism separately polices call sites).
+    _write(tmp_path, "src/repro/runtime/dog.py", """\
+        import time
+
+        CLOCK = time.monotonic
+        """)
+    findings = _lint(tmp_path, tickpath_dirs=["src/repro/serving"])
+    assert [f for f in findings if f.rule == "repo-tick-wallclock"] == []
+
+
 def test_lint_clean_on_this_repo():
     root = pathlib.Path(__file__).resolve().parent.parent
     findings = run_lint(root)

@@ -1,0 +1,177 @@
+"""Runtime fault-tolerance tests: heartbeat cluster monitor, elastic mesh
+decisions, straggler EMA policy, and the stuck-tick engine watchdog — all
+driven by injected fake clocks (never real ``time.monotonic``), matching
+the wall-clock discipline in docs/robustness.md."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import transformer as T
+from repro.runtime import (
+    ClusterMonitor,
+    ElasticMeshManager,
+    EngineWatchdog,
+    StragglerPolicy,
+    StuckTickError,
+)
+from repro.serving import PagedEngine, Request, ServeConfig
+
+
+class FakeClock:
+    """Deterministic monotonic clock: advances only when told to."""
+
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> None:
+        self.now += dt
+
+
+# ---------------------------------------------------------------------------
+# ClusterMonitor / ElasticMeshManager / StragglerPolicy
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_monitor_timeouts_on_injected_clock():
+    clk = FakeClock()
+    mon = ClusterMonitor(n_nodes=4, timeout=10.0, clock=clk)
+    assert mon.failed_nodes() == set() and mon.healthy_count() == 4
+
+    clk.advance(9.0)
+    for n in (0, 1, 2):                    # node 3 goes silent
+        mon.heartbeat(n)
+    assert mon.failed_nodes() == set()     # 9s silence < 10s timeout
+    clk.advance(2.0)
+    assert mon.failed_nodes() == {3}
+    assert mon.healthy_count() == 3
+
+    mon.inject_failure(1)                  # failure beats heartbeats
+    mon.heartbeat(1)
+    assert mon.failed_nodes() == {1, 3}
+    mon.recover(1)
+    assert mon.failed_nodes() == {3}
+
+
+def test_elastic_mesh_preserves_tp_and_shrinks_data():
+    mgr = ElasticMeshManager(model_parallel=4, devices_per_node=4)
+    d = mgr.decide(healthy_nodes=3)        # 12 devices / tp=4
+    assert (d.data, d.model, d.devices) == (3, 4, 12)
+    # Non-divisible survivor counts round the data axis down.
+    assert mgr.decide(healthy_nodes=5).data == 5
+    mgr2 = ElasticMeshManager(model_parallel=8, devices_per_node=4)
+    assert mgr2.decide(healthy_nodes=3).data == 1
+    with pytest.raises(RuntimeError, match="cannot host"):
+        mgr2.decide(healthy_nodes=1)
+
+
+def test_straggler_policy_ema_and_reassignment():
+    pol = StragglerPolicy(slack=2.0, ema_alpha=0.5)
+    assert pol.deadline() is None
+    assert not pol.is_straggler(1e9)       # no EMA yet: nothing to compare
+    pol.observe(1.0)
+    assert pol.deadline() == pytest.approx(2.0)
+    assert not pol.is_straggler(2.0) and pol.is_straggler(2.1)
+    pol.observe(2.0)                       # ema -> 1.5, deadline -> 3.0
+    assert pol.deadline() == pytest.approx(3.0)
+    # Donor choice is a pure function of (step, failed shard).
+    healthy = [0, 1, 2, 5]
+    picks = [StragglerPolicy.reassign_shard(3, healthy, s) for s in range(4)]
+    assert picks == [StragglerPolicy.reassign_shard(3, healthy, s)
+                     for s in range(4)]
+    assert all(p in healthy for p in picks)
+
+
+# ---------------------------------------------------------------------------
+# EngineWatchdog
+# ---------------------------------------------------------------------------
+
+
+class TickEngine:
+    """Stub engine whose per-tick durations come from a script; the fake
+    clock advances by the scripted amount inside step()."""
+
+    def __init__(self, clk, durations):
+        self.clk = clk
+        self.durations = list(durations)
+        self.stepped = 0
+
+    def begin(self, seed=0):
+        pass
+
+    def pending(self):
+        return bool(self.durations)
+
+    def step(self):
+        self.clk.advance(self.durations.pop(0))
+        self.stepped += 1
+        return self.pending()
+
+
+def test_watchdog_warmup_never_flags():
+    clk = FakeClock()
+    # 3 monster compile ticks, then steady state: with warmup=3 the
+    # compiles seed the EMA but are exempt from the deadline check.
+    eng = TickEngine(clk, [50.0, 40.0, 30.0, 1.0, 1.0, 1.0])
+    dog = EngineWatchdog(eng, StragglerPolicy(slack=2.0, ema_alpha=0.5),
+                         clock=clk, warmup=3)
+    dog.run(seed=0)
+    assert eng.stepped == 6
+    assert dog.ticks_seen == 6 and dog.last_tick_time == 1.0
+
+
+def test_watchdog_raises_on_stuck_tick_before_ema_dilution():
+    clk = FakeClock()
+    eng = TickEngine(clk, [1.0, 1.0, 1.0, 1.0, 100.0, 1.0])
+    pol = StragglerPolicy(slack=2.5, ema_alpha=0.1)
+    dog = EngineWatchdog(eng, pol, clock=clk, warmup=2)
+    with pytest.raises(StuckTickError, match="deadline"):
+        dog.run(seed=0)
+    assert eng.stepped == 5                # died on the monster tick
+    # The monster tick was checked BEFORE joining the EMA: the deadline
+    # that caught it is still the steady-state one.
+    assert pol.ema == pytest.approx(1.0)
+    assert dog.last_tick_time == 100.0
+
+
+def test_watchdog_rejects_bad_warmup():
+    with pytest.raises(ValueError, match="warmup"):
+        EngineWatchdog(TickEngine(FakeClock(), []), warmup=0)
+
+
+def test_watchdog_drains_real_engine_losslessly():
+    """The watchdog is a transparent wrapper: draining a real PagedEngine
+    under supervision (fake clock, generous slack) serves exactly the
+    tokens of an unsupervised run."""
+    cfg = reduced_config("stablelm-1.6b")
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(max_len=32, max_slots=2, prefill_bucket=8,
+                       page_size=8)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, L, dtype=np.int32)
+               for L in (6, 9)]
+
+    ref = [Request(prompt=p.copy(), max_new_tokens=3) for p in prompts]
+    PagedEngine(cfg, params, scfg).generate(ref, seed=0)
+
+    clk = FakeClock()
+    eng = PagedEngine(cfg, params, scfg)
+    real_step = eng.step
+
+    def step():
+        clk.advance(1.0)       # constant tick time: EMA never trips
+        return real_step()
+
+    eng.step = step
+    reqs = [Request(prompt=p.copy(), max_new_tokens=3) for p in prompts]
+    for r in reqs:
+        eng.submit(r)
+    dog = EngineWatchdog(eng, StragglerPolicy(slack=2.5), clock=clk,
+                         warmup=2)
+    dog.run(seed=0)
+    assert [r.generated for r in reqs] == [r.generated for r in ref]
+    assert dog.ticks_seen == eng.ticks

@@ -256,3 +256,48 @@ def test_constructor_validation():
         KVBlockPool(1, 8)
     with pytest.raises(ValueError):
         KVBlockPool(4, 0)
+
+
+def test_saturation_counts_live_and_reserved():
+    """saturation() = 1 - available/capacity: live blocks AND outstanding
+    reservations both count as committed — the load-shedding watermark
+    signal (docs/robustness.md)."""
+    pool = KVBlockPool(5, 8)                 # capacity 4
+    assert pool.saturation() == 0.0
+    b = pool.alloc()
+    assert pool.saturation() == pytest.approx(0.25)
+    pool.reserve(2)                          # promised, not yet in use
+    assert pool.saturation() == pytest.approx(0.75)
+    pool.cancel_reservation(2)
+    pool.decref(b)
+    assert pool.saturation() == 0.0
+    # A parked (registered, refcount-0) block is still available capacity.
+    c = pool.alloc()
+    pool.register((1,), c)
+    pool.decref(c)
+    assert pool.saturation() == 0.0
+
+
+def test_snapshot_is_plain_json_and_faithful():
+    """pool.snapshot() is the allocator's contribution to the engine crash
+    snapshot: JSON-serializable plain data mirroring the full state."""
+    import json
+
+    pool = KVBlockPool(6, 8, prefix_sharing=True)
+    a, b = pool.alloc(), pool.alloc(reserved=False)
+    pool.register((1, 2), a)
+    pool.incref(a)
+    pool.reserve(2)
+    pool.decref(b)
+
+    snap = pool.snapshot()
+    assert snap == json.loads(json.dumps(snap))   # round-trips as JSON
+    assert snap["pool_blocks"] == 6 and snap["page_size"] == 8
+    assert snap["ref"] == {str(a): 2}
+    assert snap["registry"] == [[[1, 2], a]]
+    assert snap["reserved"] == 2
+    assert b in snap["free"]
+    assert snap["alloc_count"] == 2
+    assert snap["peak_live_blocks"] == 2
+    # snapshot() is read-only: the pool keeps working untouched.
+    assert pool.live_blocks() == 1 and pool.available() == 2
