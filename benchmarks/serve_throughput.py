@@ -433,6 +433,183 @@ def run_chaos(arch="stablelm-1.6b", impl="xla", alpha=0.6, seed=0,
     return rows
 
 
+def _percentile(values, q):
+    return float(np.percentile(np.asarray(values, np.float64), q)) \
+        if values else None
+
+
+def _reset_serving_state(eng):
+    """Post-warmup reset: fresh pool, zeroed counters, EMPTY rid space —
+    the async arms' bit-identity gate needs door-assigned rids to start
+    at 0 exactly like the synchronous reference trace."""
+    from repro.serving import KVBlockPool
+    eng.pool = KVBlockPool(eng.layout.pool_blocks, eng.layout.page_size,
+                           prefix_sharing=eng.scfg.prefix_sharing)
+    eng.counters = {k: 0 for k in eng.counters}
+    eng.requests.clear()
+    eng._next_rid = 0
+    eng.ticks = 0
+
+
+def run_async(arch="stablelm-1.6b", impl="xla", alpha=0.6, n_requests=8,
+              slots=4, seed=0, lens=(8, 24, 40), new_lo=8, new_hi=24,
+              check=False):
+    """Async front-door arms: the mixed trace served through
+    ``AsyncFrontDoor`` streams, colocated (paged backend) and
+    disaggregated (prefill engine -> transfer queue -> decode engine).
+
+    Deterministic gated fields: streamed tokens must be bit-identical to
+    the synchronous ``PagedEngine`` trace (``bit_identical``), the
+    fairness scheduler's ``admission_order`` and the SLA mapper's
+    ``deadline_ticks_mapped`` are exact, TTFT percentiles are reported in
+    engine *ticks* (``ttft_ticks_*``), and the disaggregation arm's
+    transfer-queue counters are exact.  Wall-clock TTFT/TPOT percentiles
+    (``ttft_ms_*``/``tpot_ms_*``) ride along for humans and are never
+    gated (scripts/check_bench.py skips wall-clock fields)."""
+    import asyncio
+
+    from repro.runtime import ManualClock
+    from repro.serving.frontdoor import (AsyncFrontDoor, DisaggController,
+                                         SlaMapper)
+
+    cfg = reduced_config(arch).replace(
+        attn_impl=impl, bitstopper=BitStopperConfig(alpha=alpha))
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    max_len = max(lens) + new_hi + 8
+    base = dict(max_len=max_len, prefill_bucket=8, page_size=8)
+
+    rng = np.random.default_rng(seed)
+    trace = make_trace(rng, cfg.vocab, n_requests, lens, new_lo, new_hi)
+    # SLO classes cycle so fairness admission visibly reorders (rids are
+    # pinned at arrival, so reordering is token-neutral — the gate).
+    slos = [("besteffort", "strict", "standard")[i % 3]
+            for i in range(n_requests)]
+    # Every request carries a wall-clock deadline; the ManualClock never
+    # advances, so the mapper keeps its default tick estimate and the
+    # wall->tick mapping is a deterministic, gateable constant.
+    sla = SlaMapper(granularity=1e-3, default_tick_s=1e-2)
+    deadline_s = 2.0
+    deadline_ticks = sla.ticks_for(deadline_s)
+
+    ref = [Request(prompt=r.prompt.copy(),
+                   max_new_tokens=r.max_new_tokens) for r in trace]
+    PagedEngine(cfg, params,
+                ServeConfig(max_slots=slots, **base)).generate(ref, seed=seed)
+    ref_tokens = [r.generated for r in ref]
+    # The door admits round-robin: one request per non-empty SLO class
+    # per cycle, strict first.
+    classed = {c: [i for i in range(n_requests) if slos[i] == c]
+               for c in ("strict", "standard", "besteffort")}
+    expected_admission = []
+    while any(classed.values()):
+        for c in ("strict", "standard", "besteffort"):
+            if classed[c]:
+                expected_admission.append(classed[c].pop(0))
+
+    def drive(door):
+        """Submit the trace, run the door, stream every request; returns
+        (per-rid token lists, wall timings)."""
+        async def go():
+            t_sub = {}
+            rids = []
+            for r, slo in zip(trace, slos):
+                rid = door.submit(r.prompt.copy(),
+                                  max_new_tokens=r.max_new_tokens,
+                                  slo=slo, deadline_s=deadline_s)
+                t_sub[rid] = time.monotonic()
+                rids.append(rid)
+            task = asyncio.create_task(door.run())
+
+            async def collect(rid):
+                toks, stamps = [], []
+                async for tok in door.stream(rid):
+                    toks.append(tok)
+                    stamps.append(time.monotonic())
+                return rid, toks, stamps
+
+            gathered = asyncio.gather(*(collect(r) for r in rids))
+            door.shutdown("drain")
+            results = await gathered
+            await task
+            return rids, results, t_sub
+
+        t0 = time.monotonic()
+        rids, results, t_sub = asyncio.run(go())
+        dt = time.monotonic() - t0
+        toks = {rid: t for rid, t, _ in results}
+        ttft_ms = [1e3 * (s[0] - t_sub[rid]) for rid, t, s in results if s]
+        tpot_ms = [1e3 * (s[-1] - s[0]) / (len(s) - 1)
+                   for _, _, s in results if len(s) > 1]
+        return rids, toks, dt, ttft_ms, tpot_ms
+
+    def arm_row(name, door, backend_counters):
+        rids, toks, dt, ttft_ms, tpot_ms = drive(door)
+        n_tok = sum(len(t) for t in toks.values())
+        ticks = sorted(door.first_token_tick[rid] for rid in rids)
+        row = {"engine": name, "tokens": n_tok, "seconds": dt,
+               "tok_per_s": n_tok / dt,
+               "bit_identical": [toks[r] for r in rids] == ref_tokens,
+               "admission_order": list(door.admission_log),
+               "ticks_run": door.ticks_run,
+               "deadline_ticks_mapped": deadline_ticks,
+               "ttft_ticks_p50": _percentile(ticks, 50),
+               "ttft_ticks_p95": _percentile(ticks, 95),
+               "ttft_ms_p50": _percentile(ttft_ms, 50),
+               "ttft_ms_p95": _percentile(ttft_ms, 95),
+               "tpot_ms_p50": _percentile(tpot_ms, 50)}
+        row.update(backend_counters())
+        if check:
+            assert row["bit_identical"], \
+                f"{name}: streamed tokens diverged from the synchronous " \
+                f"paged trace"
+            assert row["admission_order"] == expected_admission, \
+                f"{name}: admission order {row['admission_order']} != " \
+                f"round-robin expectation {expected_admission}"
+            sub = door.backend.requests[rids[0]]
+            assert sub.deadline_ticks == deadline_ticks
+        return row
+
+    # --- colocated: one paged engine behind the door -------------------
+    eng = PagedEngine(cfg, params, ServeConfig(max_slots=slots, **base))
+    eng.generate([Request(prompt=r.prompt.copy(), max_new_tokens=2)
+                  for r in trace], seed=seed)              # warm jit shapes
+    _reset_serving_state(eng)
+    door = AsyncFrontDoor(eng, clock=ManualClock(), sla=sla, seed=seed)
+    door.start()
+    rows = [arm_row("async-colocated", door, lambda: dict(eng.counters))]
+
+    # --- disaggregated: prefill engine -> transfer queue -> decode -----
+    pe = PagedEngine(cfg, params,
+                     ServeConfig(max_slots=max(1, slots // 2), **base))
+    de = PagedEngine(cfg, params, ServeConfig(max_slots=slots, **base))
+    ctl = DisaggController(pe, de)
+    ctl.generate([Request(prompt=r.prompt.copy(), max_new_tokens=2)
+                  for r in trace], seed=seed)              # warm both engines
+    for e in (pe, de):
+        _reset_serving_state(e)
+    ctl.requests.clear()
+    ctl.queue.clear()
+    ctl._next_rid = 0
+    ctl.ticks = 0
+    ctl.xfer.counters = {k: 0 for k in ctl.xfer.counters}
+    sla2 = SlaMapper(granularity=1e-3, default_tick_s=1e-2)
+    door2 = AsyncFrontDoor(ctl, clock=ManualClock(), sla=sla2, seed=seed)
+    door2.start()
+
+    def disagg_counters():
+        out = dict(de.counters)
+        out.update(ctl.xfer.counters)
+        return out
+
+    drow = arm_row("async-disagg", door2, disagg_counters)
+    if check:
+        assert drow["prefixes_transferred"] == n_requests, \
+            "every request must cross the transfer queue exactly once"
+        assert drow["payload_bytes"] > 0 and drow["blocks_transferred"] > 0
+    rows.append(drow)
+    return rows
+
+
 def _print_rows(title, rows):
     print(f"\n[serve_throughput] {title}")
     for r in rows:
@@ -468,6 +645,14 @@ def main():
                          "worst-case reservation (with --chaos, also the "
                          "chaos gate: fault-storm tokens bit-identical, "
                          "sheds/truncations exact)")
+    ap.add_argument("--async", dest="async_", action="store_true",
+                    help="add the async front-door section: the mixed "
+                         "trace streamed through AsyncFrontDoor, "
+                         "colocated and disaggregated (prefill/decode "
+                         "two-instance) — TTFT/TPOT percentiles plus the "
+                         "deterministic gate (streamed tokens "
+                         "bit-identical to the synchronous engine, exact "
+                         "admission order, exact transfer counters)")
     ap.add_argument("--chaos", action="store_true",
                     help="add the chaos section: the mixed trace under a "
                          "scripted fault plan (crashes + snapshot/restore, "
@@ -515,6 +700,13 @@ def main():
     if args.chaos:
         crows = run_chaos(arch=args.arch, impl=args.impl, alpha=args.alpha,
                           seed=args.seed, check=args.check)
+    arows = None
+    if args.async_:
+        akw = dict(kw, check=args.check)
+        if args.smoke:
+            arows = run_async(**akw, lens=(5, 9), new_lo=3, new_hi=4)
+        else:
+            arows = run_async(**akw)
 
     _print_rows(f"mixed trace arch={args.arch} impl={args.impl} "
                 f"requests={kw['n_requests']} slots={kw['slots']}", rows)
@@ -568,6 +760,28 @@ def main():
             print("[serve_throughput] chaos gate OK: fault-storm tokens "
                   "bit-identical, sheds and truncations exact")
 
+    if arows is not None:
+        _print_rows("async front-door trace (streamed)", arows)
+        colo = next(r for r in arows if r["engine"] == "async-colocated")
+        dis = next(r for r in arows if r["engine"] == "async-disagg")
+        print(f"  streamed-vs-sync bit_identical: colocated "
+              f"{colo['bit_identical']}, disagg {dis['bit_identical']}; "
+              f"admission order {colo['admission_order']} "
+              f"(deadline {colo['deadline_ticks_mapped']} ticks)")
+        print(f"  TTFT p50/p95: colocated {colo['ttft_ticks_p50']:.0f}/"
+              f"{colo['ttft_ticks_p95']:.0f} ticks "
+              f"({colo['ttft_ms_p50']:.0f}/{colo['ttft_ms_p95']:.0f} ms), "
+              f"TPOT p50 {colo['tpot_ms_p50']:.1f} ms")
+        print(f"  disagg vs colocated: {dis['tok_per_s']:.1f} vs "
+              f"{colo['tok_per_s']:.1f} tok/s; transfers: "
+              f"{dis['prefixes_transferred']} prefixes / "
+              f"{dis['blocks_transferred']} blocks / "
+              f"{dis['payload_bytes']} payload bytes")
+        if args.check:
+            print("[serve_throughput] async gate OK: streamed and "
+                  "disaggregated tokens bit-identical to the synchronous "
+                  "engine; admission and transfer sets exact")
+
     out = args.out or os.path.join(os.path.dirname(__file__), "..",
                                    "results", "BENCH_serve.json")
     payload = {
@@ -580,6 +794,8 @@ def main():
     }
     if crows is not None:
         payload["chaos"] = crows
+    if arows is not None:
+        payload["async"] = arows
     if os.path.dirname(out):
         os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:

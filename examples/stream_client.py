@@ -1,0 +1,87 @@
+"""Minimal asyncio client for the async serving front door.
+
+Start the server in one shell:
+
+    PYTHONPATH=src python -m repro.launch.serve_async --impl xla
+
+then stream two requests concurrently from another:
+
+    PYTHONPATH=src python examples/stream_client.py
+
+The protocol is newline-delimited JSON (``launch/serve_async.py``
+docstring): send ``{"prompt": [ints], "max_new_tokens": N, "slo": ...,
+"deadline_s": ...}``, read back an ack ``{"rid": r}``, one ``{"rid": r,
+"token": t}`` line per token *as the engine commits it* (not at the
+end), and a final ``{"rid": r, "done": true, "reason": ...}``.  The
+``deadline_s`` is a wall-clock budget the server maps onto engine-tick
+deadlines via its SLA mapper; a request that runs out is truncated
+(``"reason": "deadline"``) rather than dropped, and the tokens it did
+stream are a prefix of the undisturbed stream.
+"""
+
+import argparse
+import asyncio
+import json
+
+import numpy as np
+
+
+async def request(host, port, prompt, max_new_tokens, slo, deadline_s,
+                  tag):
+    reader, writer = await asyncio.open_connection(host, port)
+    msg = {"prompt": [int(t) for t in prompt],
+           "max_new_tokens": max_new_tokens, "slo": slo}
+    if deadline_s is not None:
+        msg["deadline_s"] = deadline_s
+    writer.write(json.dumps(msg).encode() + b"\n")
+    await writer.drain()
+    writer.write_eof()
+
+    rid, toks = None, []
+    async for line in reader:
+        event = json.loads(line)
+        if "error" in event:
+            print(f"[{tag}] rejected: {event['error']}")
+            break
+        if "token" in event:
+            toks.append(event["token"])
+            print(f"[{tag}] rid {event['rid']} token #{len(toks)}: "
+                  f"{event['token']}")
+        elif event.get("done"):
+            print(f"[{tag}] rid {event['rid']} {event['reason']}: "
+                  f"{event['tokens']}")
+            assert event["tokens"] == toks    # stream == final transcript
+            break
+        else:
+            rid = event["rid"]
+            print(f"[{tag}] accepted as rid {rid}")
+    writer.close()
+    return toks
+
+
+async def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8763)
+    ap.add_argument("--vocab", type=int, default=256)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="wall-clock deadline for the second request")
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    # Two concurrent streams: a strict request and a best-effort one
+    # carrying a wall-clock deadline.  Their tokens interleave as the
+    # engine's continuous batching serves both slots each tick.
+    await asyncio.gather(
+        request(args.host, args.port,
+                rng.integers(0, args.vocab, 12), args.new_tokens,
+                "strict", None, "A"),
+        request(args.host, args.port,
+                rng.integers(0, args.vocab, 7), args.new_tokens,
+                "besteffort", args.deadline_s, "B"),
+    )
+
+
+if __name__ == "__main__":
+    asyncio.run(main())

@@ -63,7 +63,8 @@ BENCHES = {
         "sections": [("mixed", ("engine",)),
                      ("shared_prefix", ("engine",)),
                      ("oversubscribed", ("engine",)),
-                     ("chaos", ("engine",))],
+                     ("chaos", ("engine",)),
+                     ("async", ("engine",))],
         "fields": ("tokens", "prefill_tokens", "prefix_hit_tokens",
                    "decode_tokens", "decode_steps", "decode_kv_tokens",
                    "requests_finished", "preemptions",
@@ -76,7 +77,15 @@ BENCHES = {
                    "staging_reclaimed", "degradations",
                    "drafter_failures", "forced_preemptions",
                    "requests_shed", "shed_watermark", "shed_deadline",
-                   "deadline_truncated", "shed_rids", "truncated_rids"),
+                   "deadline_truncated", "shed_rids", "truncated_rids",
+                   # async front-door section (tick-indexed or exact by
+                   # construction; wall-clock ttft_ms_*/tpot_ms_* fields
+                   # are deliberately NOT listed)
+                   "admission_order", "ticks_run",
+                   "deadline_ticks_mapped", "ttft_ticks_p50",
+                   "ttft_ticks_p95", "prefixes_transferred",
+                   "blocks_transferred", "payload_bytes",
+                   "prefixes_inserted", "prefix_transfers"),
     },
 }
 

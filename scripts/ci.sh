@@ -40,9 +40,13 @@ python scripts/check_docs.py
 # under a scripted fault plan (host crashes + snapshot/restore, drafter
 # fault, forced preemption, interrupted snapshot write) must serve
 # bit-identical tokens, and the QoS trace's shed/truncation sets must be
-# exact — all gated against the committed baseline below.
+# exact — all gated against the committed baseline below.  --async adds
+# the front-door section: the mixed trace streamed through
+# AsyncFrontDoor, colocated and disaggregated (prefill/decode handoff
+# over the transfer queue) — streamed tokens must be bit-identical to
+# the synchronous engine and the admission/transfer sets exact.
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-    python benchmarks/serve_throughput.py --smoke --check --chaos \
+    python benchmarks/serve_throughput.py --smoke --check --chaos --async \
         --out /tmp/BENCH_serve_smoke.json
 # Perf-trajectory gate: fresh deterministic counters vs the committed
 # baseline (results/BENCH_serve_smoke.json) — scheduler/traffic drift

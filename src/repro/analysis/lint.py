@@ -26,6 +26,12 @@ Rules (each maps to one :class:`~repro.analysis.report.Finding` rule id):
   (docs/robustness.md).  The one legitimately wall-clock-driven serving
   component — the stuck-tick watchdog — lives in
   ``runtime/fault_tolerance.py`` and wraps the engine from outside.
+* ``repo-async-boundary`` — only ``serving/frontdoor/`` may import
+  ``asyncio`` (or spawn threads): the engine is a deterministic,
+  synchronous tick loop, and every event-driven concern — admission,
+  streaming, shutdown signals — lives behind the front door.  An
+  ``asyncio`` import in core ``serving/`` is a scheduler about to grow a
+  second, nondeterministic event loop.
 
 All rules work on the AST only — no imports of the scanned code — so the
 lint runs in milliseconds and can't be confused by import-time side
@@ -46,6 +52,7 @@ LINT_RULES = [
     "repo-allocator-device-ops",
     "repo-nondeterminism",
     "repo-tick-wallclock",
+    "repo-async-boundary",
 ]
 
 
@@ -263,6 +270,51 @@ def check_tick_wallclock(
     return out
 
 
+_ASYNC_MODULES = ("asyncio", "threading", "concurrent")
+DEFAULT_ASYNC_SERVING_DIR = "src/repro/serving"
+DEFAULT_ASYNC_EXEMPT = "src/repro/serving/frontdoor"
+
+
+def check_async_boundary(
+        root: pathlib.Path,
+        serving_dir: str = DEFAULT_ASYNC_SERVING_DIR,
+        exempt_dir: str = DEFAULT_ASYNC_EXEMPT) -> list[Finding]:
+    """Only ``serving/frontdoor/`` may import asyncio (or thread pools).
+    The engine tick loop is deterministic and synchronous; concurrency
+    lives behind the door, where rids are pinned at arrival so event
+    ordering can't change tokens."""
+    d = root / serving_dir
+    if not d.exists():
+        return []
+    exempt = root / exempt_dir
+    out: list[Finding] = []
+    for f in sorted(d.rglob("*.py")):
+        if exempt in f.parents:
+            continue
+        tree = _parse(f)
+        if tree is None:
+            continue
+        rel = str(f.relative_to(root))
+        for node in ast.walk(tree):
+            bad = None
+            if isinstance(node, ast.Import):
+                bad = next((a.name for a in node.names
+                            if a.name.split(".")[0] in _ASYNC_MODULES),
+                           None)
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                if node.module.split(".")[0] in _ASYNC_MODULES:
+                    bad = node.module
+            if bad is not None:
+                out.append(Finding(
+                    "repo-async-boundary", rel, node.lineno,
+                    f"core serving imports `{bad}` — the engine is a "
+                    f"deterministic synchronous tick loop; event-driven "
+                    f"code (admission, streaming, shutdown) belongs in "
+                    f"serving/frontdoor/, the one package exempt from "
+                    f"this rule"))
+    return out
+
+
 def _stmt_has_mtime(stmt: ast.stmt) -> bool:
     for node in ast.walk(stmt):
         if isinstance(node, ast.Attribute) and node.attr in ("getmtime",
@@ -352,6 +404,7 @@ def run_lint(root: pathlib.Path | str,
     findings += check_allocator_device_ops(root, allocator_paths)
     findings += check_nondeterminism(src_files, root)
     findings += check_tick_wallclock(root, tickpath_dirs)
+    findings += check_async_boundary(root)
     # deterministic report order
     findings.sort(key=lambda f: (f.rule, f.file, f.line))
     return findings

@@ -1,6 +1,7 @@
 """Cluster runtime: failure detection, elastic re-meshing, stragglers,
-and the serving stuck-tick watchdog."""
+the serving stuck-tick watchdog, and injectable clocks."""
 
+from repro.runtime.clock import ManualClock, SystemClock  # noqa: F401
 from repro.runtime.fault_tolerance import (  # noqa: F401
     ClusterMonitor, ElasticMeshManager, EngineWatchdog, StragglerPolicy,
     StuckTickError,

@@ -1,0 +1,58 @@
+"""Injectable clocks for the serving stack.
+
+``serving/`` (including ``serving/frontdoor/``) is wall-clock-free by
+lint rule (``repo-tick-wallclock``): anything that needs real time gets
+a clock *injected* from here, the same pattern ``EngineWatchdog`` uses.
+Two implementations share the one-method protocol (a zero-arg callable
+returning monotonic seconds):
+
+* :class:`SystemClock` — wraps ``time.monotonic`` for production.
+* :class:`ManualClock` — a deterministic clock the caller advances
+  explicitly; tests and CI ``--check`` gates use it so wall-clock→tick
+  SLA mapping is a pure function (never actual wall clock).
+
+Both expose ``granularity``: the coarsest interval the clock can
+meaningfully resolve.  The SLA mapper quantizes client deadlines up to
+granularity multiples before converting to ticks, so a deadline can
+never round *down* below what the client asked for.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+class SystemClock:
+    """Monotonic wall clock (production).  ``granularity`` is the
+    interval below which scheduling jitter makes finer deadlines
+    meaningless, not the hardware timer resolution."""
+
+    def __init__(self, granularity: float = 1e-3):
+        if granularity <= 0.0:
+            raise ValueError(f"granularity must be > 0, got {granularity}")
+        self.granularity = granularity
+
+    def __call__(self) -> float:
+        return time.monotonic()
+
+
+class ManualClock:
+    """Deterministic clock: time moves only when the test/bench calls
+    :meth:`advance`.  Makes everything downstream of a clock injection
+    (SLA mapping, tick-duration EMAs, watchdog deadlines) replayable
+    bit-for-bit."""
+
+    def __init__(self, start: float = 0.0, granularity: float = 1e-3):
+        if granularity <= 0.0:
+            raise ValueError(f"granularity must be > 0, got {granularity}")
+        self.now = float(start)
+        self.granularity = granularity
+
+    def advance(self, dt: float) -> float:
+        if dt < 0.0:
+            raise ValueError(f"time cannot move backwards (dt={dt})")
+        self.now += dt
+        return self.now
+
+    def __call__(self) -> float:
+        return self.now

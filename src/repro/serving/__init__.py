@@ -12,7 +12,9 @@ from repro.serving.chaos import (  # noqa: F401
 )
 from repro.serving.engine import (  # noqa: F401
     ContinuousBatchingEngine,
+    InsufficientBlocks,
     PagedEngine,
+    Prefix,
     Request,
     ServeConfig,
     ServingEngine,

@@ -226,6 +226,43 @@ class Request:
                                       # undisturbed stream)
 
 
+class InsufficientBlocks(RuntimeError):
+    """The pool cannot cover an engine-API ``prefill()``/``insert()``
+    right now.  Retryable: capacity returns as requests finish — callers
+    (the disaggregation controller, the async door) back off a tick
+    instead of failing the request."""
+
+
+@dataclasses.dataclass
+class Prefix:
+    """Handle to a prefilled context: paged block handles plus sampling
+    state — the currency of the JetStream-style engine API
+    (``PagedEngine.prefill() -> insert() -> generate_step()``).
+
+    Two forms:
+
+    * **attached** (``pool`` is the source engine's pool): ``blocks``
+      holds physical block ids whose references the Prefix OWNS — insert
+      into the same engine is a pure block-table splice, no KV moves.
+    * **detached** (``payload`` set, ``pool``/``blocks`` cleared by
+      ``extract()``): block contents serialized through the pool to host
+      arrays, so a *different* engine instance — its own pool, its own
+      block numbering — can ``insert()`` it.  This is the
+      prefill/decode-disaggregation handoff.
+    """
+    req: Request
+    chain: np.ndarray          # cached context tokens [L] int32
+    length: int                # tokens cached (== len(chain))
+    last_token: int            # next decode input (already appended to
+                               # req.generated by the prefill sample)
+    blocks: list               # attached: block ids, refs owned here
+    pool: Any = None           # pool identity the blocks live in
+    payload: Any = None        # detached: {"layers": [...], "amax": [...]}
+    finished: bool = False     # request completed during prefill (eos /
+                               # max_new_tokens == 1 / deadline) — nothing
+                               # to insert, tokens already in req.generated
+
+
 def _supported(cfg: ModelConfig) -> None:
     mixers = {spec.mixer for unit, _ in cfg.segments for spec in unit}
     bad = mixers - {"attn", "local_attn"}
@@ -384,6 +421,107 @@ def _attach_tables(caches, table: np.ndarray, length: np.ndarray):
                     nt = jnp.broadcast_to(t[None], (reps,) + t.shape)
                     nl = jnp.broadcast_to(ln[None], (reps,) + ln.shape)
                 return dict(c, table=nt, length=nl)
+            return {k: rec(v) for k, v in c.items()}
+        if isinstance(c, list):
+            return [rec(x) for x in c]
+        return c
+
+    return rec(caches)
+
+
+def _extract_block_rows(caches, bids: list) -> list:
+    """Serialize the K/V/pos pool rows of ``bids`` to host arrays, one
+    entry per paged layer in the pytree's deterministic traversal order
+    (the same order :func:`_splice_block_rows` consumes).  The packed
+    plane pool is NOT serialized: the receiver re-derives it from the
+    f32 rows under its own (merged) quant scales."""
+    idx = jnp.asarray(bids, jnp.int32)
+    out = []
+
+    def rec(c):
+        if isinstance(c, dict):
+            if "table" in c:
+                stacked = c["table"].ndim == 3
+
+                def grab(a):
+                    return np.asarray(a[:, idx] if stacked else a[idx])
+
+                out.append({"k": grab(c["k"]), "v": grab(c["v"]),
+                            "pos": grab(c["pos"])})
+                return
+            for k in c:
+                rec(c[k])
+        elif isinstance(c, (list, tuple)):
+            for x in c:
+                rec(x)
+
+    rec(caches)
+    return out
+
+
+def _splice_block_rows(caches, bids: list, layers: list, sel: list):
+    """Scatter serialized block rows (``_extract_block_rows`` output from
+    ANOTHER engine) into this cache's pools at ``bids``.  ``sel`` picks
+    which serialized rows to write — CoW-matched blocks are spliced by
+    reference instead and skip the copy."""
+    idx = jnp.asarray(bids, jnp.int32)
+    sel = np.asarray(sel, np.int64)
+    it = iter(layers)
+
+    def rec(c):
+        if isinstance(c, dict):
+            if "table" in c:
+                rows = next(it)
+                stacked = c["table"].ndim == 3
+
+                def pset(a, val):
+                    val = jnp.asarray(val[:, sel] if stacked else val[sel],
+                                      a.dtype)
+                    return (a.at[:, idx].set(val) if stacked
+                            else a.at[idx].set(val))
+
+                return dict(c, k=pset(c["k"], rows["k"]),
+                            v=pset(c["v"], rows["v"]),
+                            pos=pset(c["pos"], rows["pos"]))
+            return {k: rec(v) for k, v in c.items()}
+        if isinstance(c, list):
+            return [rec(x) for x in c]
+        return c
+
+    new = rec(caches)
+    leftover = sum(1 for _ in it)
+    if leftover:
+        raise ValueError(f"prefix payload carries {leftover} extra layers "
+                         f"this cache has no home for")
+    return new
+
+
+def _requant_plane_pools(caches):
+    """Rebuild every fused layer's packed bit-plane pool from its f32 K
+    pool under the CURRENT quant scales — the whole-pool form of the
+    rescale-on-demand rule (``pack_pool_planes`` is the same function the
+    incremental write path and mid-serve requants use, so the rebuilt
+    planes are bit-identical to incrementally maintained ones).  Run
+    after a cross-engine splice: spliced pages carry no plane rows yet,
+    and a merged scale must re-grid every resident page."""
+    import repro.core.quantization as qlib
+
+    def rec(c):
+        if isinstance(c, dict):
+            if "table" in c:
+                if "kq" not in c:
+                    return c
+                stacked = c["table"].ndim == 3
+                kf = c["k"].astype(jnp.float32)
+                if stacked:
+                    bits = c["kq"].shape[2]
+                    kq = jax.vmap(
+                        lambda kp, am: qlib.pack_pool_planes(kp, am, bits)
+                    )(kf, c["k_amax"])
+                else:
+                    bits = c["kq"].shape[1]
+                    kq = qlib.pack_pool_planes(kf, c["k_amax"], bits)
+                return dict(c, kq=kq.astype(c["kq"].dtype))
             return {k: rec(v) for k, v in c.items()}
         if isinstance(c, list):
             return [rec(x) for x in c]
@@ -870,7 +1008,10 @@ class PagedEngine(_EngineCommon):
                          "requests_shed": 0, "shed_watermark": 0,
                          "shed_deadline": 0, "deadline_truncated": 0,
                          "degradations": 0, "drafter_failures": 0,
-                         "forced_preemptions": 0}
+                         "forced_preemptions": 0,
+                         # JetStream-style engine API (frontdoor/disagg)
+                         "prefixes_prefilled": 0, "prefixes_inserted": 0,
+                         "prefix_transfers": 0}
 
     # ------------------------------------------------------------------
     # jitted forwards + the kernel circuit breaker
@@ -1055,7 +1196,7 @@ class PagedEngine(_EngineCommon):
     # scheduling
     # ------------------------------------------------------------------
 
-    def submit(self, req: Request) -> Request:
+    def _validate_request(self, req: Request) -> None:
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
         need = self._blocks_for(req)
@@ -1073,10 +1214,27 @@ class PagedEngine(_EngineCommon):
         if req.deadline_ticks is not None and req.deadline_ticks < 1:
             raise ValueError(
                 f"deadline_ticks must be >= 1, got {req.deadline_ticks}")
-        req.rid = self._next_rid
-        self._next_rid += 1
-        req.submitted_tick = self.ticks
+
+    def _register(self, req: Request) -> None:
+        """Record the request under its rid, assigning one if unset.
+        Pre-assigned rids let an external admission layer
+        (``serving/frontdoor``) fix each request's sampling identity at
+        ARRIVAL time and then reorder actual submission freely: keys are
+        ``fold_in(fold_in(seed, rid), n)``, so fairness reordering cannot
+        change a single served token."""
+        if req.rid < 0:
+            req.rid = self._next_rid
+        elif (req.rid in self.requests
+              and self.requests[req.rid] is not req):
+            raise ValueError(
+                f"rid {req.rid} already belongs to another request")
+        self._next_rid = max(self._next_rid, req.rid + 1)
         self.requests[req.rid] = req
+
+    def submit(self, req: Request) -> Request:
+        self._validate_request(req)
+        self._register(req)
+        req.submitted_tick = self.ticks
         self.queue.append(req)
         return req
 
@@ -1331,6 +1489,266 @@ class PagedEngine(_EngineCommon):
         else:
             self._plain_decode_tick(active)
         return True
+
+    # ------------------------------------------------------------------
+    # JetStream-style engine API: prefill -> insert -> generate_step
+    # (serving/frontdoor builds the async door and the prefill/decode
+    # disaggregation on exactly this surface; docs/serving.md)
+    # ------------------------------------------------------------------
+
+    def prefill(self, req: Request) -> Prefix:
+        """Engine API step 1: prefill a fresh request's prompt to
+        completion and hand back a :class:`Prefix` — the prompt's paged
+        blocks (ownership transferred, refs held by the Prefix) plus the
+        first sampled token.  Runs through the ordinary chunked-prefill
+        path (prefix-registry CoW hits, block publication, the standard
+        first-token sample), so a later ``insert()`` + decode is
+        bit-identical to serving the request through ``submit()``.
+
+        The slot used for prefilling frees on return; only the blocks
+        stay live.  Raises :class:`InsufficientBlocks` (retryable) when
+        the pool cannot cover the prompt right now."""
+        if req.generated:
+            raise ValueError(
+                "prefill() takes a fresh request; preemption resume runs "
+                "through the scheduler (submit()/step())")
+        self._validate_request(req)
+        if None not in self.slots:
+            raise RuntimeError("prefill() needs a free slot")
+        self._register(req)
+        req.submitted_tick = self.ticks
+        ctx = np.asarray(req.prompt, np.int32)
+        L = len(ctx)
+        n_ctx = -(-L // self._page)
+        matched = self._match_prefix(ctx, keep_last=True)
+        need = n_ctx - len(matched)
+        if need > self.pool.available():
+            for bid in matched:
+                self.pool.decref(bid)
+            raise InsufficientBlocks(
+                f"prompt needs {need} blocks beyond its prefix hits, pool "
+                f"has {self.pool.available()}")
+        self.pool.reserve(need)
+        slot = self.slots.index(None)
+        row = np.zeros((self._mb,), np.int32)
+        row[:len(matched)] = matched
+        for j in range(len(matched), n_ctx):
+            row[j] = self.pool.alloc(reserved=True)
+        cached = len(matched) * self._page
+        self.table[slot] = row
+        self.lengths[slot] = cached
+        # blocks_reserved=0: prefill writes only context blocks, all
+        # allocated above — the decode tail is reserved at insert() time
+        # against the DECODE engine's pool.
+        self.slots[slot] = _PagedSlot(req, next_prefill=cached,
+                                      blocks_reserved=0, ctx=ctx,
+                                      seq=self._admit_seq)
+        self._admit_seq += 1
+        req.prefill_len = L
+        req.admitted_step = self._step
+        self.counters["prefix_hit_tokens"] += cached
+        # keep_last guarantees >= 1 token left to prefill, so the loop
+        # always runs and the first token samples through _prefill_tick.
+        self._prefill_fifo.appendleft(slot)
+        while (self.slots[slot] is not None
+               and not self.slots[slot].prefilled()):
+            self.ticks += 1
+            self._prefill_tick()
+        if self.slots[slot] is None:
+            # Finished during prefill (max_new_tokens == 1, eos, or a
+            # deadline): _maybe_evict released every block already and the
+            # tokens are in req.generated — nothing to hand off.
+            last = int(req.generated[-1]) if req.generated else 0
+            return Prefix(req=req, chain=ctx, length=0, last_token=last,
+                          blocks=[], pool=self.pool, finished=True)
+        # Detach: block ownership moves from the slot to the Prefix (the
+        # refs taken above are NOT dropped); the slot frees.
+        bids = [int(self.table[slot, j]) for j in range(n_ctx)]
+        last = int(self.last_token[slot])
+        self.table[slot] = 0
+        self.lengths[slot] = 0
+        self.last_token[slot] = 0
+        self.slots[slot] = None
+        self.counters["prefixes_prefilled"] += 1
+        return Prefix(req=req, chain=ctx, length=L, last_token=last,
+                      blocks=bids, pool=self.pool)
+
+    def extract(self, prefix: Prefix) -> Prefix:
+        """Detach a prefix from this engine: serialize its blocks' K/V/pos
+        rows (plus the pool-wide quant scales) through the pool to host
+        arrays, then drop the block refs.  The result is pool-layout
+        independent — a decode engine with its own pool and block
+        numbering can ``insert()`` it: the disaggregation handoff.
+        Registered source blocks park in the LRU on decref, so the
+        prefill engine's prefix cache stays warm for repeat prompts."""
+        if prefix.finished or prefix.payload is not None:
+            return prefix
+        if prefix.pool is not self.pool:
+            raise ValueError(
+                "extract() must run on the engine owning the prefix")
+        layers = _extract_block_rows(self.caches, prefix.blocks)
+        amax = [np.asarray(a, np.float32) for a in _amax_leaves(self.caches)]
+        for bid in prefix.blocks:
+            self.pool.decref(bid)
+        self.counters["prefix_transfers"] += 1
+        return dataclasses.replace(prefix, blocks=[], pool=None,
+                                   payload={"layers": layers, "amax": amax})
+
+    def release(self, prefix: Prefix) -> None:
+        """Drop an attached prefix without inserting it (client went away
+        between prefill and insert).  Detached/finished prefixes hold no
+        pool state — nothing to do."""
+        if prefix.pool is not self.pool or not prefix.blocks:
+            return
+        for bid in prefix.blocks:
+            self.pool.decref(bid)
+        prefix.blocks = []
+        prefix.pool = None
+
+    def insert(self, prefix: Prefix, slot: int) -> None:
+        """Engine API step 2: mount a prefilled context into a free slot
+        and arm it for decode.  Attached (same-pool) prefixes splice by
+        block handle — no KV moves; detached ones CoW-match against this
+        pool's own registry first and scatter only unmatched blocks from
+        the payload, merging the source's quant scales (elementwise max —
+        amax is monotone, so the merged grid is the union trajectory) and
+        rebuilding the packed plane pools so every resident page means
+        the same integers under it.
+
+        The slot state is exactly the post-preemption resume contract
+        (``resumed=True``, next decode input = ``prefix.last_token``), so
+        decode, speculation, oversubscription and deadlines behave as if
+        the request had always lived here."""
+        if not 0 <= slot < len(self.slots):
+            raise ValueError(f"slot {slot} out of range "
+                             f"[0, {len(self.slots)})")
+        if self.slots[slot] is not None:
+            raise RuntimeError(
+                f"insert into occupied slot {slot} (rid "
+                f"{self.slots[slot].req.rid} is live there)")
+        if prefix.finished:
+            raise ValueError(
+                "prefix finished during prefill — nothing to insert")
+        req = prefix.req
+        if req.rid < 0:
+            raise ValueError("prefix carries an unregistered request")
+        chain = np.asarray(prefix.chain, np.int32)
+        n_ctx = -(-prefix.length // self._page)
+        total = self._blocks_for(req)
+        goal = self._reserve_goal(total, n_ctx)
+        if prefix.pool is self.pool:
+            # Attached handoff: a pure block-table splice — the refs taken
+            # at prefill() transfer to this slot.
+            need = goal - n_ctx
+            if need > self.pool.available():
+                raise InsufficientBlocks(
+                    f"decode tail needs {need} reserved blocks, pool has "
+                    f"{self.pool.available()}")
+            self.pool.reserve(need)
+            row_bids = [int(b) for b in prefix.blocks]
+            prefix.blocks = []
+            prefix.pool = None
+            cached_hit = 0
+        else:
+            if prefix.payload is None:
+                raise ValueError(
+                    "cross-engine insert needs a detached prefix: call "
+                    "extract() on the source engine first")
+            matched = self._match_prefix(chain, keep_last=False)
+            need = goal - len(matched)
+            if need > self.pool.available():
+                for bid in matched:
+                    self.pool.decref(bid)
+                raise InsufficientBlocks(
+                    f"prefix needs {need} blocks beyond its local CoW "
+                    f"hits, pool has {self.pool.available()}")
+            self.pool.reserve(need)
+            sel = list(range(len(matched), n_ctx))
+            fresh = [self.pool.alloc(reserved=True) for _ in sel]
+            row_bids = [int(b) for b in matched] + fresh
+            if fresh:
+                self.caches = _splice_block_rows(
+                    self.caches, fresh, prefix.payload["layers"], sel)
+            self._merge_amax(prefix.payload["amax"])
+            # Publish transferred FULL blocks for CoW under their chain
+            # keys (the partial tail block stays exclusively owned and
+            # unregistered — repo invariant).
+            for j in range(len(matched), prefix.length // self._page):
+                key = tuple(int(t) for t in chain[:(j + 1) * self._page])
+                self.pool.register(key, row_bids[j])
+            if self._rules is not None:
+                from repro.sharding.rules import cache_shardings
+                self.caches = jax.device_put(
+                    self.caches, cache_shardings(self._rules, self.caches))
+            cached_hit = len(matched) * self._page
+        self._register(req)
+        # Deadlines re-anchor at insert: in disaggregated mode the
+        # prefill and decode engines' tick clocks are unrelated, so
+        # ``deadline_ticks`` bounds decode-side service from here.
+        req.submitted_tick = self.ticks
+        row = np.zeros((self._mb,), np.int32)
+        row[:n_ctx] = row_bids
+        self.table[slot] = row
+        self.lengths[slot] = prefix.length
+        self.last_token[slot] = int(prefix.last_token)
+        self.slots[slot] = _PagedSlot(req, next_prefill=prefix.length,
+                                      blocks_reserved=goal - n_ctx,
+                                      ctx=chain, resumed=True,
+                                      seq=self._admit_seq)
+        self._admit_seq += 1
+        self.counters["prefix_hit_tokens"] += cached_hit
+        self.counters["prefixes_inserted"] += 1
+
+    def _merge_amax(self, incoming: list) -> None:
+        """Fold another engine's quant-scale leaves into this one's
+        (elementwise max) and rebuild the packed plane pools.  Runs on
+        every detached insert even when nothing grew: the freshly
+        spliced pages carry no plane rows until the requant writes
+        them."""
+        cur = _amax_leaves(self.caches)
+        if len(cur) != len(incoming):
+            raise ValueError(
+                f"prefix payload carries {len(incoming)} quant-scale "
+                f"leaves, cache has {len(cur)}")
+        if not cur:
+            return
+        merged = []
+        for c, p in zip(cur, incoming):
+            cn = np.asarray(c, np.float32)
+            merged.append(np.maximum(cn,
+                                     np.asarray(p,
+                                                np.float32).reshape(cn.shape)))
+        self.caches = _set_amax_leaves(self.caches, merged)
+        self.caches = _requant_plane_pools(self.caches)
+
+    def generate_step(self) -> list[dict]:
+        """Engine API step 3: one scheduler tick, returning the tokens it
+        committed as per-request events ``{"rid", "slot", "tokens",
+        "finished"}`` (sorted by rid; ``slot`` is -1 once the request has
+        left its slot).  A preemption emits no event — the requeued
+        request's tokens stand; an expiry/shed emits a terminal event
+        with no tokens.  Token content is exactly ``step()``'s: this is a
+        diff of the request registry, not a different decode path."""
+        before = {rid: (len(r.generated),
+                        r.finished_step >= 0 or r.shed_reason is not None)
+                  for rid, r in self.requests.items()}
+        self.step()
+        slot_of = {st.req.rid: i for i, st in enumerate(self.slots)
+                   if st is not None}
+        events = []
+        for rid in sorted(before):
+            n0, was_done = before[rid]
+            req = self.requests[rid]
+            done = req.finished_step >= 0 or req.shed_reason is not None
+            toks = [int(t) for t in req.generated[n0:]]
+            if toks or (done and not was_done):
+                events.append({"rid": rid, "slot": slot_of.get(rid, -1),
+                               "tokens": toks, "finished": done})
+        return events
+
+    def free_slots(self) -> list[int]:
+        """Indices of currently unoccupied slots (insert targets)."""
+        return [i for i, st in enumerate(self.slots) if st is None]
 
     # ------------------------------------------------------------------
     # crash-consistent snapshot / restore (docs/robustness.md)

@@ -1,0 +1,13 @@
+"""Async serving front door (docs/serving.md, "Async front door").
+
+The only corner of ``serving/`` allowed to touch asyncio (lint rule
+``repo-async-boundary``): the engine itself stays a deterministic,
+synchronous tick loop, and everything event-driven lives behind this
+package's door.
+"""
+
+from repro.serving.frontdoor.disagg import (  # noqa: F401
+    DisaggController, TransferQueue,
+)
+from repro.serving.frontdoor.door import AsyncFrontDoor  # noqa: F401
+from repro.serving.frontdoor.sla import SlaMapper  # noqa: F401

@@ -351,6 +351,29 @@ def test_seeded_tick_wallclock(tmp_path):
     assert (rel, 1) in got and (rel, 2) in got
 
 
+def test_seeded_async_boundary(tmp_path):
+    """Core serving/ may not import asyncio — the engine is a synchronous
+    tick loop; only serving/frontdoor/ (the async door) is exempt."""
+    rel = _write(tmp_path, "src/repro/serving/engine.py", """\
+        import asyncio
+        from concurrent.futures import ThreadPoolExecutor
+
+        async def step_async(eng):
+            await asyncio.sleep(0)
+        """)
+    _write(tmp_path, "src/repro/serving/frontdoor/door.py", """\
+        import asyncio
+
+        async def run(door):
+            await asyncio.sleep(0)
+        """)
+    findings = _lint(tmp_path)
+    got = [(f.file, f.line) for f in findings
+           if f.rule == "repo-async-boundary"]
+    assert (rel, 1) in got and (rel, 2) in got
+    assert all(f == rel for f, _ in got)   # frontdoor/ is exempt
+
+
 def test_tick_wallclock_scoped_to_serving(tmp_path):
     # The same imports OUTSIDE the tick-path dirs are not this rule's
     # business (repo-nondeterminism separately polices call sites).

@@ -1,0 +1,460 @@
+"""Async front-door tests: the JetStream-style engine API
+(prefill/insert/generate_step), async token streaming, SLA tick mapping,
+prefill/decode disaggregation, and graceful shutdown.
+
+The load-bearing invariant everywhere: async streaming, fairness-aware
+admission, and disaggregated handoff are *scheduling* features — served
+tokens are bit-identical to the synchronous ``PagedEngine`` trace on
+every path, because rids pin sampling keys at arrival and an inserted
+prefix is indistinguishable from a post-preemption resume."""
+
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core.besf import BitStopperConfig
+from repro.models import transformer as T
+from repro.runtime import ManualClock
+from repro.serving import (
+    InsufficientBlocks,
+    PagedEngine,
+    Request,
+    ServeConfig,
+)
+from repro.serving.frontdoor import (
+    AsyncFrontDoor,
+    DisaggController,
+    SlaMapper,
+    TransferQueue,
+)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced_config("stablelm-1.6b")
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _paged(cfg, params, **kw):
+    scfg = ServeConfig(max_len=kw.pop("max_len", 64),
+                       max_slots=kw.pop("max_slots", 2),
+                       prefill_bucket=kw.pop("prefill_bucket", 8),
+                       page_size=kw.pop("page_size", 8), **kw)
+    return PagedEngine(cfg, params, scfg)
+
+
+def _reqs(cfg, lens, max_new=5, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab, L, dtype=np.int32),
+                    max_new_tokens=max_new)
+            for L in lens]
+
+
+def _sync_ref(cfg, params, lens, max_new=5, seed=0, **kw):
+    reqs = _reqs(cfg, lens, max_new=max_new)
+    _paged(cfg, params, **kw).generate(reqs, seed=seed)
+    return [r.generated for r in reqs]
+
+
+def _stream_all(door, rids):
+    """Drive the door to drain completion; return each rid's streamed
+    tokens (in stream order, the bit-identity object under test)."""
+    async def go():
+        task = asyncio.create_task(door.run())
+
+        async def collect(rid):
+            return [tok async for tok in door.stream(rid)]
+
+        gathered = asyncio.gather(*(collect(r) for r in rids))
+        door.shutdown("drain")
+        toks = await gathered
+        await task
+        return toks
+
+    return asyncio.run(go())
+
+
+def _door_trace(cfg, params, lens, max_new=5, seed=0, **kw):
+    door = AsyncFrontDoor(_paged(cfg, params, **kw), seed=seed)
+    door.start()
+    rng = np.random.default_rng(0)
+    rids = [door.submit(rng.integers(0, cfg.vocab, L, dtype=np.int32),
+                        max_new_tokens=max_new)
+            for L in lens]
+    return _stream_all(door, rids), door
+
+
+# ---------------------------------------------------------------------------
+# engine API: prefill -> insert -> generate_step
+# ---------------------------------------------------------------------------
+
+
+def test_engine_api_bitident_to_generate(model):
+    """Acceptance: driving the engine through the JetStream-style surface
+    (prefill each request to a Prefix, insert into a free slot, loop
+    generate_step) reproduces generate()'s tokens bit-exactly."""
+    cfg, params = model
+    ref = _sync_ref(cfg, params, (5, 9, 7), max_new=5)
+
+    eng = _paged(cfg, params)
+    eng.begin(0)
+    reqs = _reqs(cfg, (5, 9, 7))
+    out = {}
+    pending = list(reqs)
+    live = 0
+    while pending or live:
+        while pending and eng.free_slots():
+            req = pending[0]
+            prefix = eng.prefill(req)
+            eng.insert(prefix, eng.free_slots()[0])
+            # JetStream semantics: the FIRST token comes back with the
+            # prefill result, before any generate_step
+            out[req.rid] = list(req.generated)
+            pending.pop(0)
+            live += 1
+        for ev in eng.generate_step():
+            out.setdefault(ev["rid"], []).extend(ev["tokens"])
+            if ev["finished"]:
+                live -= 1
+    assert [out[r.rid] for r in reqs] == ref
+    assert [r.generated for r in reqs] == ref
+    assert eng.counters["prefixes_prefilled"] == 3
+    assert eng.counters["prefixes_inserted"] == 3
+    # clean pool after the trace: no leaked blocks or reservations
+    assert eng.pool.available() == eng.pool.capacity
+
+
+def test_insert_into_occupied_slot_rejected(model):
+    """Mandated: inserting a prefix into a slot that is still serving a
+    live request must raise, not clobber the resident block table."""
+    cfg, params = model
+    eng = _paged(cfg, params)
+    eng.begin(0)
+    r0, r1 = _reqs(cfg, (5, 7), max_new=8)
+    eng.insert(eng.prefill(r0), 0)
+    with pytest.raises(RuntimeError, match="occupied slot"):
+        eng.insert(eng.prefill(r1), 0)
+    # the resident request is untouched and still completes
+    while eng.pending():
+        eng.step()
+    assert len(r0.generated) == 8
+
+
+# ---------------------------------------------------------------------------
+# async streaming: bit-identity to the synchronous engine on every path
+# ---------------------------------------------------------------------------
+
+
+def test_streamed_bitident_xla_seeded(model):
+    """Seeded sampling through the door: streamed tokens == synchronous
+    trace (keys are (seed, rid, n); admission order can't move them)."""
+    cfg, params = model
+    kw = dict(temperature=0.9)
+    ref = _sync_ref(cfg, params, (5, 9, 7), seed=7, **kw)
+    toks, door = _door_trace(cfg, params, (5, 9, 7), seed=7, **kw)
+    assert toks == ref
+    assert door.admission_log == [0, 1, 2]
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_streamed_bitident_bitstopper(model, fused):
+    """BitStopper decode (fused Pallas kernel and gather fallback):
+    greedy streamed tokens == the synchronous trace."""
+    cfg, params = model
+    cfgb = cfg.replace(attn_impl="bitstopper_xla",
+                       bitstopper=BitStopperConfig(alpha=0.8))
+    kw = dict(fused_decode=fused)
+    ref = _sync_ref(cfgb, params, (5, 11, 7), **kw)
+    toks, _ = _door_trace(cfgb, params, (5, 11, 7), **kw)
+    assert toks == ref
+
+
+def test_streamed_bitident_speculative(model):
+    """Speculative decoding behind the door: lossless (tokens never
+    change), and the stream commits multi-token bursts per tick."""
+    cfg, params = model
+    ref = _sync_ref(cfg, params, (12, 9), max_new=8)
+    toks, _ = _door_trace(cfg, params, (12, 9), max_new=8,
+                          speculative="ngram", draft_k=3)
+    assert toks == ref
+
+
+def test_streamed_bitident_oversubscribed_seeded(model):
+    """Oversubscribed pool + seeded sampling through the door: preemption
+    and resume underneath the streams never perturbs a token."""
+    cfg, params = model
+    kw = dict(max_slots=3, pool_blocks=10, oversubscribe=True,
+              temperature=1.0)
+    ref = _sync_ref(cfg, params, (12, 9, 11), max_new=16, seed=7,
+                    max_slots=3, temperature=1.0)
+    door = AsyncFrontDoor(
+        _paged(cfg, params, **kw), seed=7)
+    door.start()
+    rng = np.random.default_rng(0)
+    rids = [door.submit(rng.integers(0, cfg.vocab, L, dtype=np.int32),
+                        max_new_tokens=16)
+            for L in (12, 9, 11)]
+    toks = _stream_all(door, rids)
+    assert toks == ref
+    assert door.backend.counters["preemptions"] >= 1
+
+
+def test_fairness_admission_order(model):
+    """Admission round-robins one per non-empty SLO class (strict first),
+    so a besteffort backlog can't starve strict arrivals; rids stay
+    arrival-ordered so reordering is observable but token-neutral."""
+    cfg, params = model
+    door = AsyncFrontDoor(_paged(cfg, params), seed=0)
+    door.start()
+    rng = np.random.default_rng(0)
+    p = [rng.integers(0, cfg.vocab, L, dtype=np.int32)
+         for L in (5, 9, 7, 12, 6)]
+    rids = [door.submit(p[0], 3, slo="besteffort"),
+            door.submit(p[1], 3, slo="besteffort"),
+            door.submit(p[2], 3, slo="besteffort"),
+            door.submit(p[3], 3, slo="strict"),
+            door.submit(p[4], 3, slo="standard")]
+    _stream_all(door, rids)
+    assert rids == [0, 1, 2, 3, 4]
+    assert door.admission_log == [3, 4, 0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# SLA mapper: wall-clock deadlines -> engine ticks
+# ---------------------------------------------------------------------------
+
+
+def test_sla_quantize_rounds_up_at_granularity():
+    """Deadlines quantize UP to the clock granularity: a client deadline
+    is a budget, and rounding down would promise time the clock cannot
+    observe.  Exact multiples stay exact (binary-exact granularity)."""
+    sla = SlaMapper(granularity=0.125)
+    assert sla.quantize(0.125) == 0.125          # exact multiple: unmoved
+    assert sla.quantize(0.250) == 0.250
+    assert sla.quantize(0.126) == 0.250          # boundary+eps: next step
+    assert sla.quantize(0.1) == 0.125            # below one step: one step
+    assert sla.quantize(0.3749999) == 0.375
+
+
+def test_sla_ticks_for_uses_tick_estimate():
+    sla = SlaMapper(granularity=0.125, default_tick_s=0.25)
+    assert sla.ticks_for(0.5) == 2               # 0.5s / 0.25s per tick
+    assert sla.ticks_for(0.25) == 1
+    assert sla.ticks_for(0.01) == 1              # never below one tick
+    # EMA tracks observed tick durations and remaps future deadlines
+    for _ in range(200):
+        sla.observe_tick(0.125)
+    assert abs(sla.tick_estimate - 0.125) < 1e-6
+    assert sla.ticks_for(0.5) == 4
+    with pytest.raises(ValueError):
+        sla.ticks_for(0.0)
+
+
+def test_door_maps_deadline_s_to_deadline_ticks(model):
+    """A deadline_s on submit lands on the engine as deadline_ticks via
+    the mapper; a ManualClock that never advances keeps the default
+    estimate, so the mapping is deterministic."""
+    cfg, params = model
+    clock = ManualClock(granularity=0.125)
+    sla = SlaMapper(granularity=0.125, default_tick_s=0.25)
+    door = AsyncFrontDoor(_paged(cfg, params), clock=clock, sla=sla,
+                          seed=0)
+    door.start()
+    rng = np.random.default_rng(0)
+    rid = door.submit(rng.integers(0, cfg.vocab, 5, dtype=np.int32),
+                      max_new_tokens=32, deadline_s=0.5)
+    with pytest.raises(ValueError, match="not both"):
+        door.submit(rng.integers(0, cfg.vocab, 5, dtype=np.int32),
+                    deadline_s=0.5, deadline_ticks=3)
+    _stream_all(door, [rid])
+    req = door.result(rid)
+    assert req.deadline_ticks == 2
+    # the deadline bit: the request was truncated or finished inside it
+    assert req.deadline_hit or req.finished_step >= 0
+
+
+# ---------------------------------------------------------------------------
+# disaggregation: prefill engine -> transfer queue -> decode engine
+# ---------------------------------------------------------------------------
+
+
+def _disagg(cfg, params, decode_slots=2, **kw):
+    return DisaggController(
+        _paged(cfg, params, max_slots=1, **kw),
+        _paged(cfg, params, max_slots=decode_slots, **kw))
+
+
+def test_disagg_parity_xla_seeded(model):
+    """Mandated: disaggregated prefill->decode serving is bit-identical
+    to the colocated synchronous trace — the handoff serializes block
+    contents through the pool, and the first token (sampled on the
+    prefill side) uses the same (seed, rid, n) key."""
+    cfg, params = model
+    kw = dict(temperature=0.9)
+    ref = _sync_ref(cfg, params, (5, 9, 7, 12), seed=7, **kw)
+    ctl = _disagg(cfg, params, **kw)
+    reqs = _reqs(cfg, (5, 9, 7, 12))
+    ctl.generate(reqs, seed=7)
+    assert [r.generated for r in reqs] == ref
+    assert ctl.xfer.counters["prefixes_transferred"] == 4
+    assert ctl.xfer.counters["payload_bytes"] > 0
+    # both pools drain clean
+    assert ctl.decode_engine.pool.live_blocks() == 0
+
+
+def test_disagg_parity_bitstopper_fused(model):
+    """BitStopper fused decode on the decode instance: the kq bit-planes
+    are rebuilt from transferred K rows + merged amax at insert, bit-
+    identical to the incrementally-written planes."""
+    cfg, params = model
+    cfgb = cfg.replace(attn_impl="bitstopper_xla",
+                       bitstopper=BitStopperConfig(alpha=0.8))
+    kw = dict(fused_decode=True)
+    ref = _sync_ref(cfgb, params, (5, 11, 7), **kw)
+    ctl = _disagg(cfgb, params, **kw)
+    reqs = _reqs(cfgb, (5, 11, 7))
+    ctl.generate(reqs, seed=0)
+    assert [r.generated for r in reqs] == ref
+
+
+def test_disagg_through_door_streams_bitident(model):
+    """The DisaggController behind the AsyncFrontDoor: streamed tokens
+    across the two-instance handoff == the synchronous colocated run."""
+    cfg, params = model
+    ref = _sync_ref(cfg, params, (5, 9, 7))
+    door = AsyncFrontDoor(_disagg(cfg, params), seed=0)
+    door.start()
+    rng = np.random.default_rng(0)
+    rids = [door.submit(rng.integers(0, cfg.vocab, L, dtype=np.int32),
+                        max_new_tokens=5)
+            for L in (5, 9, 7)]
+    assert _stream_all(door, rids) == ref
+
+
+def test_disagg_sampling_config_must_agree(model):
+    """The first token samples on the prefill engine — mismatched
+    sampling config across the instances would silently change tokens,
+    so the controller refuses to build."""
+    cfg, params = model
+    with pytest.raises(ValueError, match="temperature"):
+        DisaggController(_paged(cfg, params, max_slots=1),
+                         _paged(cfg, params, temperature=0.9))
+    eng = _paged(cfg, params)
+    with pytest.raises(ValueError, match="distinct"):
+        DisaggController(eng, eng)
+
+
+def test_transfer_queue_requires_detached():
+    q = TransferQueue()
+    attached = type("P", (), {"payload": None})()
+    with pytest.raises(ValueError, match="DETACHED"):
+        q.put(attached, 1)
+
+
+# ---------------------------------------------------------------------------
+# graceful shutdown: drain + snapshot/restore losslessness
+# ---------------------------------------------------------------------------
+
+
+def test_shutdown_refuses_new_submissions(model):
+    cfg, params = model
+    door = AsyncFrontDoor(_paged(cfg, params), seed=0)
+    door.start()
+    door.shutdown("drain")
+    with pytest.raises(RuntimeError, match="shutting down"):
+        door.submit(np.zeros(4, np.int32))
+    with pytest.raises(ValueError, match="mode"):
+        door.shutdown("now")
+
+
+def test_snapshot_shutdown_restore_lossless(model, tmp_path):
+    """Mandated: SIGTERM-style snapshot shutdown mid-flight, then a fresh
+    door restores and the reattached streams replay every token already
+    served before continuing — the full stream equals the undisturbed
+    synchronous trace."""
+    cfg, params = model
+    ref = _sync_ref(cfg, params, (5, 9, 7))
+    snap = str(tmp_path / "snap")
+
+    door = AsyncFrontDoor(_paged(cfg, params), snapshot_dir=snap, seed=0)
+    assert door.start() is False
+    rng = np.random.default_rng(0)
+    rids, partial = [], {}
+
+    async def phase1():
+        for L in (5, 9, 7):
+            rid = door.submit(rng.integers(0, cfg.vocab, L, np.int32),
+                              max_new_tokens=5)
+            rids.append(rid)
+            partial[rid] = []
+
+        async def collect(rid):
+            async for tok in door.stream(rid):
+                partial[rid].append(tok)
+
+        task = asyncio.create_task(door.run())
+        collectors = [asyncio.create_task(collect(r)) for r in rids]
+        for _ in range(200):
+            await asyncio.sleep(0)
+            if any(len(v) >= 2 for v in partial.values()):
+                break
+        door.shutdown("snapshot")
+        await task
+        await asyncio.gather(*collectors)
+
+    asyncio.run(phase1())
+    assert door.interrupted                      # stopped mid-flight
+    assert any(partial.values())                 # ...with tokens streamed
+
+    door2 = AsyncFrontDoor(_paged(cfg, params), snapshot_dir=snap, seed=0)
+    assert door2.start() is True and door2.restored
+
+    async def phase2():
+        task = asyncio.create_task(door2.run())
+
+        async def collect(rid):
+            return [tok async for tok in door2.stream(rid)]
+
+        gathered = asyncio.gather(*(collect(r) for r in rids))
+        door2.shutdown("drain")
+        toks = await gathered
+        await task
+        return toks
+
+    full = asyncio.run(phase2())
+    assert full == ref                           # lossless end-to-end
+    for rid, seen in partial.items():            # replay covers phase 1
+        assert full[rids.index(rid)][:len(seen)] == seen
+
+
+def test_snapshot_dir_requires_snapshot_backend(model):
+    cfg, params = model
+    with pytest.raises(ValueError, match="snapshot-capable"):
+        AsyncFrontDoor(_disagg(cfg, params), snapshot_dir="/tmp/x")
+
+
+# ---------------------------------------------------------------------------
+# capacity errors surface as the retryable type
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_insufficient_blocks_is_retryable(model):
+    """A pool that is FULL RIGHT NOW (but large enough in principle)
+    raises InsufficientBlocks from prefill() — retryable, capacity
+    returns as live requests drain — distinct from the permanent
+    validation ValueError for a request that could never fit."""
+    cfg, params = model
+    eng = _paged(cfg, params, pool_blocks=6)   # capacity 5 usable blocks
+    eng.begin(0)
+    r1, r2 = _reqs(cfg, (12, 26), max_new=12)
+    eng.insert(eng.prefill(r1), 0)      # commits 3 of the 5 blocks
+    with pytest.raises(InsufficientBlocks):
+        eng.prefill(r2)                 # needs 4 ctx blocks, 2 free
+    # permanent impossibility is a ValueError, not the retryable type
+    (huge,) = _reqs(cfg, (40,), max_new=16)
+    with pytest.raises(ValueError, match="pool"):
+        eng.prefill(huge)
