@@ -433,6 +433,123 @@ def run_chaos(arch="stablelm-1.6b", impl="xla", alpha=0.6, seed=0,
     return rows
 
 
+def run_hierarchy(arch="stablelm-1.6b", impl="xla", alpha=0.6, seed=0,
+                  check=False):
+    """Memory-hierarchy section (docs/serving.md "Memory hierarchy"): two
+    deterministic scenarios, four arms, gated on counters and token
+    bit-identity — never wall clock.
+
+    **Swap-to-host resume** — an oversubscribed preempting trace served
+    twice: ``recompute-resume`` (no host budget: victims re-prefill from
+    their token history) vs ``swap-resume`` (victim KV device→host
+    copied at preemption, resume splices it back).  The gate is the
+    losslessness claim pinned by tests/test_swap.py: identical tokens,
+    every swap-out consumed by a splice (no recompute fallbacks), and
+    strictly fewer resume prefill chunks than the recompute arm.
+
+    **Persistent prefix store** — a shared-system-prompt trace served by
+    a seeding engine whose registered prefix blocks are flushed to an
+    on-disk store (graceful shutdown), then re-served by a ``store-cold``
+    engine (no store) and a ``store-warmed`` restarted engine: the warm
+    arm must re-emit the cold arm's tokens while prefilling strictly
+    fewer chunks (>=1 store hit)."""
+    import tempfile
+
+    cfg = reduced_config(arch).replace(
+        attn_impl=impl, bitstopper=BitStopperConfig(alpha=alpha))
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+
+    # --- swap-to-host resume ------------------------------------------
+    # Lengths sized so a third admission preempts a decoding victim that
+    # owns >1 block of exclusive KV — enough history that recompute
+    # resume pays visibly more prefill chunks than a splice.
+    trace = make_trace(rng, cfg.vocab, 3, (12, 9, 11), 16, 16)
+    base = dict(max_len=64, max_slots=3, prefill_bucket=8, page_size=8,
+                pool_blocks=10, oversubscribe=True)
+    rows, outs = [], {}
+    for name, scfg in (
+        ("recompute-resume", ServeConfig(**base)),
+        ("swap-resume", ServeConfig(**base, swap_host_bytes=1 << 22)),
+    ):
+        n, dt, eng, reqs = _timed(PagedEngine(cfg, params, scfg), trace,
+                                  seed, warm_full=True)
+        row = _row(name, eng, n, dt)
+        row["pool_blocks"] = eng.layout.pool_blocks
+        row.update({k: v for k, v in eng.memory_report().items()
+                    if k in ("host_swap_bytes", "host_swap_bytes_peak")})
+        rows.append(row)
+        outs[name] = [r.generated for r in reqs]
+
+    # --- persistent prefix store --------------------------------------
+    store_dir = tempfile.mkdtemp(prefix="bench_prefix_store_")
+    prefix = rng.integers(0, cfg.vocab, 16, dtype=np.int32)
+    strace = make_trace(rng, cfg.vocab, 3, (6, 9, 7), 8, 8,
+                        shared_prefix=prefix)
+    # prefill_chunk=8: store injection only covers whole chunk groups, so
+    # the chunk boundary must not exceed the 16-token system prompt.
+    sbase = dict(max_len=64, max_slots=2, prefill_bucket=8, page_size=8,
+                 prefill_chunk=8)
+
+    def copies(trace_):
+        return [Request(prompt=r.prompt.copy(),
+                        max_new_tokens=r.max_new_tokens) for r in trace_]
+
+    seeder = PagedEngine(cfg, params,
+                         ServeConfig(**sbase, prefix_store_dir=store_dir))
+    seeder.generate(copies(strace), seed=seed)
+    flushed = seeder.flush_prefixes()
+    del seeder
+
+    for name, scfg in (
+        ("store-cold", ServeConfig(**sbase)),
+        ("store-warmed", ServeConfig(**sbase,
+                                     prefix_store_dir=store_dir)),
+    ):
+        reqs = copies(strace)
+        t0 = time.monotonic()
+        eng = PagedEngine(cfg, params, scfg)
+        eng.generate(reqs, seed=seed)
+        dt = time.monotonic() - t0
+        row = _row(name, eng, sum(len(r.generated) for r in reqs), dt)
+        row["disk_prefix_bytes"] = eng.memory_report()["disk_prefix_bytes"]
+        if name == "store-warmed":
+            row["prefix_records_flushed"] = flushed
+        rows.append(row)
+        outs[name] = [r.generated for r in reqs]
+
+    if check:
+        swp = next(r for r in rows if r["engine"] == "swap-resume")
+        rec = next(r for r in rows if r["engine"] == "recompute-resume")
+        assert outs["swap-resume"] == outs["recompute-resume"], \
+            "swap-resume tokens diverged from recompute-resume"
+        assert swp["preemptions"] >= 1 and rec["preemptions"] >= 1, \
+            "hierarchy trace never preempted"
+        assert swp["swap_outs"] >= 1 and \
+            swp["swap_ins"] == swp["swap_outs"] and \
+            swp["swap_fallbacks"] == 0, \
+            f"swap arm did not splice every swap-out back ({swp})"
+        assert rec["swap_outs"] == 0 and rec["swap_ins"] == 0
+        assert swp["prefill_chunks"] < rec["prefill_chunks"], \
+            (f"swap resume should re-prefill fewer chunks: "
+             f"{swp['prefill_chunks']} vs {rec['prefill_chunks']}")
+        assert swp["host_swap_bytes"] == 0, \
+            "swap records leaked past their resume"
+
+        wrm = next(r for r in rows if r["engine"] == "store-warmed")
+        cld = next(r for r in rows if r["engine"] == "store-cold")
+        assert outs["store-warmed"] == outs["store-cold"], \
+            "store-warmed tokens diverged from the cold engine"
+        assert wrm["prefix_store_hits"] >= 1 and \
+            wrm["prefix_store_tokens"] >= 16, \
+            f"store warm start never hit the disk store ({wrm})"
+        assert wrm["prefill_chunks"] < cld["prefill_chunks"], \
+            (f"store warm start should prefill fewer chunks: "
+             f"{wrm['prefill_chunks']} vs {cld['prefill_chunks']}")
+        assert cld["prefix_store_hits"] == 0
+    return rows
+
+
 def _percentile(values, q):
     return float(np.percentile(np.asarray(values, np.float64), q)) \
         if values else None
@@ -659,6 +776,14 @@ def main():
                          "drafter/kernel faults, forced preemptions) plus "
                          "a QoS trace with deadlines and load shedding "
                          "(docs/robustness.md)")
+    ap.add_argument("--hierarchy", action="store_true",
+                    help="add the memory-hierarchy section: an "
+                         "oversubscribed trace resumed by host swap-in "
+                         "vs recompute, plus a cross-restart prefix-store "
+                         "warm start (docs/serving.md, tests/test_swap.py)"
+                         " — with --check, the losslessness gate "
+                         "(bit-identical tokens, every swap-out spliced, "
+                         ">=1 store hit, fewer prefill chunks)")
     ap.add_argument("--out", default=None,
                     help="write all trace rows to this JSON path "
                          "(default: results/BENCH_serve.json)")
@@ -700,6 +825,11 @@ def main():
     if args.chaos:
         crows = run_chaos(arch=args.arch, impl=args.impl, alpha=args.alpha,
                           seed=args.seed, check=args.check)
+    hrows = None
+    if args.hierarchy:
+        hrows = run_hierarchy(arch=args.arch, impl=args.impl,
+                              alpha=args.alpha, seed=args.seed,
+                              check=args.check)
     arows = None
     if args.async_:
         akw = dict(kw, check=args.check)
@@ -760,6 +890,29 @@ def main():
             print("[serve_throughput] chaos gate OK: fault-storm tokens "
                   "bit-identical, sheds and truncations exact")
 
+    if hrows is not None:
+        _print_rows("memory-hierarchy trace (swap + prefix store)", hrows)
+        swp = next(r for r in hrows if r["engine"] == "swap-resume")
+        rec = next(r for r in hrows if r["engine"] == "recompute-resume")
+        wrm = next(r for r in hrows if r["engine"] == "store-warmed")
+        cld = next(r for r in hrows if r["engine"] == "store-cold")
+        print(f"  resume: {swp['swap_outs']} swap-outs / "
+              f"{swp['swap_ins']} swap-ins ({swp['swap_in_tokens']} tokens"
+              f" spliced, {swp['swap_fallbacks']} fallbacks) -> "
+              f"{swp['prefill_chunks']} prefill chunks vs "
+              f"{rec['prefill_chunks']} recompute; host swap peak "
+              f"{swp['host_swap_bytes_peak']} bytes")
+        print(f"  warm start: {wrm['prefix_store_hits']} store hits "
+              f"({wrm['prefix_store_tokens']} tokens) -> "
+              f"{wrm['prefill_chunks']} prefill chunks vs "
+              f"{cld['prefill_chunks']} cold; "
+              f"{wrm['prefix_records_flushed']} records / "
+              f"{wrm['disk_prefix_bytes']} bytes on disk")
+        if args.check:
+            print("[serve_throughput] hierarchy gate OK: swap resume and "
+                  "store warm start bit-identical, fewer prefill chunks, "
+                  "swap records fully consumed")
+
     if arows is not None:
         _print_rows("async front-door trace (streamed)", arows)
         colo = next(r for r in arows if r["engine"] == "async-colocated")
@@ -794,6 +947,8 @@ def main():
     }
     if crows is not None:
         payload["chaos"] = crows
+    if hrows is not None:
+        payload["hierarchy"] = hrows
     if arows is not None:
         payload["async"] = arows
     if os.path.dirname(out):

@@ -64,7 +64,8 @@ BENCHES = {
                      ("shared_prefix", ("engine",)),
                      ("oversubscribed", ("engine",)),
                      ("chaos", ("engine",)),
-                     ("async", ("engine",))],
+                     ("async", ("engine",)),
+                     ("hierarchy", ("engine",))],
         "fields": ("tokens", "prefill_tokens", "prefix_hit_tokens",
                    "decode_tokens", "decode_steps", "decode_kv_tokens",
                    "requests_finished", "preemptions",
@@ -85,7 +86,17 @@ BENCHES = {
                    "deadline_ticks_mapped", "ttft_ticks_p50",
                    "ttft_ticks_p95", "prefixes_transferred",
                    "blocks_transferred", "payload_bytes",
-                   "prefixes_inserted", "prefix_transfers"),
+                   "prefixes_inserted", "prefix_transfers",
+                   # memory-hierarchy section (counter-deterministic:
+                   # swap/splice schedule is a pure function of the
+                   # trace lengths; byte fields are exact record sizes —
+                   # docs/serving.md "Memory hierarchy")
+                   "swap_outs", "swap_ins", "swap_fallbacks",
+                   "swap_in_tokens", "prefix_spills",
+                   "prefix_store_hits", "prefix_store_tokens",
+                   "prefix_store_interrupts", "host_swap_bytes",
+                   "host_swap_bytes_peak", "disk_prefix_bytes",
+                   "prefix_records_flushed"),
     },
 }
 

@@ -24,7 +24,7 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 # (The ci workflow's `sanitize` job runs the FULL suite this way.)
 REPRO_SANITIZE=1 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q tests/test_pool_sanitizer.py tests/test_kv_pool.py \
-        tests/test_serving.py tests/test_speculative.py
+        tests/test_serving.py tests/test_speculative.py tests/test_swap.py
 
 # Docs gate: every internal link / file reference in README.md and
 # docs/*.md must resolve — stale docs fail the build.
@@ -45,9 +45,13 @@ python scripts/check_docs.py
 # AsyncFrontDoor, colocated and disaggregated (prefill/decode handoff
 # over the transfer queue) — streamed tokens must be bit-identical to
 # the synchronous engine and the admission/transfer sets exact.
+# --hierarchy adds the memory-hierarchy section (docs/serving.md): swap
+# resume vs recompute on an oversubscribed trace, plus a cross-restart
+# prefix-store warm start — bit-identical tokens, every swap-out
+# spliced, >= 1 store hit, strictly fewer prefill chunks.
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/serve_throughput.py --smoke --check --chaos --async \
-        --out /tmp/BENCH_serve_smoke.json
+        --hierarchy --out /tmp/BENCH_serve_smoke.json
 # Perf-trajectory gate: fresh deterministic counters vs the committed
 # baseline (results/BENCH_serve_smoke.json) — scheduler/traffic drift
 # fails CI; bless intentional changes (scripts/check_bench.py --bless).

@@ -23,6 +23,10 @@ tests):
   registered prefix block or a shared (refcount > 1) block.
 * ``pool-poisoned-read``   — poison mode (below) makes violations of the
   fill-level/stale-table masking invariant loud.
+* ``pool-tier-conservation`` — the host tiers (:class:`SwapPool` swap /
+  warm-prefix records) conserve bytes: per-record sizes sum exactly to
+  ``bytes_used``, the budget is never exceeded, and the peak never trails
+  the current level (:class:`SanitizedSwapPool`).
 
 **Poison mode**: when the engine hands :func:`make_kv_pool` a
 ``poison_cb``, every block that returns to the free list (decref-to-free,
@@ -46,7 +50,7 @@ import collections
 import os
 from typing import Callable
 
-from repro.serving.kv_pool import KVBlockPool
+from repro.serving.kv_pool import KVBlockPool, SwapPool
 
 # Poison sentinels (engine-side callbacks use these; finite on purpose —
 # masked-out lanes multiply by zero and must stay exactly zero).
@@ -96,9 +100,9 @@ class SanitizedKVBlockPool(KVBlockPool):
     def __init__(self, pool_blocks: int, page_size: int,
                  prefix_sharing: bool = True,
                  poison_cb: Callable[[list[int]], None] | None = None,
-                 oplog_len: int = 32):
+                 oplog_len: int = 32, evict_cb=None):
         super().__init__(pool_blocks, page_size,
-                         prefix_sharing=prefix_sharing)
+                         prefix_sharing=prefix_sharing, evict_cb=evict_cb)
         self._shadow = _Shadow(pool_blocks, prefix_sharing)
         self._poison_cb = poison_cb
         self._oplog: collections.deque = collections.deque(maxlen=oplog_len)
@@ -322,6 +326,75 @@ class SanitizedKVBlockPool(KVBlockPool):
         return bid
 
 
+class SanitizedSwapPool(SwapPool):
+    """Audited :class:`SwapPool`: replays the byte accounting of every
+    put/get/take in a shadow ledger and cross-checks tier conservation
+    after each op.  The host tiers hold KV the device pool dropped —
+    losing track of a record silently re-prefills (a perf bug), while
+    under-counting bytes busts the swap budget (a memory bug); both trip
+    ``pool-tier-conservation`` at the exact op that diverged."""
+
+    def __init__(self, budget_bytes: int = 0, evict_cb=None,
+                 oplog_len: int = 32):
+        super().__init__(budget_bytes, evict_cb=evict_cb)
+        self._ledger: dict = {}          # key -> nbytes, replayed
+        self._oplog: collections.deque = collections.deque(maxlen=oplog_len)
+
+    def _fail(self, msg: str):
+        raise PoolInvariantError("pool-tier-conservation", msg, self._oplog)
+
+    def _audit(self) -> None:
+        if set(self._ledger) != set(self._records):
+            self._fail(f"record-set drift: tier holds "
+                       f"{sorted(map(str, self._records))}, ledger "
+                       f"{sorted(map(str, self._ledger))}")
+        if self._ledger != self._nbytes:
+            self._fail(f"per-record byte drift: tier {self._nbytes}, "
+                       f"ledger {self._ledger}")
+        total = sum(self._ledger.values())
+        if total != self.bytes_used:
+            self._fail(f"bytes_used({self.bytes_used}) != sum of records "
+                       f"({total}) — tier accounting leaked")
+        if self.bytes_used > self.budget_bytes:
+            self._fail(f"bytes_used({self.bytes_used}) exceeds budget "
+                       f"({self.budget_bytes})")
+        if self.peak_bytes < self.bytes_used:
+            self._fail(f"peak_bytes({self.peak_bytes}) trails "
+                       f"bytes_used({self.bytes_used})")
+
+    def put(self, key, record, nbytes: int) -> bool:
+        self._oplog.append(("put", key, int(nbytes)))
+        before = dict(self._ledger)
+        ok = super().put(key, record, nbytes)
+        # replay: the base op may have evicted LRU records to make room
+        # (their keys vanished from _records) and/or replaced `key`.
+        self._ledger = {k: n for k, n in before.items()
+                        if k in self._records and k != key}
+        if ok:
+            self._ledger[key] = int(nbytes)
+        self._audit()
+        return ok
+
+    def take(self, key):
+        self._oplog.append(("take", key))
+        had = key in self._ledger
+        rec = super().take(key)
+        if (rec is not None) != had:
+            self._fail(f"take({key!r}) {'hit' if rec is not None else 'missed'} "
+                       f"but the ledger says {'present' if had else 'absent'}")
+        self._ledger.pop(key, None)
+        self._audit()
+        return rec
+
+    def get(self, key):
+        self._oplog.append(("get", key))
+        rec = super().get(key)
+        if (rec is not None) != (key in self._ledger):
+            self._fail(f"get({key!r}) disagrees with ledger membership")
+        self._audit()
+        return rec
+
+
 POOL_RULES = [
     "pool-conservation",
     "pool-refcount",
@@ -329,6 +402,7 @@ POOL_RULES = [
     "pool-rollback-reservation",
     "pool-registered-protection",
     "pool-poisoned-read",
+    "pool-tier-conservation",
 ]
 
 _SELF = "src/repro/analysis/pool_sanitizer.py"
@@ -431,19 +505,56 @@ def run_pool_selfcheck():
     expect("pool-rollback-reservation", reservation_drift)
     expect("pool-registered-protection", rollback_registered)
 
-    meta = {"scenarios": 6}
+    # -- host tiers: legal sequence + seeded byte-ledger corruption ----
+    spilled: list = []
+    try:
+        t = SanitizedSwapPool(100, evict_cb=lambda k, r, n:
+                              spilled.append((k, n)))
+        assert t.put("a", "rec-a", 40)
+        assert t.put("b", "rec-b", 40)
+        assert t.get("a") == "rec-a"      # LRU touch: b is now oldest
+        assert t.put("c", "rec-c", 40)    # evicts b down a tier
+        assert spilled == [("b", 40)]
+        assert t.take("a") == "rec-a" and t.take("a") is None
+        assert not t.put("huge", "x", 101)  # over budget outright
+        refusing = SanitizedSwapPool(50)    # no evict_cb: refuse, don't evict
+        assert refusing.put("a", "rec", 30)
+        assert not refusing.put("b", "rec", 30)
+        assert "a" in refusing              # refused put evicted nothing
+    except Exception as e:                # noqa: BLE001 — any raise is a bug
+        findings.append(Finding(
+            "pool-tier-conservation", _SELF, 0,
+            f"swap-tier sanitizer rejected a legal op sequence: {e}"))
+
+    def tier_byte_leak():
+        t = SanitizedSwapPool(100)
+        t.put("a", "rec", 10)
+        t.bytes_used -= 5                 # tier loses track of bytes
+        t.get("a")                        # any audited op re-audits
+
+    expect("pool-tier-conservation", tier_byte_leak)
+
+    meta = {"scenarios": 8}
     return findings, meta
 
 
 def make_kv_pool(pool_blocks: int, page_size: int,
                  prefix_sharing: bool = True,
-                 poison_cb: Callable[[list[int]], None] | None = None
-                 ) -> KVBlockPool:
+                 poison_cb: Callable[[list[int]], None] | None = None,
+                 evict_cb=None) -> KVBlockPool:
     """The engine's pool constructor: a plain :class:`KVBlockPool` unless
     ``REPRO_SANITIZE`` opts in to the audited + poisoning wrapper."""
     if sanitize_enabled():
         return SanitizedKVBlockPool(pool_blocks, page_size,
                                     prefix_sharing=prefix_sharing,
-                                    poison_cb=poison_cb)
+                                    poison_cb=poison_cb, evict_cb=evict_cb)
     return KVBlockPool(pool_blocks, page_size,
-                       prefix_sharing=prefix_sharing)
+                       prefix_sharing=prefix_sharing, evict_cb=evict_cb)
+
+
+def make_swap_pool(budget_bytes: int, evict_cb=None) -> SwapPool:
+    """The engine's host-tier constructor (swap records and the warm
+    prefix tier): audited under ``REPRO_SANITIZE``, plain otherwise."""
+    if sanitize_enabled():
+        return SanitizedSwapPool(budget_bytes, evict_cb=evict_cb)
+    return SwapPool(budget_bytes, evict_cb=evict_cb)

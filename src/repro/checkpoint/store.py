@@ -18,10 +18,20 @@ per step (``PagedEngine.snapshot()``), with an ``interrupt`` seam for
 deterministic fault injection between stage and promote — a reader can
 never observe a torn snapshot, and :func:`gc_staging` reclaims orphans
 (docs/robustness.md).
+
+It also backs the **persistent prefix store** (:func:`save_prefix_record`
+/ :func:`load_prefix_record`): one promoted ``prefix_<digest>/`` dir per
+registered prefix block — an npz of the block's f32 K/V/pos rows plus a
+MANIFEST carrying the *full* token chain, which loads verify exactly
+(keys are the token tuples themselves, so a digest collision can never
+false-share KV; same rule as the in-pool registry).  A restarted or
+scaled-out engine warms its prefix cache from this store instead of
+re-prefilling system prompts (``docs/serving.md`` "Memory hierarchy").
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import tempfile
@@ -39,19 +49,23 @@ def _leaf_paths(tree):
     return paths, leaves
 
 
-def _stage(directory: str, step: int) -> str:
-    """Create a staging dir for one atomic write.  Unique tmp dir per
-    save: concurrent writers of the same step (async saver racing a sync
-    one) must not share a staging directory, or the loser's os.replace
-    finds its tmp already promoted away.  mkdtemp creates 0700; restore
-    umask-derived permissions since this inode is promoted to the final
-    directory (shared readers must list it)."""
+def _stage_named(directory: str, name: str) -> str:
+    """Create a staging dir for one atomic write of ``<directory>/<name>``.
+    Unique tmp dir per save: concurrent writers of the same target (async
+    saver racing a sync one) must not share a staging directory, or the
+    loser's os.replace finds its tmp already promoted away.  mkdtemp
+    creates 0700; restore umask-derived permissions since this inode is
+    promoted to the final directory (shared readers must list it)."""
     os.makedirs(directory, exist_ok=True)
-    tmp = tempfile.mkdtemp(dir=directory, prefix=f"step_{step:08d}.tmp.")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=f"{name}.tmp.")
     umask = os.umask(0)
     os.umask(umask)
     os.chmod(tmp, 0o777 & ~umask)
     return tmp
+
+
+def _stage(directory: str, step: int) -> str:
+    return _stage_named(directory, f"step_{step:08d}")
 
 
 def _promote(tmp: str, final: str) -> None:
@@ -142,7 +156,8 @@ def gc_staging(directory: str, grace: float = 600.0) -> list[str]:
         return []
     reclaimed = []
     for n in os.listdir(directory):
-        if n.startswith("step_") and ".tmp" in n:
+        if ((n.startswith("step_") or n.startswith("prefix_"))
+                and ".tmp" in n):
             p = os.path.join(directory, n)
             try:
                 if time.time() - os.path.getmtime(p) >= grace:
@@ -151,6 +166,120 @@ def gc_staging(directory: str, grace: float = 600.0) -> list[str]:
             except OSError:
                 pass
     return reclaimed
+
+
+# ---------------------------------------------------------------------------
+# persistent prefix store (the disk rung of the serving memory hierarchy)
+# ---------------------------------------------------------------------------
+
+def _prefix_digest(chain) -> str:
+    payload = json.dumps([int(t) for t in chain]).encode()
+    return hashlib.sha256(payload).hexdigest()[:32]
+
+
+def prefix_record_name(chain) -> str:
+    """Directory name for one stored prefix block.  The digest is only a
+    filename: the full chain lives in the MANIFEST and loads verify it
+    exactly, so a collision can at worst miss — never false-share."""
+    return f"prefix_{_prefix_digest(chain)}"
+
+
+def save_prefix_record(directory: str, chain, layers,
+                       interrupt=None) -> str:
+    """Atomically persist one registered prefix block under its token
+    chain key.
+
+    ``layers`` is a list (one entry per paged attention layer) of dicts
+    of host arrays — the block's f32 ``k``/``v`` rows and ``pos`` plane,
+    exactly as :func:`repro.models.attention.extract_block_rows` emits
+    them for a single block.  Packed ``kq`` planes and amax scales are
+    deliberately NOT stored: the loading engine re-derives its own quant
+    grid through the ordinary amax write rule, so a record is valid
+    forever regardless of what the writing engine's scales were.
+
+    First writer wins: re-saving an already-promoted chain is a no-op
+    (content under the same chain is identical by construction — same
+    rule as the in-pool registry).  ``interrupt`` is the deterministic
+    fault seam (``checkpoint_interrupt`` chaos events), called after the
+    staging write but before the atomic promote: if it raises, the torn
+    record is an invisible ``.tmp`` orphan for :func:`gc_staging`.
+    """
+    chain = [int(t) for t in chain]
+    name = prefix_record_name(chain)
+    final = os.path.join(directory, name)
+    if os.path.isdir(final):
+        return final
+    tmp = _stage_named(directory, name)
+    flat = {}
+    for i, layer in enumerate(layers):
+        for field, arr in layer.items():
+            flat[f"L{i}__{field}"] = np.asarray(arr)
+    np.savez(os.path.join(tmp, "record.npz"), **flat)
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump({"kind": "prefix", "chain": chain,
+                   "n_layers": len(layers)}, f)
+    if interrupt is not None:
+        interrupt()
+    _promote(tmp, final)
+    return final
+
+
+def load_prefix_record(directory: str, chain):
+    """Load the layer arrays stored for ``chain``, or None on a miss.
+    The MANIFEST's full token chain must match exactly — a digest
+    collision (or a half-matching store) reads as a miss, never as
+    another prefix's KV."""
+    chain = [int(t) for t in chain]
+    d = os.path.join(directory, prefix_record_name(chain))
+    manifest_path = os.path.join(d, "MANIFEST.json")
+    if not os.path.isfile(manifest_path):
+        return None
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    if manifest.get("kind") != "prefix" or manifest.get("chain") != chain:
+        return None
+    layers = [dict() for _ in range(manifest["n_layers"])]
+    with np.load(os.path.join(d, "record.npz")) as z:
+        for k in z.files:
+            li, field = k.split("__", 1)
+            layers[int(li[1:])][field] = z[k]
+    return layers
+
+
+def list_prefix_records(directory: str) -> list[list[int]]:
+    """Token chains of every promoted prefix record (staging orphans are
+    invisible), in deterministic digest order."""
+    if not os.path.isdir(directory):
+        return []
+    chains = []
+    for n in sorted(os.listdir(directory)):
+        if not n.startswith("prefix_") or ".tmp" in n:
+            continue
+        manifest_path = os.path.join(directory, n, "MANIFEST.json")
+        if not os.path.isfile(manifest_path):
+            continue
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        if manifest.get("kind") == "prefix":
+            chains.append(list(manifest["chain"]))
+    return chains
+
+
+def prefix_store_bytes(directory: str) -> int:
+    """On-disk payload bytes of all promoted prefix records (the
+    ``disk_prefix_bytes`` field of ``PagedEngine.memory_report``)."""
+    if not os.path.isdir(directory):
+        return 0
+    total = 0
+    for n in os.listdir(directory):
+        if not n.startswith("prefix_") or ".tmp" in n:
+            continue
+        p = os.path.join(directory, n, "record.npz")
+        try:
+            total += os.path.getsize(p)
+        except OSError:
+            pass
+    return total
 
 
 def load_checkpoint(tree_like, directory: str, step: int | None = None):

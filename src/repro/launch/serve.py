@@ -138,6 +138,21 @@ def main():
     ap.add_argument("--besteffort-tail", type=int, default=0, metavar="N",
                     help="mark the last N trace requests slo=besteffort "
                          "(sheddable; preferred preemption victims)")
+    ap.add_argument("--swap-host-bytes", type=int, default=0, metavar="B",
+                    help="paged engine: host-RAM budget for swap-to-host "
+                         "preemption — victims' exclusive blocks copy to "
+                         "host and resume by splice instead of chunked-"
+                         "prefill recompute (requires --oversubscribe; "
+                         "0 = recompute only)")
+    ap.add_argument("--prefix-store-dir", default=None,
+                    help="paged engine: persistent prefix store — cold "
+                         "registered prefix blocks spill here (atomic "
+                         "stage-then-promote) and a restarted engine warms "
+                         "its prefix cache from it")
+    ap.add_argument("--prefix-host-bytes", type=int, default=0, metavar="B",
+                    help="paged engine: host-RAM tier between the device "
+                         "prefix LRU and the disk store (evictions cascade "
+                         "downward; 0 = spill straight to disk)")
     ap.add_argument("--snapshot-dir", default=None,
                     help="persist crash snapshots (engine host state; "
                          "atomic stage-then-promote) under this directory")
@@ -182,13 +197,21 @@ def main():
         oversubscribe=args.oversubscribe,
         preempt_policy=args.preempt_policy, mesh=mesh,
         deadline_ticks=args.deadline, shed_watermark=args.shed_watermark,
-        snapshot_every=args.snapshot_every)
+        snapshot_every=args.snapshot_every,
+        swap_host_bytes=args.swap_host_bytes,
+        prefix_store_dir=args.prefix_store_dir,
+        prefix_host_bytes=args.prefix_host_bytes)
     if args.speculative != "off" and args.engine != "paged":
         ap.error("--speculative requires --engine paged "
                  "(block-table rollback)")
     if args.oversubscribe and args.engine != "paged":
         ap.error("--oversubscribe requires --engine paged "
                  "(block-pool preemption)")
+    if args.engine != "paged" and (
+            args.swap_host_bytes or args.prefix_host_bytes
+            or args.prefix_store_dir is not None):
+        ap.error("--swap-host-bytes/--prefix-store-dir/--prefix-host-bytes "
+                 "require --engine paged (docs/serving.md)")
     chaos = args.fault_plan is not None or args.snapshot_dir is not None
     if args.engine != "paged" and (
             chaos or args.deadline is not None
@@ -271,6 +294,23 @@ def main():
                   f"{c['preempt_dropped_tokens']} cached tokens dropped "
                   f"(resume re-maps registered blocks, recomputes the "
                   f"unshared tail)")
+        if isinstance(engine, PagedEngine) and (
+                args.swap_host_bytes or args.prefix_host_bytes
+                or args.prefix_store_dir is not None):
+            if args.prefix_store_dir is not None:
+                # Graceful shutdown: persist still-registered prefix
+                # blocks so the next launch warms from the store.
+                flushed = engine.flush_prefixes()
+                print(f"[serve] prefix store: flushed {flushed} "
+                      f"record(s) to {args.prefix_store_dir}")
+            c = engine.counters
+            print(f"[serve] hierarchy: {c['swap_outs']} swap-outs / "
+                  f"{c['swap_ins']} swap-ins ({c['swap_in_tokens']} tokens "
+                  f"spliced, {c['swap_fallbacks']} recompute fallbacks), "
+                  f"{c['prefix_spills']} prefix spills, "
+                  f"{c['prefix_store_hits']} store hits "
+                  f"({c['prefix_store_tokens']} tokens warmed); "
+                  f"tiers={engine.memory_report()}")
         if isinstance(engine, PagedEngine):
             print(f"[serve] kv pool: page_size={engine.layout.page_size} "
                   f"blocks={engine.layout.pool_blocks} "

@@ -939,3 +939,215 @@ def attention(
     y = L.linear(p["wo"], out)
     y = constrain(y, "batch", "seq", "embed")
     return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged block-row transport: the device<->host seam of the memory hierarchy.
+#
+# These helpers move whole physical blocks between the paged device pools
+# and host arrays — the engine's Prefix.payload handoff (PR 9), swap-to-
+# host preemption and the persistent prefix store are all built on them.
+# They live here (not in serving/) because they encode the paged cache
+# layout: which per-layer arrays exist, how stacked (scanned) layers carry
+# a leading reps axis, and how the packed plane pool relates to the f32
+# pool and the amax scales.
+# ---------------------------------------------------------------------------
+
+
+def iter_paged_layers(tree):
+    """Yield every paged-layer cache dict in the pytree, in deterministic
+    (sorted-dict-key / list-index) order.  All transport helpers below use
+    this same traversal, so extracted layer lists and splice targets pair
+    up positionally."""
+    if isinstance(tree, dict):
+        if cache_is_paged(tree):
+            yield tree
+        else:
+            for key in sorted(tree):
+                yield from iter_paged_layers(tree[key])
+    elif isinstance(tree, (list, tuple)):
+        for sub in tree:
+            yield from iter_paged_layers(sub)
+
+
+def map_paged_layers(tree, fn, _counter=None):
+    """Rebuild the pytree with ``fn(layer_dict, layer_index)`` applied to
+    every paged-layer cache dict (same order as :func:`iter_paged_layers`)."""
+    if _counter is None:
+        _counter = [0]
+    if isinstance(tree, dict):
+        if cache_is_paged(tree):
+            i = _counter[0]
+            _counter[0] += 1
+            return fn(tree, i)
+        return {k: map_paged_layers(tree[k], fn, _counter)
+                for k in sorted(tree)}
+    if isinstance(tree, (list, tuple)):
+        mapped = [map_paged_layers(sub, fn, _counter) for sub in tree]
+        return type(tree)(mapped) if isinstance(tree, tuple) else mapped
+    return tree
+
+
+def _rows_take(c, field, idx):
+    a = c[field]
+    return a[:, idx] if c["table"].ndim == 3 else a[idx]
+
+
+def extract_block_rows(caches, bids, planes: bool = False):
+    """Device→host copy of whole physical blocks ``bids`` from every paged
+    layer.  Returns one dict per paged layer holding numpy ``k``/``v``
+    rows and the ``pos`` plane (stacked layers keep their leading reps
+    axis), plus the packed ``kq`` plane rows when ``planes=True`` and the
+    layer maintains them.  Registered blocks are append-only and full
+    blocks are never rewritten, so extracted rows stay valid until the
+    block is freed and poisoned/reused."""
+    import numpy as np
+    idx = jnp.asarray(list(bids), jnp.int32)
+    layers = []
+    for c in iter_paged_layers(caches):
+        rows = {"k": np.asarray(_rows_take(c, "k", idx)),
+                "v": np.asarray(_rows_take(c, "v", idx)),
+                "pos": np.asarray(_rows_take(c, "pos", idx))}
+        if planes and "kq" in c:
+            rows["kq"] = np.asarray(_rows_take(c, "kq", idx))
+        layers.append(rows)
+    return layers
+
+
+def splice_block_rows(caches, bids, layers, sel=None):
+    """Scatter rows from :func:`extract_block_rows` into physical blocks
+    ``bids`` of every paged layer.  ``sel`` picks which record rows feed
+    which bid (``bids[i] <- rows[sel[i]]``; default: all rows in order).
+    ``kq`` rows are spliced only when both the record and the cache carry
+    them — a caller whose scales moved since extraction must skip/repack
+    instead (:func:`repack_block_planes`)."""
+    idx = jnp.asarray(list(bids), jnp.int32)
+
+    def put(c, i):
+        rows = layers[i]
+        stacked = c["table"].ndim == 3
+        new = dict(c)
+        for field in ("k", "v", "pos", "kq"):
+            if field not in rows or field not in c:
+                continue
+            val = jnp.asarray(rows[field]).astype(c[field].dtype)
+            if sel is not None:
+                s = jnp.asarray(list(sel), jnp.int32)
+                val = val[:, s] if stacked else val[s]
+            new[field] = (c[field].at[:, idx].set(val) if stacked
+                          else c[field].at[idx].set(val))
+        return new
+
+    return map_paged_layers(caches, put)
+
+
+def requant_plane_pools(caches):
+    """Rebuild every packed K bit-plane pool from its f32 pool under the
+    current amax scales.  ``pack_pool_planes`` is a pure function of
+    (f32 pool, amax), so the rebuilt planes are bit-identical to an
+    incrementally maintained pool whose last requant happened at the
+    current scales — the fix-up step after any operation that moves
+    ``k_amax`` out from under stored planes (detached-prefix amax merge,
+    store injection that grew the scale)."""
+    def rq(c, _i):
+        if "kq" not in c:
+            return c
+        stacked = c["table"].ndim == 3
+        bits = c["kq"].shape[2] if stacked else c["kq"].shape[1]
+        kf = c["k"].astype(jnp.float32)
+        if stacked:
+            kq = jax.vmap(
+                lambda kp, am: qlib.pack_pool_planes(kp, am, bits)
+            )(kf, c["k_amax"])
+        else:
+            kq = qlib.pack_pool_planes(kf, c["k_amax"], bits)
+        return dict(c, kq=kq.astype(c["kq"].dtype))
+
+    return map_paged_layers(caches, rq)
+
+
+def repack_block_planes(caches, bids):
+    """Rebuild the packed planes of just blocks ``bids`` from their (just
+    spliced) f32 rows under the CURRENT scales — the no-growth injection
+    path.  Bit-identical to the incremental write rule quantizing the
+    same tokens under the same unchanged scale, at O(len(bids)) cost
+    instead of a whole-pool requant."""
+    idx = jnp.asarray(list(bids), jnp.int32)
+
+    def rp(c, _i):
+        if "kq" not in c:
+            return c
+        stacked = c["table"].ndim == 3
+        bits = c["kq"].shape[2] if stacked else c["kq"].shape[1]
+        if stacked:
+            packed = jax.vmap(
+                lambda kp, am: qlib.pack_pool_planes(kp, am, bits)
+            )(c["k"][:, idx].astype(jnp.float32), c["k_amax"])
+            return dict(c, kq=c["kq"].at[:, idx].set(
+                packed.astype(c["kq"].dtype)))
+        packed = qlib.pack_pool_planes(c["k"][idx].astype(jnp.float32),
+                                       c["k_amax"], bits)
+        return dict(c, kq=c["kq"].at[idx].set(packed.astype(c["kq"].dtype)))
+
+    return map_paged_layers(caches, rp)
+
+
+def apply_inject_amax_rule(caches, layers, groups):
+    """Replay the cache-write scale rule for store-injected rows, one
+    application per chunk group — exactly the trajectory chunked prefill
+    of the same tokens would have produced.
+
+    ``layers`` pairs with the paged layers (an :func:`extract_block_rows`
+    result); ``groups`` is a list of chunk groups, each a list of
+    ``(row, lo, hi)`` — a record row index plus the token-offset window
+    within that block belonging to the group (chunk boundaries need not
+    align with page boundaries).  Host-side numpy on purpose: ``abs`` and
+    ``max`` are exact, and the float32 ``AMAX_HEADROOM`` multiply rounds
+    identically to the device rule in ``_update_plane_pool``, so the
+    resulting leaves are bit-identical to the recompute reference's.
+
+    Returns ``(new_caches, k_grew)`` — ``k_grew`` True iff any K scale
+    moved (the caller must then :func:`requant_plane_pools`, mirroring
+    the reference's growth-triggered whole-pool requant; otherwise
+    :func:`repack_block_planes` of the injected blocks suffices)."""
+    import numpy as np
+    headroom = np.float32(AMAX_HEADROOM)
+    k_grew = [False]
+
+    def window_hi(rows, stacked, row, lo, hi):
+        if stacked:                       # [reps, nrows, bs, H, D]
+            w = np.abs(rows[:, row, lo:hi])
+            return w.max(axis=(1, 3), initial=np.float32(0.0))
+        w = np.abs(rows[row, lo:hi])      # [hi-lo, H, D]
+        return w.max(axis=(0, 2), initial=np.float32(0.0))
+
+    def upd(c, i):
+        if "k_amax" not in c:
+            return c
+        rows = layers[i]
+        stacked = c["table"].ndim == 3
+        k_rows = np.asarray(rows["k"], np.float32)
+        v_rows = np.asarray(rows["v"], np.float32)
+        k_amax = np.asarray(c["k_amax"], np.float32).copy()
+        v_amax = np.asarray(c["v_amax"], np.float32).copy()
+        k0, v0 = k_amax.copy(), v_amax.copy()
+        for group in groups:
+            k_hi = np.zeros(k_amax.shape, np.float32)
+            v_hi = np.zeros(v_amax.shape, np.float32)
+            for row, lo, hi in group:
+                k_hi = np.maximum(k_hi, window_hi(k_rows, stacked, row,
+                                                  lo, hi))
+                v_hi = np.maximum(v_hi, window_hi(v_rows, stacked, row,
+                                                  lo, hi))
+            k_new = np.where(k_hi > k_amax, k_hi * headroom, k_amax)
+            v_new = np.where(v_hi > v_amax, v_hi * headroom, v_amax)
+            if (k_new > k_amax).any():
+                k_grew[0] = True
+            k_amax = k_new.astype(np.float32)
+            v_amax = v_new.astype(np.float32)
+        if (k_amax == k0).all() and (v_amax == v0).all():
+            return c
+        return dict(c, k_amax=jnp.asarray(k_amax),
+                    v_amax=jnp.asarray(v_amax))
+
+    return map_paged_layers(caches, upd), k_grew[0]

@@ -24,11 +24,21 @@ Fault kinds and where they bite (`docs/robustness.md` has the model):
                       speculation only ever changes forward count).
 * ``checkpoint_interrupt`` — a snapshot write dies after staging, before
                       the atomic promote: the store must never expose the
-                      torn snapshot and GC must reclaim the orphan.
+                      torn snapshot and GC must reclaim the orphan.  The
+                      same seam interrupts prefix-store spills
+                      (``PagedEngine`` catches it and drops the record;
+                      the staged orphan is GC'd).
+* ``swap_fail``     — the device→host copy of a preemption victim's
+                      blocks dies mid-swap-out: the engine discards the
+                      partial record and the victim falls back to the
+                      recompute-resume path (bit-identical by the PR-5
+                      losslessness guarantee).
 * ``crash``         — the host dies between ticks; the harness rebuilds a
                       fresh engine and :meth:`PagedEngine.restore`\\ s the
                       latest snapshot.  Served tokens must be (and are
-                      tested) bit-identical to an undisturbed run.
+                      tested) bit-identical to an undisturbed run.  Host
+                      swap records die with the host (they are RAM), so
+                      restored victims also recompute.
 
 The injector lives in the *harness*, outside the engine, so it survives a
 ``crash`` — replayed ticks after a restore do not re-fire consumed events
@@ -49,7 +59,7 @@ import json
 import numpy as np
 
 KINDS = ("pool_dry", "kernel_fail", "drafter_fail",
-         "checkpoint_interrupt", "crash")
+         "checkpoint_interrupt", "swap_fail", "crash")
 
 
 class KernelFault(RuntimeError):

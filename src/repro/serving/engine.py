@@ -48,9 +48,12 @@ import numpy as np
 # construction — it imports serving.kv_pool, and a module-level import
 # here would be circular through serving/__init__.
 from repro.models import transformer as T
-from repro.models.attention import POS_SENTINEL, PagedLayout
+from repro.models.attention import (POS_SENTINEL, PagedLayout,
+                                    apply_inject_amax_rule,
+                                    extract_block_rows, repack_block_planes,
+                                    requant_plane_pools, splice_block_rows)
 from repro.models.config import ModelConfig
-from repro.serving.chaos import KernelFault
+from repro.serving.chaos import CheckpointInterrupted, KernelFault
 from repro.serving.kv_pool import KVBlockPool
 
 
@@ -120,6 +123,21 @@ class ServeConfig:
                                       # serving/chaos.serve_with_chaos and
                                       # launch/serve --snapshot-every
                                       # (0 = only the initial snapshot)
+    # ---- KV memory hierarchy (PagedEngine; docs/serving.md) ----
+    swap_host_bytes: int = 0          # host-RAM budget for swap-to-host
+                                      # preemption: a victim's exclusive
+                                      # blocks copy to host and resume by
+                                      # splice instead of chunked-prefill
+                                      # recompute (0 = recompute only)
+    prefix_store_dir: str | None = None  # persistent prefix store: cold
+                                      # registered prefix blocks spill to
+                                      # disk via checkpoint/store.py and a
+                                      # (re)started engine warms its prefix
+                                      # cache from it.  None = off.
+    prefix_host_bytes: int = 0        # host-RAM tier between the device
+                                      # prefix LRU and the disk store
+                                      # (evictions cascade downward);
+                                      # 0 = spill straight to disk
 
     def __post_init__(self):
         if self.mesh is not None:
@@ -186,6 +204,22 @@ class ServeConfig:
         if self.snapshot_every < 0:
             raise ValueError(f"snapshot_every must be >= 0, got "
                              f"{self.snapshot_every}")
+        if self.swap_host_bytes < 0:
+            raise ValueError(f"swap_host_bytes must be >= 0, got "
+                             f"{self.swap_host_bytes}")
+        if self.prefix_host_bytes < 0:
+            raise ValueError(f"prefix_host_bytes must be >= 0, got "
+                             f"{self.prefix_host_bytes}")
+        if self.swap_host_bytes and not self.oversubscribe:
+            raise ValueError(
+                "swap_host_bytes requires oversubscribe=True: swap-to-host "
+                "captures preemption victims, and only oversubscribed "
+                "admission ever preempts")
+        if ((self.prefix_store_dir is not None or self.prefix_host_bytes)
+                and not self.prefix_sharing):
+            raise ValueError(
+                "the prefix store extends the registered-prefix LRU tier "
+                "downward; it needs prefix_sharing=True")
 
     # Resolved paged-layout sizes (None fields get max_len-derived defaults).
     def resolved_max_blocks(self) -> int:
@@ -429,107 +463,6 @@ def _attach_tables(caches, table: np.ndarray, length: np.ndarray):
     return rec(caches)
 
 
-def _extract_block_rows(caches, bids: list) -> list:
-    """Serialize the K/V/pos pool rows of ``bids`` to host arrays, one
-    entry per paged layer in the pytree's deterministic traversal order
-    (the same order :func:`_splice_block_rows` consumes).  The packed
-    plane pool is NOT serialized: the receiver re-derives it from the
-    f32 rows under its own (merged) quant scales."""
-    idx = jnp.asarray(bids, jnp.int32)
-    out = []
-
-    def rec(c):
-        if isinstance(c, dict):
-            if "table" in c:
-                stacked = c["table"].ndim == 3
-
-                def grab(a):
-                    return np.asarray(a[:, idx] if stacked else a[idx])
-
-                out.append({"k": grab(c["k"]), "v": grab(c["v"]),
-                            "pos": grab(c["pos"])})
-                return
-            for k in c:
-                rec(c[k])
-        elif isinstance(c, (list, tuple)):
-            for x in c:
-                rec(x)
-
-    rec(caches)
-    return out
-
-
-def _splice_block_rows(caches, bids: list, layers: list, sel: list):
-    """Scatter serialized block rows (``_extract_block_rows`` output from
-    ANOTHER engine) into this cache's pools at ``bids``.  ``sel`` picks
-    which serialized rows to write — CoW-matched blocks are spliced by
-    reference instead and skip the copy."""
-    idx = jnp.asarray(bids, jnp.int32)
-    sel = np.asarray(sel, np.int64)
-    it = iter(layers)
-
-    def rec(c):
-        if isinstance(c, dict):
-            if "table" in c:
-                rows = next(it)
-                stacked = c["table"].ndim == 3
-
-                def pset(a, val):
-                    val = jnp.asarray(val[:, sel] if stacked else val[sel],
-                                      a.dtype)
-                    return (a.at[:, idx].set(val) if stacked
-                            else a.at[idx].set(val))
-
-                return dict(c, k=pset(c["k"], rows["k"]),
-                            v=pset(c["v"], rows["v"]),
-                            pos=pset(c["pos"], rows["pos"]))
-            return {k: rec(v) for k, v in c.items()}
-        if isinstance(c, list):
-            return [rec(x) for x in c]
-        return c
-
-    new = rec(caches)
-    leftover = sum(1 for _ in it)
-    if leftover:
-        raise ValueError(f"prefix payload carries {leftover} extra layers "
-                         f"this cache has no home for")
-    return new
-
-
-def _requant_plane_pools(caches):
-    """Rebuild every fused layer's packed bit-plane pool from its f32 K
-    pool under the CURRENT quant scales — the whole-pool form of the
-    rescale-on-demand rule (``pack_pool_planes`` is the same function the
-    incremental write path and mid-serve requants use, so the rebuilt
-    planes are bit-identical to incrementally maintained ones).  Run
-    after a cross-engine splice: spliced pages carry no plane rows yet,
-    and a merged scale must re-grid every resident page."""
-    import repro.core.quantization as qlib
-
-    def rec(c):
-        if isinstance(c, dict):
-            if "table" in c:
-                if "kq" not in c:
-                    return c
-                stacked = c["table"].ndim == 3
-                kf = c["k"].astype(jnp.float32)
-                if stacked:
-                    bits = c["kq"].shape[2]
-                    kq = jax.vmap(
-                        lambda kp, am: qlib.pack_pool_planes(kp, am, bits)
-                    )(kf, c["k_amax"])
-                else:
-                    bits = c["kq"].shape[1]
-                    kq = qlib.pack_pool_planes(kf, c["k_amax"], bits)
-                return dict(c, kq=kq.astype(c["kq"].dtype))
-            return {k: rec(v) for k, v in c.items()}
-        if isinstance(c, list):
-            return [rec(x) for x in c]
-        return c
-
-    return rec(caches)
-
-
 class _EngineCommon:
     """Shared scheduler-loop + measurement surface of the serving engines."""
 
@@ -633,6 +566,12 @@ class ContinuousBatchingEngine(_EngineCommon):
             raise ValueError(
                 "deadlines / load shedding / crash snapshots are "
                 "PagedEngine features (docs/robustness.md); use PagedEngine")
+        if (scfg.swap_host_bytes or scfg.prefix_host_bytes
+                or scfg.prefix_store_dir is not None):
+            raise ValueError(
+                "the KV memory hierarchy (swap_host_bytes / "
+                "prefix_store_dir / prefix_host_bytes) is a PagedEngine "
+                "feature (docs/serving.md); use PagedEngine")
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
@@ -933,10 +872,26 @@ class PagedEngine(_EngineCommon):
         # Under REPRO_SANITIZE=1 this is the shadow-ledger wrapper with
         # freed-page poisoning (see analysis/pool_sanitizer.py); otherwise
         # a plain KVBlockPool.
-        from repro.analysis.pool_sanitizer import make_kv_pool
+        from repro.analysis.pool_sanitizer import make_kv_pool, make_swap_pool
+        # KV memory hierarchy (docs/serving.md "Memory hierarchy"): host
+        # swap records for preemption victims, plus a host-RAM -> disk
+        # spill cascade for registered prefix blocks the device LRU
+        # evicts.  The pool's evict_cb fires while the stolen block's
+        # device content is still intact (before the new owner can write
+        # and before the sanitizer poisons), so the spill copy is exact.
+        self._swap = (make_swap_pool(scfg.swap_host_bytes)
+                      if scfg.swap_host_bytes else None)
+        self._prefix_host = (
+            make_swap_pool(scfg.prefix_host_bytes,
+                           evict_cb=self._spill_prefix_record)
+            if scfg.prefix_host_bytes else None)
+        evict_cb = (self._on_prefix_evict
+                    if (self._prefix_host is not None
+                        or scfg.prefix_store_dir is not None) else None)
         self.pool = make_kv_pool(self.layout.pool_blocks, self._page,
                                  prefix_sharing=scfg.prefix_sharing,
-                                 poison_cb=self._poison_blocks)
+                                 poison_cb=self._poison_blocks,
+                                 evict_cb=evict_cb)
 
         # Deterministic fault injection (serving/chaos.py): when a
         # FaultInjector is attached, the engine consults it at its
@@ -1011,7 +966,13 @@ class PagedEngine(_EngineCommon):
                          "forced_preemptions": 0,
                          # JetStream-style engine API (frontdoor/disagg)
                          "prefixes_prefilled": 0, "prefixes_inserted": 0,
-                         "prefix_transfers": 0}
+                         "prefix_transfers": 0,
+                         # KV memory hierarchy (docs/serving.md)
+                         "swap_outs": 0, "swap_ins": 0,
+                         "swap_fallbacks": 0, "swap_in_tokens": 0,
+                         "prefix_spills": 0, "prefix_store_hits": 0,
+                         "prefix_store_tokens": 0,
+                         "prefix_store_interrupts": 0}
 
     # ------------------------------------------------------------------
     # jitted forwards + the kernel circuit breaker
@@ -1346,7 +1307,12 @@ class PagedEngine(_EngineCommon):
             # and materialize lazily.
             for j in range(len(matched), n_ctx):
                 row[j] = self.pool.alloc(reserved=True)
-            cached_len = len(matched) * self._page
+            hit_len = len(matched) * self._page
+            # Fill freshly claimed context blocks from the memory
+            # hierarchy (host swap record, then prefix store) instead of
+            # recomputing them — a no-op when no tier is configured.
+            cached_len = self._rehydrate(req, row, ctx, len(matched),
+                                         hit_len, resumed)
             self.table[slot] = row
             self.lengths[slot] = cached_len
             self.slots[slot] = _PagedSlot(
@@ -1364,7 +1330,7 @@ class PagedEngine(_EngineCommon):
             if not resumed:
                 req.prefill_len = Lc
                 req.admitted_step = self._step
-            self.counters["prefix_hit_tokens"] += cached_len
+            self.counters["prefix_hit_tokens"] += hit_len
 
     def _prefill_tick(self) -> None:
         """Run ONE bucket-padded chunk of the oldest admitted-but-unprefilled
@@ -1586,7 +1552,7 @@ class PagedEngine(_EngineCommon):
         if prefix.pool is not self.pool:
             raise ValueError(
                 "extract() must run on the engine owning the prefix")
-        layers = _extract_block_rows(self.caches, prefix.blocks)
+        layers = extract_block_rows(self.caches, prefix.blocks)
         amax = [np.asarray(a, np.float32) for a in _amax_leaves(self.caches)]
         for bid in prefix.blocks:
             self.pool.decref(bid)
@@ -1667,7 +1633,7 @@ class PagedEngine(_EngineCommon):
             fresh = [self.pool.alloc(reserved=True) for _ in sel]
             row_bids = [int(b) for b in matched] + fresh
             if fresh:
-                self.caches = _splice_block_rows(
+                self.caches = splice_block_rows(
                     self.caches, fresh, prefix.payload["layers"], sel)
             self._merge_amax(prefix.payload["amax"])
             # Publish transferred FULL blocks for CoW under their chain
@@ -1719,7 +1685,7 @@ class PagedEngine(_EngineCommon):
                                      np.asarray(p,
                                                 np.float32).reshape(cn.shape)))
         self.caches = _set_amax_leaves(self.caches, merged)
-        self.caches = _requant_plane_pools(self.caches)
+        self.caches = requant_plane_pools(self.caches)
 
     def generate_step(self) -> list[dict]:
         """Engine API step 3: one scheduler tick, returning the tokens it
@@ -1873,6 +1839,298 @@ class PagedEngine(_EngineCommon):
             self.queue.append(self.requests[rid])
 
     # ------------------------------------------------------------------
+    # KV memory hierarchy: swap-to-host preemption + persistent prefix
+    # store (docs/serving.md "Memory hierarchy")
+    # ------------------------------------------------------------------
+
+    def _swap_out(self, slot: int, exclusive: list[int], L: int,
+                  req: Request) -> None:
+        """Device→host copy of a preemption victim's exclusively-owned
+        blocks into the swap pool, keyed by rid.  The record carries the
+        f32 K/V/pos rows, the packed ``kq`` plane rows, and the
+        swap-time quant-scale leaves — enough for :meth:`_swap_in` to
+        re-materialize by splice with zero recompute.  Any failure
+        (injected swap_fail, a non-contiguous exclusive run, budget
+        refusal) just skips the record: the recompute-resume path is
+        always the correct fallback."""
+        if (self.chaos is not None
+                and self.chaos.fire("swap_fail", self.ticks)):
+            # The device→host copy died mid-flight: the partial record
+            # is discarded and the victim resumes by recompute.
+            self.counters["swap_fallbacks"] += 1
+            return
+        excl = set(exclusive)
+        n_used = -(-L // self._page)
+        pairs = [(j, int(self.table[slot, j])) for j in range(n_used)
+                 if int(self.table[slot, j]) in excl]
+        if not pairs:
+            return        # every token-bearing block is shared: resume
+                          # re-maps them from the registry for free
+        js = [j for j, _ in pairs]
+        if js != list(range(js[0], n_used)):
+            # Shared blocks interleaved past the first exclusive one —
+            # the record could not splice to a contiguous tail.
+            self.counters["swap_fallbacks"] += 1
+            return
+        bids = [b for _, b in pairs]
+        layers = extract_block_rows(self.caches, bids, planes=True)
+        amax = [np.asarray(a, np.float32) for a in _amax_leaves(self.caches)]
+        rec = {"js": js, "length": int(L), "layers": layers, "amax": amax}
+        nbytes = (sum(int(a.nbytes) for lay in layers for a in lay.values())
+                  + sum(int(a.nbytes) for a in amax))
+        if self._swap.put(req.rid, rec, nbytes):
+            self.counters["swap_outs"] += 1
+        else:
+            self.counters["swap_fallbacks"] += 1
+
+    def _rehydrate(self, req: Request, row: np.ndarray, ctx: np.ndarray,
+                   m: int, cached_len: int, resumed: bool) -> int:
+        """Admission-time hierarchy lookup: after the context blocks are
+        claimed, try to fill them from a host swap record (exact resume),
+        else from the host/disk prefix store.  Returns the new cached
+        length (``cached_len`` unchanged when nothing applies)."""
+        new_len = None
+        if self._swap is not None:
+            new_len = self._swap_in(req, row, ctx, m, resumed)
+        if new_len is None and (self._prefix_host is not None
+                                or self.scfg.prefix_store_dir is not None):
+            new_len = self._store_inject(req, row, ctx, m, resumed)
+        if new_len is None:
+            return cached_len
+        if self._rules is not None:
+            # Re-commit: the host-side splice rebuilt pool leaves.
+            from repro.sharding.rules import cache_shardings
+            self.caches = jax.device_put(
+                self.caches, cache_shardings(self._rules, self.caches))
+        return new_len
+
+    def _swap_in(self, req: Request, row: np.ndarray, ctx: np.ndarray,
+                 m: int, resumed: bool) -> int | None:
+        """Re-materialize a swapped-out victim by scattering its host
+        record into the freshly claimed blocks.
+
+        Bit-identity argument: every swapped value was previously written
+        by THIS engine, so the current (monotone) quant scales already
+        cover it — the recompute reference would trigger no scale growth,
+        and the swap-in must not apply the scale rule at all.  For the
+        packed planes: if no scale grew since swap-out, the stored ``kq``
+        rows splice verbatim (they ARE what incremental maintenance
+        holds); if a scale did grow, the reference's growth event
+        whole-pool-requanted, so repacking just the spliced blocks under
+        the current scales reproduces its bytes exactly."""
+        rec = self._swap.take(req.rid)
+        if rec is None:
+            return None
+        L, js = rec["length"], rec["js"]
+        if not resumed or js[0] != m or L > len(ctx):
+            # The registry shifted under the record (prefix blocks it
+            # relied on were evicted), or the record predates a state
+            # this admission no longer matches: recompute instead.
+            self.counters["swap_fallbacks"] += 1
+            return None
+        bids = [int(row[j]) for j in range(m, m + len(js))]
+        layers = rec["layers"]
+        cur = _amax_leaves(self.caches)
+        same_scales = (len(cur) == len(rec["amax"]) and all(
+            np.array_equal(np.asarray(a, np.float32), b)
+            for a, b in zip(cur, rec["amax"])))
+        if same_scales:
+            self.caches = splice_block_rows(self.caches, bids, layers)
+        else:
+            stripped = [{k: v for k, v in lay.items() if k != "kq"}
+                        for lay in layers]
+            self.caches = splice_block_rows(self.caches, bids, stripped)
+            self.caches = repack_block_planes(self.caches, bids)
+        # Registration parity with the recompute reference: full blocks
+        # publish under their chain keys exactly as _prefill_tick would
+        # have while recomputing [m*page, L).
+        bs = self._page
+        for j in range(m, L // bs):
+            key = tuple(int(t) for t in ctx[:(j + 1) * bs])
+            self.pool.register(key, int(row[j]))
+        self.counters["swap_ins"] += 1
+        self.counters["swap_in_tokens"] += L - m * bs
+        return L
+
+    def _store_inject(self, req: Request, row: np.ndarray, ctx: np.ndarray,
+                      m: int, resumed: bool) -> int | None:
+        """Warm a request's context from the prefix store: walk the chain
+        of full context blocks past the device-registry match, fetching
+        host-tier records then disk records, splice the covered rows and
+        replay the quant-scale rule host-side with chunk-group boundaries
+        exactly matching the chunked-prefill recompute reference
+        (``docs/serving.md`` has the losslessness argument).  Injection
+        stops at the largest chunk boundary fully covered by stored
+        blocks; a fresh request always leaves >= 1 token to prefill (its
+        forward samples the first new token)."""
+        bs = self._page
+        Lc = len(ctx)
+        tier, sdir = self._prefix_host, self.scfg.prefix_store_dir
+        recs = []
+        j = m
+        while (j + 1) * bs <= Lc:
+            key = tuple(int(t) for t in ctx[:(j + 1) * bs])
+            rec = None
+            if tier is not None:
+                got = tier.get(key)
+                if got is not None:
+                    rec = got["layers"]
+            if rec is None and sdir is not None:
+                from repro.checkpoint.store import load_prefix_record
+                rec = load_prefix_record(sdir, key)
+            if rec is None:
+                break
+            recs.append(rec)
+            j += 1
+        if not recs:
+            return None
+        base = m * bs
+        cov = (m + len(recs)) * bs
+        # Largest admissible chunk-group boundary e_k = min(base +
+        # k*chunk, Lc) covered by the stored blocks; resumed requests may
+        # reach Lc (zero prefill chunks), fresh ones must stop short.
+        if resumed and cov >= Lc:
+            inject_end = Lc
+        else:
+            hi = min(cov, Lc - 1)
+            inject_end = base + ((hi - base) // self._chunk) * self._chunk
+        if inject_end <= base:
+            return None
+        jend = -(-inject_end // bs)
+        recs = recs[:jend - m]
+        # Merge the per-block records into one extract_block_rows-shaped
+        # layer list (rows axis: 1 for stacked layers, else 0; the pos
+        # plane is 2 ranks slimmer than k/v).
+        merged = []
+        for li in range(len(recs[0])):
+            merged.append({
+                f: np.concatenate(
+                    [np.asarray(r[li][f]) for r in recs],
+                    axis=np.asarray(recs[0][li][f]).ndim
+                    - (2 if f == "pos" else 4))
+                for f in ("k", "v", "pos")})
+        bids = [int(row[j]) for j in range(m, jend)]
+        self.caches = splice_block_rows(self.caches, bids, merged)
+        # Replay the scale rule per chunk group — the stored values may
+        # be new to THIS engine (cold start), and growth is trajectory-
+        # dependent, so the groups mirror the recompute chunks exactly.
+        groups = []
+        s = base
+        while s < inject_end:
+            e = min(s + self._chunk, inject_end)
+            wins = []
+            for jj in range(s // bs, -(-e // bs)):
+                wins.append((jj - m, max(s, jj * bs) - jj * bs,
+                             min(e, (jj + 1) * bs) - jj * bs))
+            groups.append(wins)
+            s = e
+        self.caches, k_grew = apply_inject_amax_rule(self.caches, merged,
+                                                     groups)
+        if k_grew:
+            # The reference's last growth event whole-pool-requants.
+            self.caches = requant_plane_pools(self.caches)
+        else:
+            self.caches = repack_block_planes(self.caches, bids)
+        for jj in range(m, inject_end // bs):
+            key = tuple(int(t) for t in ctx[:(jj + 1) * bs])
+            self.pool.register(key, int(row[jj]))
+        self.counters["prefix_store_hits"] += len(recs)
+        self.counters["prefix_store_tokens"] += inject_end - base
+        return inject_end
+
+    def _on_prefix_evict(self, key: tuple, bid: int) -> None:
+        """KVBlockPool evict hook: a parked registered block is being
+        stolen for reuse — copy its rows down the hierarchy (host tier,
+        cascading to disk) before the new owner overwrites them."""
+        if getattr(self, "caches", None) is None:
+            return
+        layers = extract_block_rows(self.caches, [bid])
+        rec = {"chain": key, "layers": layers}
+        nbytes = sum(int(a.nbytes) for lay in layers for a in lay.values())
+        self.counters["prefix_spills"] += 1
+        if self._prefix_host is not None:
+            self._prefix_host.put(key, rec, nbytes)
+        else:
+            self._spill_prefix_record(key, rec, nbytes)
+
+    def _spill_prefix_record(self, key, rec, nbytes) -> None:
+        """Bottom of the cascade: persist a prefix record to the disk
+        store (atomic stage-then-promote; an injected
+        ``checkpoint_interrupt`` drops the record, leaving a GC-able
+        staging orphan and the store's previous contents intact)."""
+        sdir = self.scfg.prefix_store_dir
+        if sdir is None:
+            return
+        from repro.checkpoint.store import save_prefix_record
+        try:
+            save_prefix_record(sdir, list(key), rec["layers"],
+                               interrupt=self._store_interrupt)
+        except CheckpointInterrupted:
+            self.counters["prefix_store_interrupts"] += 1
+
+    def _store_interrupt(self) -> None:
+        if (self.chaos is not None
+                and self.chaos.fire("checkpoint_interrupt", self.ticks)):
+            raise CheckpointInterrupted(
+                f"prefix-store write killed at tick {self.ticks}")
+
+    def flush_prefixes(self) -> int:
+        """Persist every registered prefix block (and every host-tier
+        record) to the prefix store — the graceful-shutdown half of
+        cross-restart warm starts.  First-writer-wins: chains already in
+        the store are no-ops.  Returns the number of records written or
+        confirmed present."""
+        sdir = self.scfg.prefix_store_dir
+        if sdir is None:
+            raise RuntimeError(
+                "flush_prefixes() needs ServeConfig.prefix_store_dir")
+        from repro.checkpoint.store import save_prefix_record
+        n = 0
+        for key, bid in self.pool.registered_items():
+            layers = extract_block_rows(self.caches, [bid])
+            try:
+                save_prefix_record(sdir, list(key), layers,
+                                   interrupt=self._store_interrupt)
+                n += 1
+            except CheckpointInterrupted:
+                self.counters["prefix_store_interrupts"] += 1
+        if self._prefix_host is not None:
+            for key, rec in self._prefix_host.items():
+                try:
+                    save_prefix_record(sdir, list(key), rec["layers"],
+                                       interrupt=self._store_interrupt)
+                    n += 1
+                except CheckpointInterrupted:
+                    self.counters["prefix_store_interrupts"] += 1
+        return n
+
+    def memory_report(self) -> dict:
+        """Bytes resident at every tier of the KV memory hierarchy.
+        :meth:`kv_bytes_resident` stays device-only by contract; host and
+        disk tiers report separately so no token's bytes are ever
+        double-counted across tiers (the sanitizer cross-checks each
+        host tier's internal ledger)."""
+        rep = {
+            "device_bytes": int(self.kv_bytes_resident(peak=False)),
+            "device_bytes_peak": int(self.kv_bytes_resident(peak=True)),
+            "host_swap_bytes": (int(self._swap.bytes_used)
+                                if self._swap is not None else 0),
+            "host_swap_bytes_peak": (int(self._swap.peak_bytes)
+                                     if self._swap is not None else 0),
+            "host_prefix_bytes": (int(self._prefix_host.bytes_used)
+                                  if self._prefix_host is not None else 0),
+            "host_prefix_bytes_peak": (int(self._prefix_host.peak_bytes)
+                                       if self._prefix_host is not None
+                                       else 0),
+            "disk_prefix_bytes": 0,
+        }
+        if self.scfg.prefix_store_dir is not None:
+            from repro.checkpoint.store import prefix_store_bytes
+            rep["disk_prefix_bytes"] = int(
+                prefix_store_bytes(self.scfg.prefix_store_dir))
+        return rep
+
+    # ------------------------------------------------------------------
     # oversubscription: victim preemption + lossless requeue
     # ------------------------------------------------------------------
 
@@ -1951,6 +2209,13 @@ class PagedEngine(_EngineCommon):
                 dropped += max(0, min(L - j * self._page, self._page))
             else:
                 shared.append(bid)
+        # Swap-to-host: copy the victim's exclusive blocks to a host
+        # record BEFORE they free (and before the sanitizer poisons
+        # them), so resume can splice instead of recompute.  Victims
+        # still mid-first-prefill (nothing generated) resume as fresh
+        # admissions and need no record.
+        if self._swap is not None and req.generated and exclusive:
+            self._swap_out(slot, exclusive, L, req)
         self.pool.preempt(exclusive)
         for bid in shared:
             self.pool.decref(bid)

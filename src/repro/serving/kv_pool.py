@@ -37,6 +37,14 @@ Design (vLLM-style, sized for this repro):
   cache, resurrectable), so a requeued victim resumes the shared prefix
   for free and recomputes only the unshared tail.  The request lifecycle
   this module backs is documented in ``docs/serving.md``.
+* **Host tiers.**  :class:`SwapPool` is the budgeted host-RAM rung of the
+  memory hierarchy below the device pool (``docs/serving.md`` "Memory
+  hierarchy"): opaque byte-accounted records keyed by request id
+  (swap-to-host preemption) or prefix chain key (the warm prefix tier
+  above the disk store).  ``evict_cb`` on :meth:`KVBlockPool.alloc`'s
+  LRU eviction is the spill trigger — it fires while the evicted block's
+  device content is still intact, so the engine can copy it down a tier
+  before the new owner overwrites it.
 """
 
 from __future__ import annotations
@@ -48,7 +56,7 @@ class KVBlockPool:
     """Host-side block allocator for the paged serving KV cache."""
 
     def __init__(self, pool_blocks: int, page_size: int,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True, evict_cb=None):
         if pool_blocks < 2:
             raise ValueError("pool_blocks must be >= 2 (block 0 is the "
                              f"reserved null block), got {pool_blocks}")
@@ -57,6 +65,11 @@ class KVBlockPool:
         self.pool_blocks = pool_blocks
         self.page_size = page_size
         self.prefix_sharing = prefix_sharing
+        # Fired as evict_cb(key, bid) when alloc() steals a parked
+        # registered block — BEFORE the new owner can write it, so the
+        # caller may still extract the block's device content (the prefix
+        # spill path).  Must not call back into the pool.
+        self.evict_cb = evict_cb
         self._free: collections.deque[int] = collections.deque(
             range(1, pool_blocks))
         self._ref: dict[int, int] = {}            # live block -> refcount
@@ -153,6 +166,11 @@ class KVBlockPool:
             key, bid = self._cached.popitem(last=False)   # evict LRU
             del self._registry[key]
             del self._key_of[bid]
+            if self.evict_cb is not None:
+                # Device content of `bid` is still intact here (the new
+                # owner has not written yet; sanitizer poisoning also
+                # runs after this returns) — last chance to spill it.
+                self.evict_cb(key, bid)
         else:
             raise RuntimeError("KV block pool exhausted")
         if reserved:
@@ -286,3 +304,110 @@ class KVBlockPool:
             self._ref[bid] = 1
             self._track_peak()
         return bid
+
+    def registered_items(self) -> list[tuple[tuple, int]]:
+        """All published prefix blocks as ``(chain key, bid)`` pairs in
+        deterministic (sorted-key) order — live and parked alike.  Every
+        registered block is a fully-written prompt block that is never
+        rewritten, so its device content is always safe to copy down a
+        tier (``PagedEngine.flush_prefixes``)."""
+        return sorted(self._registry.items())
+
+
+class SwapPool:
+    """Budgeted host-RAM tier of opaque swap/spill records.
+
+    Pure bookkeeping, like the allocator above (no jax/numpy — the
+    ``repo-allocator-device-ops`` lint applies): records are opaque to
+    the pool and byte-sized by the caller, so device arrays, numpy trees
+    and pickled prefix payloads all fit through the same accounting.
+    Insertion order doubles as LRU order (:meth:`get` touches).
+
+    Two policies, selected by ``evict_cb``:
+
+    * ``evict_cb=None`` — a :meth:`put` that does not fit is **refused**
+      (returns False) and the caller falls back a tier (swap-to-host
+      preemption: the victim recomputes on resume, exactly the pre-swap
+      behavior).
+    * ``evict_cb=f`` — a put that does not fit first evicts
+      least-recently-used records, handing each to ``f(key, record,
+      nbytes)`` (the warm prefix tier: cold records spill down to the
+      disk store instead of vanishing).
+    """
+
+    def __init__(self, budget_bytes: int = 0, evict_cb=None):
+        if budget_bytes < 0:
+            raise ValueError(f"budget_bytes must be >= 0, got {budget_bytes}")
+        self.budget_bytes = int(budget_bytes)
+        self.evict_cb = evict_cb
+        self._records: collections.OrderedDict = collections.OrderedDict()
+        self._nbytes: dict = {}
+        self.bytes_used = 0
+        self.peak_bytes = 0
+        self.put_count = 0
+        self.evict_count = 0
+        self.refused_count = 0
+
+    def __contains__(self, key) -> bool:
+        return key in self._records
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def keys(self) -> list:
+        return list(self._records)
+
+    def nbytes_of(self, key) -> int:
+        return self._nbytes.get(key, 0)
+
+    def put(self, key, record, nbytes: int) -> bool:
+        """Admit a record under the byte budget.  Replaces any existing
+        record under the same key.  Returns False (refused, nothing
+        stored) when the record cannot fit and there is no ``evict_cb``
+        to make room."""
+        nbytes = int(nbytes)
+        if nbytes < 0:
+            raise ValueError(f"record nbytes must be >= 0, got {nbytes}")
+        if key in self._records:
+            self.drop(key)
+        if nbytes > self.budget_bytes or (
+                self.evict_cb is None
+                and self.bytes_used + nbytes > self.budget_bytes):
+            self.refused_count += 1
+            return False
+        while self.bytes_used + nbytes > self.budget_bytes:
+            old_key, old_rec = self._records.popitem(last=False)  # LRU
+            old_n = self._nbytes.pop(old_key)
+            self.bytes_used -= old_n
+            self.evict_count += 1
+            self.evict_cb(old_key, old_rec, old_n)
+        self._records[key] = record
+        self._nbytes[key] = nbytes
+        self.bytes_used += nbytes
+        self.peak_bytes = max(self.peak_bytes, self.bytes_used)
+        self.put_count += 1
+        return True
+
+    def get(self, key):
+        """Peek a record (None on miss); a hit is an LRU touch."""
+        rec = self._records.get(key)
+        if rec is not None:
+            self._records.move_to_end(key)
+        return rec
+
+    def take(self, key):
+        """Remove and return a record (None on miss).  The swap path uses
+        this: a resume consumes its record exactly once."""
+        if key not in self._records:
+            return None
+        rec = self._records.pop(key)
+        self.bytes_used -= self._nbytes.pop(key)
+        return rec
+
+    def drop(self, key) -> None:
+        self.take(key)
+
+    def items(self) -> list:
+        """(key, record) pairs, LRU-oldest first — a point-in-time copy
+        (safe to mutate the pool while iterating it)."""
+        return list(self._records.items())

@@ -415,7 +415,8 @@ def test_cli_writes_json_report(tmp_path):
     assert report["ok"] is True
     assert set(report["rules"]) == set(ALL_RULES)
     assert len(ALL_RULES) >= 8
-    assert report["pool_scenarios"] == 6
+    # 6 KV-pool scenarios + 2 host-tier (SwapPool ledger) scenarios.
+    assert report["pool_scenarios"] == 8
 
 
 def test_cli_check_fails_on_findings(tmp_path):

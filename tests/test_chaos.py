@@ -12,6 +12,8 @@ import pytest
 from repro.checkpoint.store import (
     gc_staging,
     latest_step,
+    list_prefix_records,
+    load_prefix_record,
     load_snapshot,
     save_snapshot,
 )
@@ -477,6 +479,156 @@ def test_invalid_request_qos_rejected(model):
     with pytest.raises(ValueError, match="deadline_ticks"):
         eng.submit(Request(prompt=np.arange(4, dtype=np.int32),
                            max_new_tokens=2, deadline_ticks=0))
+
+
+# ---------------------------------------------------------------------------
+# KV memory hierarchy under chaos (docs/serving.md "Memory hierarchy")
+# ---------------------------------------------------------------------------
+
+# Oversubscribed pool shape from the swap sweep (test_swap.py): decode
+# outgrows the prompt-sized reservations, so a mid-decode claim preempts
+# a victim whose blocks the swap tier captures.
+_HIER = dict(max_len=64, max_slots=3, prefill_bucket=8, page_size=8,
+             pool_blocks=10, oversubscribe=True)
+
+
+def test_swap_fail_falls_back_to_recompute(model):
+    """A host-copy failure mid-swap-out must degrade the preemption to
+    the recompute path, not corrupt it: the victim resumes via chunked
+    prefill and the trace stays bit-identical to no-swap serving."""
+    cfg, params = model
+    trace = _reqs(cfg, (12, 9, 11), max_new=16)
+    ref = _copies(trace)
+    PagedEngine(cfg, params, ServeConfig(**_HIER)).generate(ref, seed=0)
+
+    scfg = ServeConfig(**_HIER, swap_host_bytes=1 << 22)
+    out, rep = serve_with_chaos(
+        lambda: PagedEngine(cfg, params, scfg), _copies(trace),
+        seed=0, plan=FaultPlan.scripted([("swap_fail", 0)]))
+    assert _tokens(out) == _tokens(ref)
+    assert rep["fired_by_kind"] == {"swap_fail": 1}
+    assert rep["engine_counters"]["swap_fallbacks"] >= 1
+    assert rep["engine_counters"]["swap_ins"] == 0
+
+
+def test_prefix_spill_interrupt_torn_write_invisible(model, tmp_path):
+    """An interrupted prefix-store spill must never publish a torn
+    record: the staging orphan is invisible to readers, single-writer GC
+    reclaims it, every promoted record still round-trips, and a restarted
+    engine warmed from the store serves bit-identical tokens."""
+    cfg, params = model
+    d = str(tmp_path)
+    base = dict(max_len=64, max_slots=2, prefill_bucket=8, page_size=8,
+                prefill_chunk=8)
+    # Pool snug enough that later admissions LRU-steal parked registered
+    # blocks, spilling them to disk (same shape as test_swap.py).
+    eng = PagedEngine(cfg, params, ServeConfig(
+        **base, pool_blocks=8, prefix_store_dir=d))
+    eng.chaos = FaultInjector(
+        FaultPlan.scripted([("checkpoint_interrupt", 0)]))
+    eng.generate(_reqs(cfg, (9, 11, 10, 9, 11), max_new=16, seed=8,
+                       prefix_len=16), seed=0)
+    assert eng.counters["prefix_spills"] >= 2
+    assert eng.counters["prefix_store_interrupts"] == 1
+
+    # The torn write left a staging orphan but no readable record ...
+    orphans = [n for n in tmp_path.iterdir() if ".tmp" in n.name]
+    assert len(orphans) == 1
+    chains = list_prefix_records(d)
+    assert len(chains) >= 1
+    for chain in chains:                 # every promoted record is whole
+        assert load_prefix_record(d, chain) is not None
+    # ... and the single-writer reclaim sweeps it.
+    assert len(gc_staging(d, grace=0.0)) == 1
+    assert [n for n in tmp_path.iterdir() if ".tmp" in n.name] == []
+
+    # Graceful shutdown persists the still-parked registry (the hot
+    # system-prefix blocks were never LRU-stolen, so only the flush
+    # writes them); then a restarted engine warms losslessly.
+    eng.flush_prefixes()
+    cold_eng = PagedEngine(cfg, params, ServeConfig(**base))
+    cold = _reqs(cfg, (9, 11), max_new=8, seed=8, prefix_len=16)
+    cold_eng.generate(cold, seed=0)
+    warm_eng = PagedEngine(cfg, params, ServeConfig(
+        **base, prefix_store_dir=d))
+    warm = _reqs(cfg, (9, 11), max_new=8, seed=8, prefix_len=16)
+    warm_eng.generate(warm, seed=0)
+    assert warm_eng.counters["prefix_store_hits"] >= 1
+    assert _tokens(warm) == _tokens(cold)
+
+
+def test_crash_restore_every_tick_swapping_trace(model, tmp_path):
+    """Kill + restore at EVERY tick of a trace that swaps: host swap
+    records die with the host (the JSON snapshot never carries KV), so a
+    restored victim resumes via recompute — and no matter where the kill
+    lands (before swap-out, while the record is live, after swap-in) the
+    served tokens never move."""
+    cfg, params = model
+    scfg = ServeConfig(**_HIER, swap_host_bytes=1 << 22, snapshot_every=1)
+    trace = _reqs(cfg, (12, 9, 11), max_new=16)
+
+    ref = _copies(trace)
+    ref_eng = PagedEngine(cfg, params, scfg)
+    ref_eng.generate(ref, seed=0)
+    assert ref_eng.counters["swap_outs"] >= 1
+    assert ref_eng.counters["swap_ins"] >= 1
+    n_ticks = ref_eng.ticks
+
+    for k in range(n_ticks):
+        out, rep = serve_with_chaos(
+            lambda: PagedEngine(cfg, params, scfg), _copies(trace),
+            seed=0, plan=FaultPlan.scripted([("crash", k)]),
+            snapshot_dir=str(tmp_path / f"k{k}"))
+        assert rep["crashes"] == 1 and rep["restores"] == 1, k
+        assert _tokens(out) == _tokens(ref), \
+            f"kill at tick {k} changed the served tokens"
+
+
+def test_cross_restart_prefix_warm_start_zero_prefill(model, tmp_path):
+    """Cross-restart warm start: an engine flushes its prefix registry
+    on shutdown; a NEW engine process pointed at the same store serves a
+    resumed, fully block-aligned request with ZERO prefill chunks, and
+    its continuation matches recompute bit for bit."""
+    cfg, params = model
+    d = str(tmp_path)
+    base = dict(max_len=64, max_slots=2, prefill_bucket=8, page_size=8,
+                prefill_chunk=8)
+    sys_prompt = np.random.default_rng(42).integers(
+        0, cfg.vocab, 16, dtype=np.int32)
+
+    def tails(seed=3):
+        rng = np.random.default_rng(seed)
+        return [Request(prompt=np.concatenate(
+                            [sys_prompt,
+                             rng.integers(0, cfg.vocab, L, dtype=np.int32)]),
+                        max_new_tokens=8)
+                for L in (6, 9)]
+
+    first = PagedEngine(cfg, params, ServeConfig(**base,
+                                                 prefix_store_dir=d))
+    first.generate(tails(), seed=0)
+    assert first.flush_prefixes() >= 2       # 16-token prefix = 2 blocks
+    del first                                # "host restart"
+
+    def resumed():
+        r = Request(prompt=sys_prompt[:15].copy(), max_new_tokens=4)
+        # resume ctx = prompt + generated[:-1] = 16 tokens = 2 stored
+        # blocks, so re-materialization needs no prefill at all
+        r.generated = [int(sys_prompt[15]), 42]
+        return r
+
+    ref_eng = PagedEngine(cfg, params, ServeConfig(**base))
+    ref = resumed()
+    ref_eng.generate([ref], seed=0)
+    assert ref_eng.counters["prefill_chunks"] > 0
+
+    warm_eng = PagedEngine(cfg, params, ServeConfig(**base,
+                                                    prefix_store_dir=d))
+    got = resumed()
+    warm_eng.generate([got], seed=0)
+    assert warm_eng.counters["prefill_chunks"] == 0
+    assert warm_eng.counters["prefix_store_hits"] >= 1
+    assert got.generated == ref.generated
 
 
 def test_chaos_with_deadlines_is_deterministic(model, tmp_path):

@@ -1,10 +1,11 @@
 """Unit tests for the paged KV-cache block allocator (host-side half of
 the paged serving cache): free-list lifecycle, refcounted sharing, the
-prefix registry with LRU resurrection, and reservation accounting."""
+prefix registry with LRU resurrection, reservation accounting, and the
+host-side swap/spill tier (``SwapPool``)."""
 
 import pytest
 
-from repro.serving.kv_pool import KVBlockPool
+from repro.serving.kv_pool import KVBlockPool, SwapPool
 
 
 def test_null_block_reserved():
@@ -276,6 +277,94 @@ def test_saturation_counts_live_and_reserved():
     pool.register((1,), c)
     pool.decref(c)
     assert pool.saturation() == 0.0
+
+
+def test_alloc_evict_cb_fires_before_steal():
+    """LRU-stealing a parked registered block fires ``evict_cb(key, bid)``
+    exactly once, before the new owner exists — the downstream spill
+    hook's only chance to copy the device content out."""
+    fired = []
+    pool = KVBlockPool(3, 8, evict_cb=lambda k, b: fired.append((k, b)))
+    a, b = pool.alloc(), pool.alloc()
+    pool.register(("a",), a)
+    pool.register(("b",), b)
+    pool.decref(a)
+    pool.decref(b)
+    c = pool.alloc()                         # free list empty: steals a
+    assert c == a and fired == [(("a",), a)]
+    # a plain free-list alloc never fires the hook
+    pool.lookup(("b",))                      # resurrect b (refcount 1)
+    pool.decref(b)
+    pool.decref(c)
+    d = pool.alloc()                         # free list holds c: no steal
+    assert d == c and len(fired) == 1
+
+
+def test_registered_items_enumerates_the_registry():
+    pool = KVBlockPool(4, 8)
+    assert pool.registered_items() == []
+    a, b = pool.alloc(), pool.alloc()
+    pool.register((5, 6), b)
+    pool.register((1, 2), a)
+    assert pool.registered_items() == [((1, 2), a), ((5, 6), b)]  # sorted
+    pool.decref(a)                           # parked blocks still listed
+    assert pool.registered_items() == [((1, 2), a), ((5, 6), b)]
+
+
+def test_swap_pool_put_get_take_lru_order():
+    sp = SwapPool(budget_bytes=100)
+    assert sp.put("x", {"v": 1}, 40)
+    assert sp.put("y", {"v": 2}, 40)
+    assert sp.bytes_used == 80 and sp.put_count == 2
+    assert sp.get("x") == {"v": 1}           # peek + LRU touch
+    assert [k for k, _ in sp.items()] == ["y", "x"]   # oldest first
+    assert sp.take("y") == {"v": 2}          # pop
+    assert sp.bytes_used == 40
+    assert sp.take("y") is None and sp.get("nope") is None
+    sp.drop("x")
+    assert sp.bytes_used == 0 and sp.peak_bytes == 80
+
+
+def test_swap_pool_replace_same_key_reaccounts():
+    sp = SwapPool(budget_bytes=100)
+    assert sp.put("k", {"v": 1}, 60)
+    assert sp.put("k", {"v": 2}, 30)         # replace, not additive
+    assert sp.bytes_used == 30
+    assert sp.get("k") == {"v": 2}
+
+
+def test_swap_pool_refuses_over_budget_without_evict_cb():
+    """Policy 1 (engine swap tier): a put that does not fit is refused —
+    the caller falls back to recompute; nothing is half-stored."""
+    sp = SwapPool(budget_bytes=100)
+    assert sp.put("a", {}, 70)
+    assert not sp.put("b", {}, 50)           # would exceed budget
+    assert not sp.put("huge", {}, 101)       # larger than the whole budget
+    assert sp.refused_count == 2
+    assert sp.bytes_used == 70 and sp.get("a") == {}
+    assert sp.get("b") is None
+
+
+def test_swap_pool_evicts_lru_through_cb():
+    """Policy 2 (host prefix tier): an over-budget put evicts
+    LRU-oldest records through ``evict_cb(key, record, nbytes)`` — the
+    cascade that spills host-tier prefixes on to disk."""
+    spilled = []
+    sp = SwapPool(budget_bytes=100,
+                  evict_cb=lambda k, r, n: spilled.append((k, r, n)))
+    sp.put("a", {"v": 1}, 40)
+    sp.put("b", {"v": 2}, 40)
+    assert sp.put("c", {"v": 3}, 40)         # evicts "a"
+    assert spilled == [("a", {"v": 1}, 40)]
+    assert sp.evict_count == 1 and sp.bytes_used == 80
+    sp.get("b")                              # touch: "c" becomes LRU-oldest
+    assert sp.put("d", {"v": 4}, 80)         # evicts "c" then "b"
+    assert [k for k, _, _ in spilled] == ["a", "c", "b"]
+    assert sp.bytes_used == 80
+    # a record larger than the whole budget still refuses (nothing to
+    # evict could ever make it fit)
+    assert not sp.put("huge", {}, 101)
+    assert sp.refused_count == 1
 
 
 def test_snapshot_is_plain_json_and_faithful():

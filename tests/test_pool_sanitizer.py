@@ -16,11 +16,13 @@ from repro.analysis.pool_sanitizer import (
     POISON_POS,
     PoolInvariantError,
     SanitizedKVBlockPool,
+    SanitizedSwapPool,
     make_kv_pool,
+    make_swap_pool,
     run_pool_selfcheck,
     sanitize_enabled,
 )
-from repro.serving.kv_pool import KVBlockPool
+from repro.serving.kv_pool import KVBlockPool, SwapPool
 
 
 def _pool(**kw):
@@ -44,6 +46,13 @@ def test_factory_sanitized_when_enabled(monkeypatch):
     assert sanitize_enabled()
     p = make_kv_pool(8, 16)
     assert isinstance(p, SanitizedKVBlockPool)
+
+
+def test_swap_factory_gated_like_kv_pool(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert type(make_swap_pool(100)) is SwapPool
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert isinstance(make_swap_pool(100), SanitizedSwapPool)
 
 
 # ---------------------------------------------------------------------------
@@ -152,6 +161,56 @@ def test_error_carries_oplog():
 
 
 # ---------------------------------------------------------------------------
+# host-tier (SwapPool) conservation
+# ---------------------------------------------------------------------------
+
+
+def test_sanitized_swap_clean_ops_pass():
+    """Normal put/get/take/evict traffic never trips the shadow ledger."""
+    spilled = []
+    sp = SanitizedSwapPool(100,
+                           evict_cb=lambda k, r, n: spilled.append(k))
+    assert sp.put("a", {"v": 1}, 40)
+    assert sp.put("b", {"v": 2}, 40)
+    assert sp.get("a") == {"v": 1}
+    assert sp.put("c", {"v": 3}, 40)      # evicts LRU-oldest ("b")
+    assert spilled == ["b"]
+    assert sp.take("a") == {"v": 1}
+    assert sp.take("a") is None
+    assert sp.bytes_used == 40
+
+
+def test_seeded_tier_byte_leak():
+    sp = SanitizedSwapPool(100)
+    sp.put("a", {}, 40)
+    sp.bytes_used -= 1                    # tier under-counts its bytes
+    with pytest.raises(PoolInvariantError) as e:
+        sp.get("a")
+    assert e.value.rule == "pool-tier-conservation"
+
+
+def test_seeded_tier_record_loss():
+    """A record silently vanishing from the tier (the lost-swap bug that
+    turns into a silent re-prefill) trips the ledger at the next read."""
+    sp = SanitizedSwapPool(100)
+    sp.put("a", {}, 40)
+    n = sp._nbytes.pop("a")               # tier drops the record...
+    sp._records.pop("a")
+    sp.bytes_used -= n                    # ...with self-consistent bytes
+    with pytest.raises(PoolInvariantError) as e:
+        sp.get("a")                       # ledger still expects it
+    assert e.value.rule == "pool-tier-conservation"
+
+
+def test_refused_put_leaves_ledger_clean():
+    sp = SanitizedSwapPool(50)
+    assert not sp.put("big", {}, 60)
+    assert sp.refused_count == 1
+    assert sp.put("ok", {}, 40)           # tier still fully serviceable
+    assert sp.take("ok") == {}
+
+
+# ---------------------------------------------------------------------------
 # poison mode
 # ---------------------------------------------------------------------------
 
@@ -222,7 +281,7 @@ def test_poisoned_read_is_loud():
 def test_selfcheck_clean():
     findings, meta = run_pool_selfcheck()
     assert findings == []
-    assert meta["scenarios"] == 6
+    assert meta["scenarios"] == 8
 
 
 @pytest.fixture(scope="module")
@@ -307,3 +366,23 @@ def test_sanitized_engine_poisons_freed_pool_pages(model, monkeypatch):
     assert found_poisoned, \
         "no freed pool page carries the poison sentinel — freed-page " \
         "poisoning is dark"
+
+
+def test_sanitized_engine_wraps_host_tiers(model, monkeypatch):
+    """With REPRO_SANITIZE=1 the engine's swap and host-prefix tiers are
+    the audited SwapPool subclass, so every serve exercises the tier-
+    conservation ledger alongside the device-pool audits."""
+    cfg, params = model
+    from repro.serving import PagedEngine, ServeConfig
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    eng = PagedEngine(cfg, params, ServeConfig(
+        max_len=64, max_slots=3, prefill_bucket=8, page_size=8,
+        pool_blocks=10, oversubscribe=True, swap_host_bytes=1 << 20,
+        prefix_host_bytes=1 << 20))
+    assert isinstance(eng.pool, SanitizedKVBlockPool)
+    assert isinstance(eng._swap, SanitizedSwapPool)
+    assert isinstance(eng._prefix_host, SanitizedSwapPool)
+    reqs = _reqs(cfg, (12, 9, 11), max_new=16)
+    eng.generate(reqs, seed=0)            # swap traffic under audit
+    assert eng.counters["swap_ins"] >= 1
+    assert eng._swap.bytes_used == 0

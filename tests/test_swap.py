@@ -1,0 +1,415 @@
+"""Lossless KV memory hierarchy (docs/serving.md "Memory hierarchy").
+
+Swap-to-host preemption resume and persistent-prefix-store warm starts
+must be token-bit-identical to chunked-prefill recompute on every
+serving path: greedy, seeded sampling, shared prefixes, speculative
+decoding, and the fused BESF decode kernel plus its gather fallback.
+The sweep also pins the fallback ladder (budget refusal, non-contiguous
+victims) and the tier accounting contract (`kv_bytes_resident` stays
+device-only; host/disk tiers report separately)."""
+
+import os
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.configs import reduced_config
+from repro.core.besf import BitStopperConfig
+from repro.models import transformer as T
+from repro.serving import ContinuousBatchingEngine, PagedEngine, Request, \
+    ServeConfig
+from repro.serving.engine import _amax_leaves
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced_config("stablelm-1.6b")
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def bitstopper_model(model):
+    cfg, params = model
+    return cfg.replace(attn_impl="bitstopper_xla",
+                       bitstopper=BitStopperConfig(alpha=0.8)), params
+
+
+def _reqs(cfg, lens, max_new=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab, L, dtype=np.int32),
+                    max_new_tokens=max_new)
+            for L in lens]
+
+
+def _paged(cfg, params, **kw):
+    scfg = ServeConfig(max_len=kw.pop("max_len", 64),
+                       max_slots=kw.pop("max_slots", 2),
+                       prefill_bucket=kw.pop("prefill_bucket", 8),
+                       page_size=kw.pop("page_size", 8), **kw)
+    return PagedEngine(cfg, params, scfg)
+
+
+# Pool sized so the three requests' worst-case reservations cannot
+# coexist but their actual footprints can (same shape as the
+# oversubscription suite in test_serving.py) — decode outgrows the
+# reservations and a mid-decode claim must preempt a victim.
+_OS = dict(max_slots=3, page_size=8, pool_blocks=10, oversubscribe=True)
+_SWAP = dict(swap_host_bytes=1 << 22)
+
+
+def _swap_vs_recompute(cfg, params, make_reqs, seed=0, **kw):
+    """Serve the same oversubscribed trace twice — recompute-resume
+    (no swap tier) and swap-resume — and return both engines + outputs."""
+    rec_eng = _paged(cfg, params, **_OS, **kw)
+    rec = make_reqs()
+    rec_eng.generate(rec, seed=seed)
+    swp_eng = _paged(cfg, params, **_OS, **_SWAP, **kw)
+    swp = make_reqs()
+    swp_eng.generate(swp, seed=seed)
+    return rec_eng, [r.generated for r in rec], \
+        swp_eng, [r.generated for r in swp]
+
+
+# ---------------------------------------------------------------------------
+# swap-resume vs recompute-resume: bit-identity across serving paths
+# ---------------------------------------------------------------------------
+
+
+def test_swap_resume_bitident_greedy(model):
+    """Acceptance: swap-resume replays the exact trace recompute-resume
+    produces, while actually skipping the resume prefill work."""
+    cfg, params = model
+    rec_eng, rec, swp_eng, swp = _swap_vs_recompute(
+        cfg, params, lambda: _reqs(cfg, (12, 9, 11)))
+    assert rec_eng.counters["preemptions"] >= 1
+    assert swp_eng.counters["swap_outs"] >= 1
+    assert swp_eng.counters["swap_ins"] >= 1
+    assert swp_eng.counters["swap_in_tokens"] > 0
+    assert rec == swp
+    # the spliced tokens were NOT re-prefilled
+    assert (swp_eng.counters["prefill_chunks"]
+            < rec_eng.counters["prefill_chunks"])
+    # every swap record was consumed; device pool drains clean
+    assert swp_eng._swap.bytes_used == 0
+    assert swp_eng.pool.available() == swp_eng.pool.capacity
+
+
+def test_swap_resume_bitident_sampled(model):
+    """Seeded sampling: keys are (seed, rid, token index), so the swap
+    splice cannot shift the sampled trace either."""
+    cfg, params = model
+    _, rec, swp_eng, swp = _swap_vs_recompute(
+        cfg, params, lambda: _reqs(cfg, (12, 9, 11)),
+        seed=7, temperature=1.0)
+    assert swp_eng.counters["swap_ins"] >= 1
+    assert rec == swp
+
+
+def test_swap_resume_bitident_shared_prefix(model):
+    """Only exclusively-owned blocks swap: shared system-prompt blocks
+    stay registered on device, resume re-maps them for free, and the
+    swapped tail still splices bit-identically."""
+    cfg, params = model
+    sys_prompt = np.random.default_rng(42).integers(
+        0, cfg.vocab, 16, dtype=np.int32)
+
+    def reqs():
+        r = np.random.default_rng(5)
+        return [Request(prompt=np.concatenate(
+                            [sys_prompt,
+                             r.integers(0, cfg.vocab, L, dtype=np.int32)]),
+                        max_new_tokens=16)
+                for L in (3, 7, 5)]
+
+    kw = dict(max_slots=3, page_size=8, pool_blocks=11, oversubscribe=True)
+    rec_eng = _paged(cfg, params, **kw)
+    rec = reqs()
+    rec_eng.generate(rec, seed=0)
+    swp_eng = _paged(cfg, params, **kw, **_SWAP)
+    swp = reqs()
+    swp_eng.generate(swp, seed=0)
+    assert swp_eng.counters["preemptions"] >= 1
+    assert swp_eng.counters["prefix_hit_tokens"] > 0
+    assert [r.generated for r in rec] == [r.generated for r in swp]
+    assert swp_eng.pool.available() == swp_eng.pool.capacity
+
+
+def test_swap_resume_bitident_speculative(model):
+    """Speculative ngram decoding on top of swap-resume: accepted draft
+    tokens land in swapped-then-restored blocks without perturbation."""
+    cfg, params = model
+    _, rec, swp_eng, swp = _swap_vs_recompute(
+        cfg, params, lambda: _reqs(cfg, (12, 9, 11)),
+        speculative="ngram", draft_k=3)
+    assert swp_eng.counters["preemptions"] >= 1
+    assert rec == swp
+    assert swp_eng.pool.available() == swp_eng.pool.capacity
+
+
+def test_swap_resume_bitident_fused_and_fallback(bitstopper_model):
+    """The sparse path: packed ``kq`` plane rows travel with the swap
+    record, so the fused kernel decodes restored blocks bit-identically —
+    and the gather fallback agrees."""
+    cfgb, params = bitstopper_model
+    outs = []
+    for fused in (True, False):
+        _, rec, swp_eng, swp = _swap_vs_recompute(
+            cfgb, params, lambda: _reqs(cfgb, (12, 9, 11)),
+            fused_decode=fused)
+        assert swp_eng.counters["swap_ins"] >= 1
+        assert rec == swp
+        outs.append(swp)
+    assert outs[0] == outs[1]
+
+
+def test_swap_quant_grid_growth_repacks(bitstopper_model):
+    """Quant-grid case: the pool amax grows between swap-out and swap-in
+    (another request's prefill widens the grid while the victim is on the
+    host).  The stored ``kq`` planes are then stale — the engine must
+    drop them and repack the f32 rows under the current scales, and the
+    trace still matches recompute bit for bit."""
+    cfgb, params = bitstopper_model
+    # seed 6 chosen by sweep: its trace grows k_amax between the
+    # victim's swap-out and its resume (verified by the probe below).
+    make = lambda: _reqs(cfgb, (12, 9, 11), seed=6)  # noqa: E731
+    rec_eng = _paged(cfgb, params, **_OS)
+    rec = make()
+    rec_eng.generate(rec, seed=0)
+
+    swp_eng = _paged(cfgb, params, **_OS, **_SWAP)
+    grew, orig = [], swp_eng._swap_in
+
+    def probe(req, row, ctx, m, resumed):
+        record = swp_eng._swap.get(req.rid)
+        if record is not None:
+            cur = [np.asarray(a, np.float32)
+                   for a in _amax_leaves(swp_eng.caches)]
+            grew.append(not all(np.array_equal(c, r)
+                                for c, r in zip(cur, record["amax"])))
+        return orig(req, row, ctx, m, resumed)
+
+    swp_eng._swap_in = probe
+    swp = make()
+    swp_eng.generate(swp, seed=0)
+    assert swp_eng.counters["swap_ins"] >= 1
+    assert any(grew), "trace no longer exercises the stale-planes path"
+    assert [r.generated for r in rec] == [r.generated for r in swp]
+
+
+def test_swap_budget_refusal_falls_back_to_recompute(model):
+    """A swap pool too small for the victim's record refuses the put;
+    the preemption falls back to recompute and stays lossless."""
+    cfg, params = model
+    rec_eng = _paged(cfg, params, **_OS)
+    rec = _reqs(cfg, (12, 9, 11))
+    rec_eng.generate(rec, seed=0)
+    tiny = _paged(cfg, params, swap_host_bytes=64, **_OS)
+    swp = _reqs(cfg, (12, 9, 11))
+    tiny.generate(swp, seed=0)
+    assert tiny.counters["swap_fallbacks"] >= 1
+    assert tiny.counters["swap_ins"] == 0
+    assert tiny._swap.refused_count >= 1
+    assert [r.generated for r in rec] == [r.generated for r in swp]
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=40),
+       lens=st.sampled_from([(12, 9, 11), (13, 10, 9), (11, 12, 10)]),
+       temperature=st.sampled_from([0.0, 1.0]))
+def test_swap_resume_bitident_property(model, seed, lens, temperature):
+    """Property sweep: random prompts + either sampling mode — swap-
+    resume never diverges from recompute-resume."""
+    cfg, params = model
+    _, rec, swp_eng, swp = _swap_vs_recompute(
+        cfg, params, lambda: _reqs(cfg, lens, seed=seed),
+        seed=seed, temperature=temperature)
+    assert rec == swp
+    assert swp_eng.pool.available() == swp_eng.pool.capacity
+    assert swp_eng._swap.bytes_used == 0
+
+
+# ---------------------------------------------------------------------------
+# persistent prefix store: cross-restart warm starts
+# ---------------------------------------------------------------------------
+
+# prefill_chunk must not exceed the stored prefix for injection to cover
+# a chunk-group boundary (the engine refuses mid-chunk splices so the
+# host-side scale replay matches recompute's chunk boundaries exactly).
+_STORE = dict(max_len=64, max_slots=2, prefill_bucket=8, page_size=8,
+              prefill_chunk=8)
+
+
+def _store_reqs(cfg, sys_prompt, lens=(6, 9), max_new=8, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=np.concatenate(
+                        [sys_prompt,
+                         rng.integers(0, cfg.vocab, L, dtype=np.int32)]),
+                    max_new_tokens=max_new)
+            for L in lens]
+
+
+def _sys_prompt(cfg, n=16, seed=42):
+    return np.random.default_rng(seed).integers(
+        0, cfg.vocab, n, dtype=np.int32)
+
+
+def test_prefix_store_warm_start_bitident(model, tmp_path):
+    """A fresh engine pointed at a populated store serves the same
+    system prompt bit-identically to a cold engine, with fewer prefill
+    chunks (the stored blocks splice instead of recomputing)."""
+    cfg, params = model
+    sys_prompt = _sys_prompt(cfg)
+    first = _paged(cfg, params, prefix_store_dir=str(tmp_path), **_STORE)
+    first.generate(_store_reqs(cfg, sys_prompt), seed=0)
+    assert first.flush_prefixes() >= 2          # 16-token prefix = 2 blocks
+
+    cold_eng = _paged(cfg, params, **_STORE)
+    cold = _store_reqs(cfg, sys_prompt)
+    cold_eng.generate(cold, seed=0)
+    warm_eng = _paged(cfg, params, prefix_store_dir=str(tmp_path), **_STORE)
+    warm = _store_reqs(cfg, sys_prompt)
+    warm_eng.generate(warm, seed=0)
+
+    assert warm_eng.counters["prefix_store_hits"] >= 1
+    assert warm_eng.counters["prefix_store_tokens"] >= 16
+    assert [r.generated for r in cold] == [r.generated for r in warm]
+    assert (warm_eng.counters["prefill_chunks"]
+            < cold_eng.counters["prefill_chunks"])
+
+
+def test_prefix_store_warm_start_bitstopper(bitstopper_model, tmp_path):
+    """The sparse path across a restart: injected blocks replay the
+    quant-scale growth rule host-side with recompute's exact chunk
+    boundaries, so the warmed engine's grid — and every served token —
+    matches the cold run."""
+    cfgb, params = bitstopper_model
+    sys_prompt = _sys_prompt(cfgb)
+    first = _paged(cfgb, params, prefix_store_dir=str(tmp_path), **_STORE)
+    first.generate(_store_reqs(cfgb, sys_prompt), seed=0)
+    first.flush_prefixes()
+
+    cold_eng = _paged(cfgb, params, **_STORE)
+    cold = _store_reqs(cfgb, sys_prompt)
+    cold_eng.generate(cold, seed=0)
+    warm_eng = _paged(cfgb, params, prefix_store_dir=str(tmp_path), **_STORE)
+    warm = _store_reqs(cfgb, sys_prompt)
+    warm_eng.generate(warm, seed=0)
+    assert warm_eng.counters["prefix_store_hits"] >= 1
+    assert [r.generated for r in cold] == [r.generated for r in warm]
+    # and the warmed quant scales converged to the cold engine's
+    for a, b in zip(_amax_leaves(cold_eng.caches),
+                    _amax_leaves(warm_eng.caches)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_prefix_store_resumed_request_zero_prefill(model, tmp_path):
+    """A resumed request whose whole context is block-aligned and stored
+    re-materializes with ZERO prefill chunks — decode continues directly
+    on the spliced blocks, matching the recompute continuation."""
+    cfg, params = model
+    sys_prompt = _sys_prompt(cfg)
+    first = _paged(cfg, params, prefix_store_dir=str(tmp_path), **_STORE)
+    first.generate(_store_reqs(cfg, sys_prompt), seed=0)
+    first.flush_prefixes()
+
+    def resumed():
+        r = Request(prompt=sys_prompt[:15].copy(), max_new_tokens=4)
+        # resume ctx = prompt + generated[:-1] = 16 tokens = 2 full
+        # blocks, both of which sit in the store
+        r.generated = [int(sys_prompt[15]), 42]
+        return r
+
+    ref_eng = _paged(cfg, params, **_STORE)
+    ref = resumed()
+    ref_eng.generate([ref], seed=0)
+    warm_eng = _paged(cfg, params, prefix_store_dir=str(tmp_path), **_STORE)
+    got = resumed()
+    warm_eng.generate([got], seed=0)
+    assert warm_eng.counters["prefill_chunks"] == 0
+    assert ref_eng.counters["prefill_chunks"] > 0
+    assert ref.generated == got.generated
+
+
+def test_prefix_host_tier_spills_to_disk(model, tmp_path):
+    """The tier cascade: device LRU eviction lands registered blocks in
+    the host tier; host-tier pressure spills them on to disk; a warm
+    engine still recovers them losslessly from whichever tier holds
+    them."""
+    cfg, params = model
+    sys_prompt = _sys_prompt(cfg)
+    # Pool snug enough that parked registered blocks get LRU-stolen by
+    # later admissions; host tier fits roughly one block record, so the
+    # second eviction cascades a disk spill through the atomic store.
+    eng = _paged(cfg, params, prefix_store_dir=str(tmp_path),
+                 prefix_host_bytes=1 << 14, pool_blocks=8, **_STORE)
+    eng.generate(_store_reqs(cfg, sys_prompt, lens=(9, 11, 10, 9, 11),
+                             max_new=16, seed=8), seed=0)
+    assert eng.counters["prefix_spills"] >= 1
+    assert eng._prefix_host.evict_count >= 1
+    rep = eng.memory_report()
+    assert rep["disk_prefix_bytes"] > 0
+    assert rep["host_prefix_bytes"] <= 1 << 14
+    eng.flush_prefixes()
+
+    cold_eng = _paged(cfg, params, **_STORE)
+    cold = _store_reqs(cfg, sys_prompt)
+    cold_eng.generate(cold, seed=0)
+    warm_eng = _paged(cfg, params, prefix_store_dir=str(tmp_path), **_STORE)
+    warm = _store_reqs(cfg, sys_prompt)
+    warm_eng.generate(warm, seed=0)
+    assert warm_eng.counters["prefix_store_hits"] >= 1
+    assert [r.generated for r in cold] == [r.generated for r in warm]
+
+
+# ---------------------------------------------------------------------------
+# tier accounting + config surface
+# ---------------------------------------------------------------------------
+
+
+def test_memory_report_tiers_are_disjoint(model, tmp_path):
+    """`kv_bytes_resident` stays device-only by contract; swapped and
+    spilled bytes appear in their own fields and never leak into it."""
+    cfg, params = model
+    eng = _paged(cfg, params, prefix_store_dir=str(tmp_path), **_OS, **_SWAP)
+    plain = _paged(cfg, params, **_OS)
+    for e in (eng, plain):
+        reqs = _reqs(cfg, (12, 9, 11))
+        e.generate(reqs, seed=0)
+    assert eng.counters["swap_ins"] >= 1
+    rep = eng.memory_report()
+    assert rep["device_bytes"] == eng.kv_bytes_resident(peak=False)
+    assert rep["device_bytes_peak"] == eng.kv_bytes_resident(peak=True)
+    # hierarchy tiers never inflate the device-resident figure
+    assert (eng.kv_bytes_resident(peak=True)
+            == plain.kv_bytes_resident(peak=True))
+    # the victim's record really lived on the host at some point...
+    assert rep["host_swap_bytes_peak"] > 0
+    # ...and was fully consumed by swap-in
+    assert rep["host_swap_bytes"] == 0
+
+
+def test_hierarchy_config_validation(model, tmp_path):
+    cfg, params = model
+    with pytest.raises(ValueError):
+        ServeConfig(swap_host_bytes=-1)
+    with pytest.raises(ValueError):
+        ServeConfig(prefix_host_bytes=-1)
+    # swap captures preemption victims; only oversubscription preempts
+    with pytest.raises(ValueError):
+        ServeConfig(swap_host_bytes=1 << 20)
+    # prefix tiers extend the prefix registry; nothing to spill without it
+    with pytest.raises(ValueError):
+        ServeConfig(prefix_store_dir="/tmp/x", prefix_sharing=False)
+    with pytest.raises(ValueError):
+        ServeConfig(prefix_host_bytes=1 << 20, prefix_sharing=False)
+    # the contiguous engine has no paged pool to tier
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(cfg, params, ServeConfig(
+            max_len=64, prefix_store_dir=str(tmp_path)))
+    # flush_prefixes requires a configured store directory
+    with pytest.raises(RuntimeError):
+        _paged(cfg, params).flush_prefixes()
